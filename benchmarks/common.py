@@ -1,0 +1,115 @@
+"""Shared benchmark utilities: tiny-scale training loops + sampling timers.
+
+Benchmarks run on the CPU container at reduced scale (DESIGN.md §7): the
+*measured quantities* mirror the paper's tables — % of ARM calls vs the
+ancestral baseline, wall time per sampled batch — on procedurally generated
+stand-in data.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import forecasting as fc
+from repro.core import predictive_sampling as ps
+from repro.core import reparam
+from repro.models.pixelcnn import PixelCNN, PixelCNNConfig
+
+
+def train_pixelcnn(cfg: PixelCNNConfig, data, steps=300, lr=2e-3, seed=0,
+                   forecast_cfg=None, forecast_weight=0.01):
+    """Returns (params, fparams|None). Joint ARM + forecasting training
+    (paper: shared h, forecasting loss down-weighted 0.01)."""
+    key = jax.random.PRNGKey(seed)
+    params = PixelCNN.init(key, cfg)
+    fparams = (fc.PixelForecast.init(jax.random.fold_in(key, 1), forecast_cfg)
+               if forecast_cfg else None)
+    opt = optim.adamw(lr)
+    state = opt.init((params, fparams) if fparams is not None else params)
+    data = jnp.asarray(data)
+    n = data.shape[0]
+
+    @jax.jit
+    def step(p_all, state, batch):
+        def loss(p_all):
+            if forecast_cfg is not None:
+                p, fp = p_all
+            else:
+                p, fp = p_all, None
+            logits, h = PixelCNN.forward_int(p, batch, cfg)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(logp, batch[..., None], axis=-1)
+            nll = -jnp.mean(jnp.sum(ll, axis=(1, 2, 3)))
+            nll_bpd = nll / (cfg.d * np.log(2.0))
+            if fp is not None:
+                B = batch.shape[0]
+                arm_logits = logits.reshape(
+                    B, cfg.height * cfg.width, cfg.channels, cfg.categories)
+                out = fc.PixelForecast.apply(fp, h, forecast_cfg)
+                kl = fc.PixelForecast.kl_loss(out, arm_logits, forecast_cfg)
+                return nll_bpd + forecast_weight * kl
+            return nll_bpd
+
+        l, g = jax.value_and_grad(loss)(p_all)
+        g = optim.zero_frozen(g)
+        u, state = opt.update(g, state, p_all)
+        return optim.apply_updates(p_all, u), state, l
+
+    p_all = (params, fparams) if fparams is not None else params
+    rng = np.random.default_rng(seed)
+    for it in range(steps):
+        idx = rng.integers(0, n, size=min(32, n))
+        p_all, state, l = step(p_all, state, data[idx])
+    if forecast_cfg is not None:
+        return p_all
+    return p_all, None
+
+
+def sampling_run(arm_fn, method, cfg, batch, seeds, forecast=None):
+    """Returns (mean_calls_pct, std, mean_time_s, std) over seeds."""
+    d, K = cfg.d, cfg.categories
+    if method == "baseline":
+        fn = jax.jit(lambda eps: ps.ancestral_sample(arm_fn, eps))
+    elif method == "fpi":
+        fn = jax.jit(lambda eps: ps.predictive_sample(arm_fn,
+                                                      ps.fpi_forecast, eps))
+    elif method == "zeros":
+        fn = jax.jit(lambda eps: ps.predictive_sample(arm_fn,
+                                                      ps.zeros_forecast, eps))
+    elif method == "last":
+        fn = jax.jit(lambda eps: ps.predictive_sample(
+            arm_fn, ps.predict_last_forecast, eps))
+    elif method == "forecast":
+        fn = jax.jit(lambda eps: ps.predictive_sample(arm_fn, forecast, eps))
+    else:
+        raise ValueError(method)
+
+    calls, times = [], []
+    for seed in seeds:
+        eps = reparam.gumbel(jax.random.PRNGKey(seed), (batch, d, K))
+        x, stats = fn(eps)   # warm-up/compile on first seed
+        jax.block_until_ready(x)
+        t0 = time.time()
+        x, stats = fn(eps)
+        jax.block_until_ready(x)
+        times.append(time.time() - t0)
+        calls.append(100.0 * int(stats.arm_calls) / d)
+    return (float(np.mean(calls)), float(np.std(calls, ddof=1)),
+            float(np.mean(times)), float(np.std(times, ddof=1)))
+
+
+def check_exactness(arm_fn, cfg, batch=2, seed=123, forecast=None):
+    """Spot-verify the exactness guarantee for a trained model."""
+    eps = reparam.gumbel(jax.random.PRNGKey(seed),
+                         (batch, cfg.d, cfg.categories))
+    x_ref, _ = ps.ancestral_sample(arm_fn, eps)
+    x_fpi, _ = ps.predictive_sample(arm_fn, ps.fpi_forecast, eps)
+    assert (np.asarray(x_ref) == np.asarray(x_fpi)).all(), "exactness violated!"
+    if forecast is not None:
+        x_fc, _ = ps.predictive_sample(arm_fn, forecast, eps)
+        assert (np.asarray(x_ref) == np.asarray(x_fc)).all()
+    return True

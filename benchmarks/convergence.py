@@ -1,0 +1,53 @@
+"""Paper Figure 6 analogue: per-position convergence iteration of FPI.
+
+Prints an ASCII heat map of the iteration at which each pixel converged,
+averaged over channels and a batch — the paper's left-column-converges-first
+structure is visible in text."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import train_pixelcnn
+from repro.core import predictive_sampling as ps
+from repro.core import reparam
+from repro.data.synthetic import quantized_textures
+from repro.models.pixelcnn import PixelCNN, PixelCNNConfig
+
+GLYPHS = " .:-=+*#%@"
+
+
+def run(fast: bool = True):
+    steps = 250 if fast else 1000
+    cfg = PixelCNNConfig(height=8, width=8, channels=3, categories=16,
+                         filters=24, n_res=2, first_kernel=5)
+    data = quantized_textures(512, 8, 8, 3, 16, seed=5)
+    params, _ = train_pixelcnn(cfg, data, steps=steps)
+    arm_fn = PixelCNN.make_arm_fn(params, cfg)
+    eps = reparam.gumbel(jax.random.PRNGKey(0), (16, cfg.d, cfg.categories))
+    _, stats = jax.jit(lambda e: ps.predictive_sample(
+        arm_fn, ps.fpi_forecast, e))(eps)
+    conv = np.asarray(stats.converge_iter, np.float64)          # (B, d)
+    conv = conv.reshape(16, cfg.height, cfg.width, cfg.channels)
+    m = conv.mean(axis=(0, 3))                                   # (H, W)
+    lo, hi = m.min(), m.max()
+    lines = ["FPI convergence iteration map (baseline would be uniform "
+             f"raster 1..{cfg.d}); mean calls: "
+             f"{int(np.asarray(stats.arm_calls))}/{cfg.d}"]
+    for r in range(cfg.height):
+        row = "".join(GLYPHS[int((m[r, c] - lo) / (hi - lo + 1e-9)
+                                 * (len(GLYPHS) - 1))]
+                      for c in range(cfg.width))
+        lines.append(row)
+    # structural check: left column converges no later than right column
+    left, right = m[:, 0].mean(), m[:, -1].mean()
+    lines.append(f"left-col mean iter {left:.1f} <= right-col {right:.1f}: "
+                 f"{bool(left <= right)}")
+    return [{"table": "convergence", "report": "\n".join(lines),
+             "arm_calls": int(np.asarray(stats.arm_calls)), "d": cfg.d,
+             "left_mean": round(float(left), 2),
+             "right_mean": round(float(right), 2)}]
+
+
+if __name__ == "__main__":
+    print(run()[0]["report"])

@@ -1,0 +1,83 @@
+"""Benchmark aggregator: one function per paper table + the beyond-paper
+serving/roofline reports. Prints ``name,us_per_call,derived`` CSV.
+
+``us_per_call`` = wall microseconds per ARM call / verify round.
+``derived`` = the table's headline metric (ARM-call % vs ancestral, etc.).
+
+Full run: ``PYTHONPATH=src python -m benchmarks.run``
+(set REPRO_BENCH_FULL=1 for the longer-training variant).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def _csv_rows_table(rows):
+    out = []
+    for r in rows:
+        tbl = r.get("table", "?")
+        if tbl in ("table1", "table2"):
+            d = r["dataset"]
+            name = f"{tbl}/{d}/b{r['batch']}/{r['method']}"
+            # us per ARM call: time / (d * calls_pct/100)
+            out.append((name, f"{r['time_s']*1e6:.0f}",
+                        f"calls_pct={r['calls_pct']}+-{r['calls_std']}"))
+        elif tbl == "table3":
+            name = f"table3/{r['ablation'].replace(' ', '_')}"
+            t = r.get("time_s")
+            out.append((name, f"{(t or 0)*1e6:.0f}",
+                        f"calls_pct={r['calls_pct']}"))
+        elif tbl == "serving":
+            if "scheduler" in r:
+                out.append(("serving/continuous_batching", "0",
+                            f"calls_pct={r['calls_pct']}"))
+            else:
+                name = (f"serving/{r.get('stream','')}"
+                        f"/window{r['window']}")
+                us = r["time_s"] * 1e6 / max(1, r["verify_rounds"])
+                out.append((name, f"{us:.0f}",
+                            f"calls_pct={r['calls_pct']};"
+                            f"accept={r['mean_accept']}"))
+        elif tbl == "convergence":
+            out.append(("figure6/convergence", "0",
+                        f"arm_calls={r['arm_calls']}of{r['d']};"
+                        f"left{r['left_mean']}<=right{r['right_mean']}"))
+        elif tbl == "roofline":
+            bt = r["bottlenecks"]
+            out.append(("roofline/pairs", "0",
+                        f"ok={r['pairs_ok']}of{r['pairs_total']};"
+                        f"compute={bt['compute']};memory={bt['memory']};"
+                        f"collective={bt['collective']}"))
+    return out
+
+
+def main() -> None:
+    fast = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+    print("name,us_per_call,derived")
+    modules = [
+        ("table1", "benchmarks.table1_image"),
+        ("table2", "benchmarks.table2_latent"),
+        ("table3", "benchmarks.table3_ablations"),
+        ("figure6", "benchmarks.convergence"),
+        ("serving", "benchmarks.serving_bench"),
+        ("roofline", "benchmarks.roofline"),
+    ]
+    for name, modname in modules:
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run(fast=fast)
+            for row in _csv_rows_table(rows):
+                print(",".join(str(c) for c in row))
+            print(f"# {name} done in {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            print(f"{name}/FAILED,0,see_stderr")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 1 analogue: predictive sampling of image ARMs.
+
+Reduced-scale PixelCNNs on procedural stand-ins (binary strokes ~ binary
+MNIST; 4-bit / 8-bit textures ~ CIFAR/SVHN). Reports % ARM calls + wall time
+for: baseline ancestral / forecast-zeros / predict-last / fixed-point
+iteration / + learned forecasting, at batch sizes 1 and 16.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (check_exactness, sampling_run, train_pixelcnn)
+from repro.configs.paper import forecast_cfg
+from repro.core import forecasting as fc
+from repro.core import predictive_sampling as ps
+from repro.data.synthetic import binary_strokes, quantized_textures
+from repro.models.pixelcnn import PixelCNN, PixelCNNConfig
+
+SEEDS = list(range(5))
+
+
+def _rows_for(name, cfg, data, horizon, methods, steps, seeds=SEEDS):
+    fcfg = forecast_cfg(cfg, horizon)
+    (params, fparams) = train_pixelcnn(cfg, data, steps=steps,
+                                       forecast_cfg=fcfg)
+    arm_fn = PixelCNN.make_arm_fn(params, cfg)
+    module = fc.PixelForecast.module_fn(fparams, fcfg)
+    forecast = ps.make_learned_forecast(
+        module, window=horizon * cfg.channels, group=cfg.channels)
+    check_exactness(arm_fn, cfg, forecast=forecast)
+
+    rows = []
+    for batch in (1, 16):
+        for m in methods:
+            c, cs, t, ts = sampling_run(arm_fn, m, cfg, batch, seeds,
+                                        forecast=forecast)
+            rows.append({
+                "table": "table1", "dataset": name, "batch": batch,
+                "method": m, "calls_pct": round(c, 1),
+                "calls_std": round(cs, 2), "time_s": round(t, 4),
+                "time_std": round(ts, 4),
+            })
+    return rows
+
+
+def run(fast: bool = True):
+    steps = 250 if fast else 1500
+    rows = []
+    bin_cfg = PixelCNNConfig(height=12, width=12, channels=1, categories=2,
+                             filters=24, n_res=2, first_kernel=5)
+    rows += _rows_for("binary-strokes(1bit)", bin_cfg,
+                      binary_strokes(512, 12, 12, seed=0), horizon=6,
+                      methods=("baseline", "zeros", "last", "fpi",
+                               "forecast"), steps=steps)
+
+    tex4_cfg = PixelCNNConfig(height=8, width=8, channels=3, categories=16,
+                              filters=24, n_res=2, first_kernel=5)
+    rows += _rows_for("textures(4bit)", tex4_cfg,
+                      quantized_textures(512, 8, 8, 3, 16, seed=1),
+                      horizon=2, methods=("baseline", "fpi", "forecast"),
+                      steps=steps)
+
+    tex8_cfg = PixelCNNConfig(height=8, width=8, channels=3, categories=256,
+                              filters=24, n_res=2, first_kernel=5)
+    rows += _rows_for("textures(8bit)", tex8_cfg,
+                      quantized_textures(512, 8, 8, 3, 256, seed=2),
+                      horizon=2, methods=("baseline", "fpi", "forecast"),
+                      steps=steps)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,77 @@
+"""Quickstart: predictive sampling of a PixelCNN in ~2 minutes on CPU.
+
+Trains a tiny PixelCNN on procedural binary stroke images, then samples with
+(a) naive ancestral sampling, (b) ARM fixed-point iteration (paper Alg. 2),
+and shows the samples are bit-identical while FPI uses a fraction of the
+ARM calls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.core import predictive_sampling as ps
+from repro.core import reparam
+from repro.data.synthetic import binary_strokes
+from repro.models.pixelcnn import PixelCNN, PixelCNNConfig
+
+
+def main():
+    cfg = PixelCNNConfig(height=12, width=12, channels=1, categories=2,
+                         filters=24, n_res=2, first_kernel=5)
+    print(f"training a {cfg.filters}-filter PixelCNN on "
+          f"{cfg.height}x{cfg.width} binary strokes ...")
+    data = jax.numpy.asarray(binary_strokes(256, 12, 12, seed=0))
+    params = PixelCNN.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(2e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        l, g = jax.value_and_grad(
+            lambda p: PixelCNN.bpd(p, batch, cfg))(params)
+        g = optim.zero_frozen(g)
+        u, state = opt.update(g, state, params)
+        return optim.apply_updates(params, u), state, l
+
+    rng = np.random.default_rng(0)
+    for it in range(200):
+        params, state, l = step(params, state,
+                                data[rng.integers(0, 256, size=32)])
+        if (it + 1) % 50 == 0:
+            print(f"  step {it+1}: {float(l):.3f} bits/dim")
+
+    arm_fn = PixelCNN.make_arm_fn(params, cfg)
+    eps = reparam.gumbel(jax.random.PRNGKey(7), (4, cfg.d, cfg.categories))
+
+    t0 = time.time()
+    x_naive, st_naive = jax.jit(
+        lambda e: ps.ancestral_sample(arm_fn, e))(eps)
+    jax.block_until_ready(x_naive)
+    t_naive = time.time() - t0
+
+    t0 = time.time()
+    x_fpi, st_fpi = jax.jit(
+        lambda e: ps.predictive_sample(arm_fn, ps.fpi_forecast, e))(eps)
+    jax.block_until_ready(x_fpi)
+    t_fpi = time.time() - t0
+
+    exact = bool((np.asarray(x_naive) == np.asarray(x_fpi)).all())
+    print(f"\nancestral: {int(st_naive.arm_calls)} ARM calls "
+          f"({t_naive:.2f}s incl. compile)")
+    print(f"FPI:       {int(st_fpi.arm_calls)} ARM calls "
+          f"({t_fpi:.2f}s incl. compile)")
+    print(f"samples bit-identical: {exact}   "
+          f"(paper claim 3: exact samples from the true model)")
+
+    img = np.asarray(x_fpi)[0].reshape(12, 12)
+    print("\na sample:")
+    for row in img:
+        print("  " + "".join("#" if v else "." for v in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end serving driver: batched requests through the predictive-
+sampling engine with continuous batching (deliverable b, serving flavour).
+
+Trains a reduced qwen3-family LM on repetitive token streams, then serves a
+queue of ragged requests, reporting verify rounds vs the 1-call-per-token
+ancestral baseline. Any of the 10 assigned architectures can be substituted
+via --arch.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch qwen3-1.7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.data.synthetic import repetitive_tokens
+from repro.engine import ContinuousBatcher, PredictiveSampler, Request
+from repro.models.losses import lm_loss
+from repro.models.transformer import TransformerLM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--train-steps", type=int, default=250)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--window", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"training reduced {cfg.name} on repetitive streams ...")
+    data = repetitive_tokens(256, 64, cfg.vocab, seed=0)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(2e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (l, _), g = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
+        g = optim.zero_frozen(g)
+        u, state = opt.update(g, state, params)
+        return optim.apply_updates(params, u), state, l
+
+    rng = np.random.default_rng(0)
+    for it in range(args.train_steps):
+        params, state, l = step(
+            params, state, jnp.asarray(data[rng.integers(0, 256, 16)]))
+    print(f"  final loss {float(l):.3f}")
+
+    sampler = PredictiveSampler(cfg, params, window=args.window, max_len=128,
+                                eps_key=jax.random.PRNGKey(1))
+    batcher = ContinuousBatcher(sampler, batch=2)
+    for i in range(args.requests):
+        prompt = repetitive_tokens(1, int(rng.integers(4, 10)), cfg.vocab,
+                                   seed=100 + i)[0]
+        batcher.submit(Request(uid=i, prompt=prompt,
+                               new_tokens=int(rng.integers(16, 40))))
+
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    rounds = int(np.asarray(batcher.state.rounds))
+    total = sum(r.new_tokens for r in done)
+    print(f"\nserved {len(done)} requests / {total} new tokens")
+    print(f"verify rounds: {rounds} -> {100.0*rounds/total:.1f}% of the "
+          f"ancestral baseline ({dt:.1f}s on CPU)")
+    for r in done:
+        print(f"  req {r.uid}: +{r.new_tokens} tok, "
+              f"{r.calls_used} calls, tail={r.result[-8:]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end training driver across the assigned architecture zoo.
+
+Runs a short training job (reduced config) for any/all of the 10 assigned
+architectures through the real launcher path (optimizer, grad clip, forecast
+heads where configured, checkpointing).
+
+    PYTHONPATH=src python examples/train_multiarch.py --arch rwkv6-7b
+    PYTHONPATH=src python examples/train_multiarch.py --all --steps 20
+"""
+import argparse
+
+from repro.configs import ARCHS
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    targets = list(ARCHS) if args.all else [args.arch]
+    for arch in targets:
+        print(f"=== {arch} (reduced) ===")
+        train_main(["--arch", arch, "--reduced", "--steps", str(args.steps),
+                    "--batch", "4", "--seq", "64", "--log-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

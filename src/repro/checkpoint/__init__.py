@@ -1,0 +1,3 @@
+from repro.checkpoint.io import save_pytree, restore_pytree, latest_step
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step"]

@@ -1,0 +1,86 @@
+"""Checkpointing: path-keyed npz + json manifest (no orbax dependency).
+
+Arrays are gathered to host (works for sharded arrays via device_get) and
+stored under flattened path keys; restore rebuilds nested dict/list pytrees
+and re-places onto the caller's shardings if given.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}" if prefix else f"#{i}"))
+        if len(tree) == 0:
+            out[prefix + "/#empty"] = np.zeros(0)
+    else:
+        out[prefix] = tree
+    return out
+
+
+def save_pytree(tree, directory: str, step: int):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays = {}
+    manifest = {"step": step, "keys": [], "dtypes": {}}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        arrays[f"a{i}"] = np.asarray(v)
+        manifest["keys"].append(k)
+        manifest["dtypes"][k] = str(np.asarray(v).dtype)
+    np.savez(os.path.join(directory, f"ckpt_{step:08d}.npz"), **arrays)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.json", f))]
+    return max(steps) if steps else None
+
+
+def restore_pytree(directory: str, step: int, shardings=None):
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                            shardings)
+    return tree
+
+
+def _unflatten(flat):
+    root = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        if parts[-1] != "#empty":
+            node[parts[-1]] = val
+    return _listify(root)
+
+
+def _listify(node):
+    if not isinstance(node, dict):
+        return node
+    if node == {}:
+        return []
+    if all(k.startswith("#") for k in node):
+        idx = sorted((int(k[1:]) for k in node if k != "#empty"))
+        return [_listify(node[f"#{i}"]) for i in idx]
+    return {k: _listify(v) for k, v in node.items()}

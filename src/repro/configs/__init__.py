@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(arch_id)`` returns the exact assigned
+config; ``get_config(arch_id, reduced=True)`` returns the CPU-smoke variant
+(<=8 layers, d_model<=512, <=4 experts) of the same family."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, shape_applicable, InputShape
+from repro.models.transformer import ModelConfig
+
+ARCHS = (
+    "deepseek-v3-671b",
+    "qwen3-1.7b",
+    "musicgen-large",
+    "gemma-2b",
+    "gemma3-1b",
+    "rwkv6-7b",
+    "jamba-1.5-large-398b",
+    "internvl2-1b",
+    "mistral-large-123b",
+    "dbrx-132b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCHS}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def list_archs():
+    return list(ARCHS)
+
+
+__all__ = ["ARCHS", "get_config", "list_archs", "SHAPES",
+           "shape_applicable", "InputShape", "ModelConfig"]

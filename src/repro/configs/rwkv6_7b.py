@@ -1,0 +1,39 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892] — attention-free, data-dependent
+decay. Assigned: 32L d_model=4096 d_ff=14336 vocab=65536.
+
+long_500k decode is O(1)-state (the arch's raison d'etre); predictive
+sampling verifies windows via the parallel ("GPT-mode") scan from the state
+snapshot at the accept boundary (DESIGN.md §5)."""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        arch_type="ssm",
+        n_layers=32,
+        d_model=4096,
+        d_ff=14336,
+        vocab=65536,
+        layer_block=(("rwkv", "rwkv_cmix"),),
+        rwkv_head_dim=64,
+        tie_embeddings=False,
+        dtype="bfloat16",
+        source="arXiv:2404.05892",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b-reduced",
+        arch_type="ssm",
+        n_layers=2,
+        d_model=256,
+        d_ff=512,
+        vocab=512,
+        layer_block=(("rwkv", "rwkv_cmix"),),
+        rwkv_head_dim=32,
+        tie_embeddings=False,
+        dtype="float32",
+        source="arXiv:2404.05892",
+    )

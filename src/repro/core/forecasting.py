@@ -1,0 +1,171 @@
+"""Learned forecasting modules (paper §2.4, Appendix A.2).
+
+Two instantiations:
+
+* ``PixelForecast`` — the paper's module verbatim: one strictly-triangular
+  3x3 masked convolution over the shared ARM representation ``h``, followed
+  by a 1x1 convolution to ``T * C * K`` channels. Output at pixel ``p``
+  forecasts all channels of pixels ``p .. p+T-1``, conditioned only on
+  ``h`` from pixels strictly before ``p`` (hence on valid samples).
+
+* ``TokenForecast`` — the token-LM adaptation (and the modern MTP
+  correspondence, cf. DeepSeek-V3): per-offset heads on the decoder's
+  penultimate states, shifted so the forecast for position ``s+t`` reads
+  ``h[s-1]`` (valid prefix only).
+
+Both are trained with the paper's objective (Eq. 9):
+  ``KL[ stop_grad(P_ARM(x_{i+t} | x_{<i+t})) || P_F^(t)(x_{i+t} | x_{<i}) ]``
+down-weighted by 0.01 so the ARM likelihood is unaffected; ``h`` is shared
+and receives the (small) student-side gradient.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.core import Conv2D, Dense, MaskedConv2D
+
+
+# ---------------------------------------------------------------------------
+# Image-ARM forecasting module (paper Appendix A.2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PixelForecastConfig:
+    channels: int      # data channels C
+    categories: int    # K
+    horizon: int       # T, in pixels (paper: 20 MNIST, 1/5 otherwise)
+    filters: int       # forecasting filters (paper: 60 MNIST, 162 default)
+    in_filters: int    # width of the shared ARM representation h
+
+
+class PixelForecast:
+    @staticmethod
+    def init(key, cfg: PixelForecastConfig, dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        C, K, T = cfg.channels, cfg.categories, cfg.horizon
+        return {
+            "tri_conv": MaskedConv2D.init(
+                k1, cfg.in_filters, cfg.filters, (3, 3), mask_type="T",
+                dtype=dtype),
+            "out_conv": Conv2D.init(k2, cfg.filters, T * C * K, (1, 1),
+                                    dtype=dtype),
+        }
+
+    @staticmethod
+    def apply(params, h, cfg: PixelForecastConfig):
+        """h: (B, H, W, F) -> forecast logits (B, H*W, T*C, K).
+
+        Anchor = pixel (raster index); window = T*C flat positions starting at
+        the anchor's own first channel.
+        """
+        C, K, T = cfg.channels, cfg.categories, cfg.horizon
+        u = MaskedConv2D.apply(params["tri_conv"], h)
+        u = jax.nn.elu(u)
+        out = Conv2D.apply(params["out_conv"], u)  # (B, H, W, T*C*K)
+        B, H, W, _ = out.shape
+        return out.reshape(B, H * W, T * C, K)
+
+    @staticmethod
+    def module_fn(params, cfg: PixelForecastConfig):
+        """Per-sample ``module_fn(h) -> (n_anchors, window, K)`` for
+        ``predictive_sampling.make_learned_forecast`` (group = C)."""
+        def fn(h):
+            return PixelForecast.apply(params, h[None], cfg)[0]
+        return fn
+
+    @staticmethod
+    def kl_loss(fc_logits, arm_logits, cfg: PixelForecastConfig):
+        """Paper Eq. 9. fc_logits: (B, P, T*C, K) (P = H*W anchors);
+        arm_logits: (B, P, C, K) ARM outputs (will be stop-gradient'd).
+        Target for anchor p / offset (t, c) is the ARM distribution at pixel
+        p+t, channel c."""
+        C, K, T = cfg.channels, cfg.categories, cfg.horizon
+        B, P = arm_logits.shape[:2]
+        tgt = jax.lax.stop_gradient(arm_logits)  # (B, P, C, K)
+        # build shifted targets: tgt_shift[p, t] = tgt[p + t]
+        idx = jnp.arange(P)[:, None] + jnp.arange(T)[None, :]  # (P, T)
+        valid = idx < P
+        idx = jnp.minimum(idx, P - 1)
+        tgt_sh = tgt[:, idx]                       # (B, P, T, C, K)
+        fc = fc_logits.reshape(B, P, T, C, K)
+        logp_t = jax.nn.log_softmax(tgt_sh, axis=-1)
+        logp_f = jax.nn.log_softmax(fc, axis=-1)
+        kl = jnp.sum(jnp.exp(logp_t) * (logp_t - logp_f), axis=-1)  # (B,P,T,C)
+        w = jnp.broadcast_to(valid[None, :, :, None], kl.shape).astype(kl.dtype)
+        return jnp.sum(kl * w) / (jnp.sum(w) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Token-LM forecasting heads (TPU/LLM adaptation; MTP correspondence)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TokenForecastConfig:
+    d_model: int
+    vocab: int
+    horizon: int           # T offsets
+    hidden: int = 0        # 0 = linear heads; else bottleneck MLP width
+
+
+class TokenForecast:
+    @staticmethod
+    def init(key, cfg: TokenForecastConfig, dtype=jnp.float32):
+        keys = jax.random.split(key, 2 * cfg.horizon)
+        heads = []
+        for t in range(cfg.horizon):
+            if cfg.hidden:
+                heads.append({
+                    "proj": Dense.init(keys[2 * t], cfg.d_model, cfg.hidden,
+                                       dtype=dtype),
+                    "out": Dense.init(keys[2 * t + 1], cfg.hidden, cfg.vocab,
+                                      dtype=dtype),
+                })
+            else:
+                heads.append({
+                    "out": Dense.init(keys[2 * t + 1], cfg.d_model, cfg.vocab,
+                                      dtype=dtype),
+                })
+        return {"heads": heads}
+
+    @staticmethod
+    def apply(params, h, cfg: TokenForecastConfig):
+        """h: (B, S, D) decoder states (state at s encodes x_{<=s}).
+
+        Returns logits (B, S, T, V): position s, offset t forecasts token
+        x_{s+t} conditioned on h[s-1] (shifted -> valid prefix x_{<s})."""
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # h[s-1]
+        outs = []
+        for head in params["heads"]:
+            u = h_prev
+            if "proj" in head:
+                u = jax.nn.gelu(Dense.apply(head["proj"], u))
+            outs.append(Dense.apply(head["out"], u))
+        return jnp.stack(outs, axis=2)
+
+    @staticmethod
+    def module_fn(params, cfg: TokenForecastConfig):
+        """Per-sample module for ``make_learned_forecast`` (group = 1)."""
+        def fn(h):
+            return TokenForecast.apply(params, h[None], cfg)[0]
+        return fn
+
+    @staticmethod
+    def kl_loss(fc_logits, arm_logits):
+        """fc_logits (B, S, T, V); arm_logits (B, S, V) where arm_logits[s]
+        is the ARM distribution over x_s given x_{<s} (stop-gradient'd).
+        Target for (s, t) is arm_logits[s + t]."""
+        B, S, T, V = fc_logits.shape
+        tgt = jax.lax.stop_gradient(arm_logits)
+        idx = jnp.arange(S)[:, None] + jnp.arange(T)[None, :]
+        valid = idx < S
+        idx = jnp.minimum(idx, S - 1)
+        tgt_sh = tgt[:, idx]  # (B, S, T, V)
+        logp_t = jax.nn.log_softmax(tgt_sh, axis=-1)
+        logp_f = jax.nn.log_softmax(fc_logits, axis=-1)
+        kl = jnp.sum(jnp.exp(logp_t) * (logp_t - logp_f), axis=-1)
+        w = jnp.broadcast_to(valid[None], kl.shape).astype(kl.dtype)
+        return jnp.sum(kl * w) / (jnp.sum(w) + 1e-9)

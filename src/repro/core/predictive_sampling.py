@@ -1,0 +1,227 @@
+"""Predictive sampling (paper Algorithms 1 & 2), batched, in pure JAX.
+
+The ARM is abstracted as ``arm_fn(x) -> (logits, h)`` over *flattened* int
+sequences ``x: (B, d)`` with strict triangular dependence: ``logits[:, p]``
+(the distribution over x_p) may depend only on ``x[:, :p]``. ``h`` is the
+shared penultimate representation (paper §2.2 "Shared Representation"),
+forwarded to forecasting functions at zero extra cost.
+
+Forecasters implement
+    ``forecast_fn(x, h, prev_out, eps, i) -> (d,) int forecasts``
+(per-sample; the driver vmaps them). Positions ``< i`` are ignored.
+
+The driver ``predictive_sample`` is Algorithm 1 generalized; with
+``fpi_forecast`` it is exactly ARM fixed-point iteration (Algorithm 2 with
+early exit — see ``fixed_point_sample`` for the literal Alg-2 form and the
+equivalence test in tests/core/test_predictive_sampling.py).
+
+Exactness guarantee: with shared Gumbel noise ``eps``, every sampler here
+returns *bit-identical* output to naive ancestral sampling — the paper's
+central claim 3) "samples from the true model distribution".
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reparam import reparam_argmax
+
+
+class SampleStats(NamedTuple):
+    """Bookkeeping from a sampling run.
+
+    arm_calls:        scalar int — batch-level ARM forward passes (the paper's
+                      headline metric; slowest sample dominates, Table 1 note).
+    per_sample_calls: (B,) — ARM calls until each sample finished (what a
+                      per-sequence scheduler would pay; engine/ uses this).
+    converge_iter:    (B, d) — iteration at which each position became valid
+                      (paper Figure 6).
+    """
+    arm_calls: jnp.ndarray
+    per_sample_calls: jnp.ndarray
+    converge_iter: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Forecasting functions (paper §2.2, §2.3, §4.1 baselines)
+# ---------------------------------------------------------------------------
+
+def fpi_forecast(x, h, prev_out, eps, i):
+    """ARM fixed-point iteration (§2.3): reuse previous ARM outputs."""
+    return prev_out
+
+
+def zeros_forecast(x, h, prev_out, eps, i):
+    """Baseline 'Forecast zeros' (Table 1)."""
+    return jnp.zeros_like(prev_out)
+
+
+def predict_last_forecast(x, h, prev_out, eps, i):
+    """Baseline 'Predict last' (Table 1): repeat x_{i-1} for all future."""
+    last = jnp.where(i > 0, x[jnp.maximum(i - 1, 0)], 0)
+    return jnp.full_like(prev_out, last)
+
+
+def make_learned_forecast(module_fn, window: int, group: int = 1,
+                          use_reparam_noise: bool = True,
+                          takes_x: bool = False):
+    """Learned forecasting (§2.4).
+
+    ``module_fn(h) -> (n_anchors, window, K)`` logits, where anchor ``a``
+    (conditioned only on h from strictly-before anchor ``a``, i.e. triangular)
+    forecasts the ``window`` flat positions ``[a*group, a*group + window)``.
+    For token LMs ``group == 1`` (anchor == position); for channel-AR image
+    models ``group == C`` (anchor == pixel, window == T_pix * C).
+
+    Positions past the window fall back to the ARM's own outputs ("forecasts
+    for all remaining future timesteps are taken from the ARM output").
+    Reparametrized with the *same* eps as the verifier (Eq. 10);
+    ``use_reparam_noise=False`` is the Table-3 reparametrization ablation
+    (plain argmax) and ``takes_x=True`` (module over x instead of the shared
+    representation h) is the representation-sharing ablation.
+    """
+    def forecast(x, h, prev_out, eps, i):
+        d = prev_out.shape[0]
+        a = i // group
+        fc_logits = module_fn(x) if takes_x else module_fn(h)
+        logits_a = jax.lax.dynamic_index_in_dim(fc_logits, a, axis=0,
+                                                keepdims=False)  # (window, K)
+        pos = jnp.arange(d)
+        off = jnp.clip(pos - a * group, 0, window - 1)
+        noise = eps if use_reparam_noise else jnp.zeros_like(eps)
+        cand = reparam_argmax(logits_a[off], noise)  # (d,)
+        in_window = (pos >= i) & (pos < a * group + window)
+        return jnp.where(in_window, cand, prev_out)
+
+    return forecast
+
+
+# ---------------------------------------------------------------------------
+# Naive ancestral sampling (the baseline: d ARM calls)
+# ---------------------------------------------------------------------------
+
+def ancestral_sample(arm_fn: Callable, eps: jnp.ndarray) -> tuple[jnp.ndarray, SampleStats]:
+    """Sequential reference sampler: ``x_p = argmax(mu_p(x_{<p}) + eps_p)``.
+
+    eps: (B, d, K). Returns (x, stats) with arm_calls == d.
+    """
+    B, d, K = eps.shape
+
+    def body(p, x):
+        logits, _ = arm_fn(x)  # (B, d, K)
+        xp = reparam_argmax(logits[:, p], eps[:, p])  # (B,)
+        return x.at[:, p].set(xp)
+
+    x0 = jnp.zeros((B, d), jnp.int32)
+    x = jax.lax.fori_loop(0, d, body, x0)
+    stats = SampleStats(
+        arm_calls=jnp.asarray(d, jnp.int32),
+        per_sample_calls=jnp.full((B,), d, jnp.int32),
+        converge_iter=jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), (B, d)),
+    )
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# Predictive sampling (Algorithm 1, generalized over forecasters)
+# ---------------------------------------------------------------------------
+
+def predictive_sample(arm_fn: Callable, forecast_fn: Callable,
+                      eps: jnp.ndarray, max_iters: int | None = None
+                      ) -> tuple[jnp.ndarray, SampleStats]:
+    """Algorithm 1. eps: (B, d, K) Gumbel noise (the reparametrization).
+
+    Each loop iteration costs ONE batched ARM call. Guaranteed to terminate in
+    <= d iterations (strict triangular dependence: position i is always valid
+    after the call, so i advances by >= 1).
+    """
+    B, d, K = eps.shape
+    max_iters = d if max_iters is None else max_iters
+
+    def build_input(x, h, prev_out, i):
+        fc = jax.vmap(forecast_fn, in_axes=(0, 0, 0, 0, 0))(x, h, prev_out, eps, i)
+        pos = jnp.arange(d)[None, :]
+        return jnp.where(pos < i[:, None], x, fc)
+
+    def cond(state):
+        x, h, prev_out, i, n, per_calls, conv = state
+        return jnp.any(i < d) & (n < max_iters)
+
+    def body(state):
+        x, h, prev_out, i, n, per_calls, conv = state
+        xin = build_input(x, h, prev_out, i)
+        logits, h_new = arm_fn(xin)               # ONE batched ARM call
+        out = reparam_argmax(logits, eps)          # (B, d) deterministic g
+        pos = jnp.arange(d)[None, :]
+
+        # accept run: leading positions >= i where input forecast == output
+        match = (xin == out) | (pos < i[:, None])  # prefix < i always matches
+        # first mismatch index per row (d if none)
+        first_bad = jnp.argmin(match, axis=1)
+        first_bad = jnp.where(jnp.all(match, axis=1), d, first_bad)
+        # output at the first mismatch is ALSO valid (conditioning was valid)
+        new_i = jnp.minimum(jnp.maximum(first_bad + 1, i), d)
+        new_i = jnp.where(i >= d, i, new_i)        # finished rows stay put
+
+        x_new = jnp.where(pos < new_i[:, None], out, x)
+        active = i < d
+        n_new = n + 1
+        per_calls_new = per_calls + active.astype(jnp.int32)
+        newly = (pos >= i[:, None]) & (pos < new_i[:, None])
+        conv_new = jnp.where(newly, n_new, conv)
+        return (x_new, h_new, out, new_i, n_new, per_calls_new, conv_new)
+
+    # initial forecast is the zero vector (paper §2.2)
+    x0 = jnp.zeros((B, d), jnp.int32)
+    # h must exist before the first forecast; paper: initial forecast is zeros,
+    # so prev_out=0 and h=0 works for all forecasters at i=0. h may be any
+    # pytree with a leading batch axis (e.g. PixelCNN's (B, H, W, F) maps).
+    h_shape = jax.eval_shape(arm_fn, jax.ShapeDtypeStruct((B, d), jnp.int32))[1]
+    h0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), h_shape)
+    state = (x0, h0, jnp.zeros((B, d), jnp.int32), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((B, d), jnp.int32))
+    x, h, prev_out, i, n, per_calls, conv = jax.lax.while_loop(cond, body, state)
+    return x, SampleStats(n, per_calls, conv)
+
+
+# ---------------------------------------------------------------------------
+# ARM fixed-point iteration in its literal Algorithm-2 form
+# ---------------------------------------------------------------------------
+
+def fixed_point_sample(arm_fn: Callable, eps: jnp.ndarray,
+                       max_iters: int | None = None
+                       ) -> tuple[jnp.ndarray, SampleStats]:
+    """Algorithm 2: iterate ``x <- g(x, eps)`` until a fixed point.
+
+    Identical output to ``predictive_sample(..., fpi_forecast)``; call count
+    differs by at most one (Alg 2 pays one extra pass to *observe* the fixed
+    point, Alg 1 exits once the valid prefix covers d).
+    """
+    B, d, K = eps.shape
+    max_iters = (d + 1) if max_iters is None else max_iters
+
+    def g(x):
+        logits, _ = arm_fn(x)
+        return reparam_argmax(logits, eps)
+
+    def cond(state):
+        x, x_prev, n, conv, changed = state
+        return changed & (n < max_iters)
+
+    def body(state):
+        x, x_prev, n, conv, changed = state
+        x_new = g(x)
+        n_new = n + 1
+        conv_new = jnp.where(x_new != x, n_new, conv)
+        return (x_new, x, n_new, conv_new,
+                jnp.any(x_new != x))
+
+    x0 = jnp.zeros((B, d), jnp.int32)
+    state = (g(x0), x0, jnp.asarray(1, jnp.int32),
+             jnp.ones((B, d), jnp.int32), jnp.asarray(True))
+    x, _, n, conv, _ = jax.lax.while_loop(cond, body, state)
+    per = jnp.max(conv, axis=1) + 1  # each sample done one pass after last change
+    return x, SampleStats(n, jnp.minimum(per, n), conv)

@@ -1,0 +1,87 @@
+"""Reparametrization of discrete sampling (paper §2.2 + Appendix B).
+
+The paper's key insight: ancestral sampling ``x_i ~ Cat(softmax(mu_i))`` can be
+rewritten as the *deterministic* map ``x_i = argmax_c(mu_{i,c} + eps_{i,c})``
+with fixed Gumbel noise ``eps ~ G^{d x K}`` (Gumbel-max trick). Isolating the
+stochasticity this way is what lets forecasts be *exactly* right, which the
+ablation (paper Table 3) shows is the difference between 25.9% and 97.2% of
+ARM calls.
+
+Everything here is shift-invariant in ``mu``: raw (unnormalized) logits work
+identically to log-probabilities, so we never materialize a log-softmax
+(a deliberate TPU adaptation — argmax over vocab is LSE-shift invariant).
+
+Appendix B: to train forecasting modules on *data* samples (not slow model
+samples), we need noise from the posterior ``p(eps | x)``. Using the
+independence of a Gumbel max and its argmax (Maddison et al. 2014):
+  b           = max value ~ Gumbel(logsumexp(mu))      (argmax-independent)
+  eps_{i,x_i} = b - mu_{x_i}
+  eps_{i,c}   = TruncGumbel(mu_c | b) - mu_c           for c != x_i.
+(The paper's Eq. 14 writes "eps_{x_i} ~ G", which is exact only for
+normalized mu with a single effective category; the max-value law
+Gumbel(LSE) is the correct conditional — verified by the marginalization
+test: mixing x ~ softmax(mu) with eps ~ p(eps|x) must recover iid standard
+Gumbel noise.) The resulting noise satisfies
+``argmax_c(mu_c + eps_c) == x_i`` *exactly*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gumbel(key, shape, dtype=jnp.float32):
+    """Standard Gumbel(0, 1) noise."""
+    return jax.random.gumbel(key, shape, dtype=dtype)
+
+
+def reparam_argmax(logits, eps):
+    """Deterministic sample ``g(mu, eps) = argmax_c(mu_c + eps_c)``.
+
+    logits: (..., K) unnormalized log-probabilities.
+    eps:    (..., K) Gumbel noise.
+    Returns int32 categories of shape (...,).
+    """
+    return jnp.argmax(logits + eps, axis=-1).astype(jnp.int32)
+
+
+def categorical_sample(key, logits):
+    """Reference ancestral sample via explicit Gumbel-max (same as
+    jax.random.categorical, kept explicit so tests can share noise)."""
+    eps = gumbel(key, logits.shape, dtype=jnp.float32)
+    return reparam_argmax(logits.astype(jnp.float32), eps)
+
+
+def _trunc_gumbel_value(key, mu, b):
+    """Value ``v = mu + TruncGumbel-noise`` with ``v <= b`` and
+    ``v ~ Gumbel(mu)`` truncated at ``b``.
+
+    Uses v = -logaddexp(-b, -(mu + g0)), g0 ~ Gumbel(0).
+    """
+    g0 = gumbel(key, mu.shape, dtype=mu.dtype)
+    return -jnp.logaddexp(-b, -(mu + g0))
+
+
+def posterior_gumbel(key, logits, x):
+    """Sample ``eps ~ p(eps | x)`` for the Gumbel-max reparametrization.
+
+    logits: (..., K) float logits (any shift).
+    x:      (...,)  int categories (the observed/data sample).
+    Returns eps of shape (..., K) with ``reparam_argmax(logits, eps) == x``.
+    """
+    logits = logits.astype(jnp.float32)
+    K = logits.shape[-1]
+    k_max, k_rest = jax.random.split(key)
+    onehot = jax.nn.one_hot(x, K, dtype=bool)
+
+    mu_x = jnp.take_along_axis(logits, x[..., None], axis=-1)  # (..., 1)
+    lse = jax.nn.logsumexp(logits, axis=-1, keepdims=True)     # (..., 1)
+    g0 = gumbel(k_max, x.shape, dtype=jnp.float32)[..., None]  # (..., 1)
+    b = lse + g0            # max value ~ Gumbel(LSE), independent of argmax
+    eps_max = b - mu_x      # noise at the argmax location
+
+    v_rest = _trunc_gumbel_value(k_rest, logits, b)  # (..., K), values < b
+    eps_rest = v_rest - logits
+
+    eps = jnp.where(onehot, eps_max, eps_rest)
+    return eps

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (binary_strokes, quantized_textures,
+                                  synthetic_tokens, image_batches,
+                                  token_batches)
+
+__all__ = ["binary_strokes", "quantized_textures", "synthetic_tokens",
+           "image_batches", "token_batches"]

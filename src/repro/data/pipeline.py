@@ -1,0 +1,27 @@
+"""Host -> device data pipeline: shards host batches onto the active mesh."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import batch_sharding
+
+
+class ShardedTokenPipeline:
+    """Wraps a host batch generator; places batches with the mesh's batch
+    sharding (the multi-host generalization point: swap device_put for
+    make_array_from_process_local_data)."""
+
+    def __init__(self, host_iter, mesh=None):
+        self.host_iter = host_iter
+        self.sharding = batch_sharding(mesh) if mesh is not None else None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = np.asarray(next(self.host_iter))
+        if self.sharding is not None:
+            return jax.device_put(batch, self.sharding)
+        return jnp.asarray(batch)

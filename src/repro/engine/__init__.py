@@ -1,0 +1,6 @@
+from repro.engine.spec_decode import (PredictiveSampler, GenState,
+                                      make_eps_fn)
+from repro.engine.scheduler import Request, ContinuousBatcher
+
+__all__ = ["PredictiveSampler", "GenState", "make_eps_fn", "Request",
+           "ContinuousBatcher"]

@@ -1,0 +1,218 @@
+"""Token-domain predictive sampling with a KV cache — the paper's Algorithm 1
+as a serving step (windowed verify), DESIGN.md §3.
+
+Round layout (per sequence): accepted tokens ``x_0..x_{n-1}``; the verify
+window feeds ``[x_{n-1}, c_n, .., c_{n+W-2}]`` (W tokens; candidates c are
+forecasts). Output slot t is the reparametrized sample for position ``n+t``:
+``o_t = argmax(logits_t + eps_{n+t})``. Slot 0 is always valid (conditioned
+only on accepted tokens); each further slot is valid while the candidate it
+was conditioned on matched. Per round, ``a in [1, W]`` tokens are accepted —
+identical tokens to ancestral sampling (W=1), by the paper's exactness
+argument, just fewer model calls.
+
+Forecasts: FPI reuses the previous round's outputs past the accept point
+(paper §2.3 — zero extra compute); optional learned forecasting heads
+(TokenForecast / DeepSeek-MTP correspondence) fill the tail (paper §2.4).
+
+Reparametrization noise is *virtual*: ``eps[b, p] = Gumbel(fold_in(key, b, p))``
+is recomputed on demand (never materialized at (L, V) scale) — positions keep
+their noise across rounds, which is what makes forecasts exactly verifiable
+(paper's key insight; Table 3 ablation).
+
+Per-sequence accept lengths mean each sequence advances at its own rate —
+the batched-sampling scheduler the paper left to future work (§4.1 "We leave
+the implementation of a scheduling system to future work").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reparam import reparam_argmax
+from repro.models.transformer import TransformerLM
+
+
+def make_eps_fn(key, vocab: int):
+    """Deterministic per-(sequence, position) Gumbel noise function."""
+    def eps_fn(positions):
+        # positions: (B, W) absolute token positions
+        def one(b, row):
+            kb = jax.random.fold_in(key, b)
+            return jax.vmap(
+                lambda p: jax.random.gumbel(jax.random.fold_in(kb, p),
+                                            (vocab,)))(row)
+        B = positions.shape[0]
+        return jax.vmap(one)(jnp.arange(B), positions)
+    return eps_fn
+
+
+class GenState(NamedTuple):
+    tokens: jnp.ndarray      # (B, L_max) accepted tokens (prompt + generated)
+    n: jnp.ndarray           # (B,) accepted length per sequence
+    cand: jnp.ndarray        # (B, W) next verify window (slot0 = last token)
+    cache: dict
+    rounds: jnp.ndarray      # () total verify rounds (batch-level ARM calls)
+    per_seq_calls: jnp.ndarray  # (B,) rounds in which the sequence was active
+    accept_hist: jnp.ndarray    # (B,) total accepted tokens while active
+
+
+class PredictiveSampler:
+    """Batched predictive-sampling text generation for any TransformerLM."""
+
+    def __init__(self, cfg, params, window: int = 8, max_len: int = 256,
+                 eps_key=None, use_forecast_heads: bool = False,
+                 use_verify_kernel: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.W = window
+        self.max_len = max_len
+        self.eps_fn = make_eps_fn(
+            eps_key if eps_key is not None else jax.random.PRNGKey(0),
+            cfg.vocab)
+        self.use_forecast_heads = (use_forecast_heads
+                                   and "forecast" in params
+                                   and cfg.forecast_horizon > 0)
+        # TPU fast path: the fused vocab-tiled Gumbel-argmax Pallas kernel
+        # (kernels/spec_verify); interpret-mode on CPU, bit-identical.
+        self.use_verify_kernel = use_verify_kernel
+        self._round = jax.jit(self._round_impl)
+
+    # ------------------------------------------------------------------
+    def init_state(self, prompts, batch: int) -> GenState:
+        """prompts: (B, L_p) int (uniform prompt length for the state init;
+        ragged admission is handled by the ContinuousBatcher)."""
+        cfg, W = self.cfg, self.W
+        B, L_p = prompts.shape
+        assert L_p >= 1
+        cache = TransformerLM.init_cache(cfg, B, self.max_len + W,
+                                         dtype=cfg.param_dtype)
+        tokens = jnp.zeros((B, self.max_len), jnp.int32)
+        tokens = tokens.at[:, :L_p].set(prompts)
+
+        if L_p > 1:
+            # prefill the first L_p - 1 tokens (their KV/state enter the cache)
+            _, _, cache = TransformerLM.decode_window(
+                self.params, cfg, prompts[:, :-1], cache,
+                jnp.zeros((B,), jnp.int32))
+            cache = TransformerLM.select_states(
+                cfg, cache, jnp.full((B,), L_p - 1, jnp.int32))
+        n = jnp.full((B,), L_p, jnp.int32)
+        cand = jnp.zeros((B, W), jnp.int32)
+        cand = cand.at[:, 0].set(prompts[:, -1])
+        return GenState(tokens, n, cand, cache,
+                        jnp.zeros((), jnp.int32),
+                        jnp.zeros((B,), jnp.int32),
+                        jnp.zeros((B,), jnp.int32))
+
+    # ------------------------------------------------------------------
+    def _round_impl(self, state: GenState, target_len) -> GenState:
+        cfg, W = self.cfg, self.W
+        B = state.n.shape[0]
+        active = state.n < target_len
+
+        cache_len = state.n - 1
+        logits, h, new_cache = TransformerLM.decode_window(
+            self.params, cfg, state.cand, state.cache, cache_len)
+        out_pos = state.n[:, None] + jnp.arange(W)[None, :]   # sampled positions
+        eps = self.eps_fn(out_pos)
+        if self.use_verify_kernel:
+            from repro.kernels.spec_verify.ops import spec_verify
+            out = spec_verify(logits.astype(jnp.float32), eps)  # (B, W)
+        else:
+            out = reparam_argmax(logits.astype(jnp.float32), eps)
+
+        # accept length: slot t+1 valid while candidate c_{n+t} matched o_t
+        match = state.cand[:, 1:] == out[:, :-1]               # (B, W-1)
+        a = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        a = jnp.minimum(a, jnp.maximum(target_len - state.n, 1))
+        a = jnp.where(active, a, 0)
+
+        # write accepted tokens
+        pos = jnp.arange(self.max_len)[None, :]
+        newly = (pos >= state.n[:, None]) & (pos < (state.n + a)[:, None])
+        slot = jnp.clip(pos - state.n[:, None], 0, W - 1)
+        tokens = jnp.where(newly, jnp.take_along_axis(out, slot, axis=1),
+                           state.tokens)
+
+        n_new = state.n + a
+        # cache: adopt window writes; recurrent states at the accept point.
+        # Inactive rows must keep their old recurrent snapshot (a=0 -> the
+        # gather would fetch slot -1); clamp handles it because their cand
+        # window re-ran from the same snapshot: slot 0 state == snapshot
+        # after x_{n-1}... only true if cand[:,0] stayed x_{n-1} — it does.
+        sel = TransformerLM.select_states(cfg, new_cache,
+                                          jnp.maximum(a, 1))
+        cache = sel
+
+        # next window: slot0 = last accepted token; FPI forecasts = this
+        # round's outputs past the accept point (paper §2.3)
+        idx = (a - 1)[:, None] + jnp.arange(W)[None, :]        # (B, W)
+        fpi = jnp.take_along_axis(out, jnp.minimum(idx, W - 1), axis=1)
+        valid_fpi = idx <= (W - 1)
+        cand = jnp.where(valid_fpi, fpi, 0)
+
+        if self.use_forecast_heads:
+            from repro.core.forecasting import (TokenForecast,
+                                                TokenForecastConfig)
+            fcfg = TokenForecastConfig(cfg.d_model, cfg.vocab,
+                                       cfg.forecast_horizon,
+                                       cfg.forecast_hidden)
+            fc_logits = TokenForecast.apply(self.params["forecast"], h, fcfg)
+            # anchor slot a (uses h[a-1], the last fully-valid slot); offset
+            # j forecasts window slot a-1+j -> next-window slot j + ... we
+            # fill tail slots where FPI ran out (valid_fpi == False).
+            # anchor s=a reads h[a-1] (last fully-valid slot); its offset-t
+            # logits forecast window slot a+t... = position n_new-1+t, i.e.
+            # next-window slot s' uses offset t = s'.
+            anchor = jnp.minimum(a, W - 1)
+            fc_a = jnp.take_along_axis(
+                fc_logits, anchor[:, None, None, None], axis=1)[:, 0]  # (B,T,V)
+            T = cfg.forecast_horizon
+            s_idx = jnp.arange(W)
+            t_of_s = jnp.clip(s_idx, 0, T - 1)
+            eps_next = self.eps_fn(n_new[:, None] - 1 + s_idx[None, :])
+            fc_tok = reparam_argmax(
+                jnp.take_along_axis(
+                    fc_a, jnp.broadcast_to(t_of_s[None, :, None],
+                                           (B, W, 1)), axis=1),
+                eps_next)
+            use_fc = (~valid_fpi) & (s_idx[None, :] < T)
+            cand = jnp.where(use_fc, fc_tok, cand)
+
+        # slot 0 must be the last accepted token
+        last_tok = jnp.take_along_axis(tokens,
+                                       jnp.maximum(n_new - 1, 0)[:, None],
+                                       axis=1)[:, 0]
+        cand = cand.at[:, 0].set(last_tok)
+        cand = jnp.where(active[:, None], cand, state.cand)
+        n_new = jnp.where(active, n_new, state.n)
+        tokens = jnp.where(active[:, None], tokens, state.tokens)
+
+        return GenState(
+            tokens, n_new, cand, cache,
+            state.rounds + jnp.any(active).astype(jnp.int32),
+            state.per_seq_calls + active.astype(jnp.int32),
+            state.accept_hist + a,
+        )
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts, new_tokens: int):
+        """Generate ``new_tokens`` per sequence. Returns (tokens, stats)."""
+        B, L_p = prompts.shape
+        target = jnp.full((B,), L_p + new_tokens, jnp.int32)
+        assert L_p + new_tokens <= self.max_len
+        state = self.init_state(jnp.asarray(prompts, jnp.int32), B)
+        while bool(jnp.any(state.n < target)):
+            state = self._round(state, target)
+        stats = {
+            "rounds": int(state.rounds),
+            "per_seq_calls": jax.device_get(state.per_seq_calls),
+            "baseline_calls": new_tokens,
+            "mean_accept": float(jnp.mean(
+                state.accept_hist / jnp.maximum(state.per_seq_calls, 1))),
+        }
+        return state.tokens, stats

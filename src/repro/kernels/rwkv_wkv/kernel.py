@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence.
+
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+grid = (B*H, T/ct): time chunks stream sequentially per (batch, head) while
+the (hd, hd) state matrix persists in VMEM scratch — the TPU-native shape of
+the recurrence (the CUDA kernel the paper's successors use keeps state in
+registers per thread; on TPU the whole state tile lives in VMEM and the
+inner loop is a (1, hd) x (hd, hd) row-rank update, hd = 64 lanes).
+
+The sequential inner fori_loop is the honest dependency structure — chunking
+amortizes HBM traffic of r/k/v/w to one pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, ct: int):
+    jt = pl.program_id(1)
+
+    @pl.when(jt == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+
+    u = u_ref[0].astype(jnp.float32)                     # (hd,)
+
+    def step(t, _):
+        r_t = r_ref[0, t].astype(jnp.float32)            # (hd,)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        w_t = w_ref[0, t].astype(jnp.float32)
+        S = s_ref[...]                                   # (hd, hd)
+        kv = k_t[:, None] * v_t[None, :]
+        y = r_t @ (S + u[:, None] * kv)                  # (hd,)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        s_ref[...] = w_t[:, None] * S + kv
+        return ()
+
+    jax.lax.fori_loop(0, ct, step, ())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_wkv_kernel(r, k, v, w, u, chunk: int = 64, interpret: bool = True):
+    """r, k, v, w: (BH, T, hd); u: (BH, hd). Returns y: (BH, T, hd)."""
+    BH, T, hd = r.shape
+    ct = min(chunk, T)
+    Tp = -(-T // ct) * ct
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0))
+        r, k, v = (jnp.pad(a, pad) for a in (r, k, v))
+        w = jnp.pad(w, pad, constant_values=1.0)
+
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, ct=ct),
+        grid=(BH, Tp // ct),
+        in_specs=[
+            pl.BlockSpec((1, ct, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, ct, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, ct, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, ct, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, hd), lambda b, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ct, hd), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out[:, :T]

@@ -1,0 +1,26 @@
+"""Jit'd public WKV op: (B, T, H, hd) layout adapter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_wkv.kernel import rwkv_wkv_kernel
+from repro.kernels.rwkv_wkv.ref import rwkv_wkv_ref
+
+
+def rwkv_wkv(r, k, v, w, u, use_kernel: bool = True, chunk: int = 64,
+             interpret: bool | None = None):
+    """r, k, v, w: (B, T, H, hd); u: (H, hd). Returns y (B, T, H, hd)."""
+    B, T, H, hd = r.shape
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    rf, kf, vf, wf = map(flat, (r, k, v, w))
+    uf = jnp.tile(u, (B, 1))
+    if use_kernel:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        yf = rwkv_wkv_kernel(rf, kf, vf, wf, uf, chunk=chunk,
+                             interpret=interpret)
+    else:
+        yf = rwkv_wkv_ref(rf, kf, vf, wf, uf)
+    return yf.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the WKV recurrence (lax.scan form)."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv_wkv_ref(r, k, v, w, u):
+    """r, k, v, w: (BH, T, hd); u: (BH, hd) -> y (BH, T, hd)."""
+    BH, T, hd = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (BH, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (BH, hd, hd)
+        y = jnp.einsum("bk,bkv->bv", r_t, S + u[..., :, None] * kv)
+        return w_t[..., :, None] * S + kv, y
+
+    S0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,31 @@
+"""Jit'd public op: batched Gumbel-max verify.
+
+Dispatches to the Pallas kernel (interpret=True on CPU, compiled on TPU) or
+the jnp reference; shapes beyond 2D are flattened to rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spec_verify.kernel import spec_verify_kernel
+from repro.kernels.spec_verify.ref import spec_verify_ref
+
+
+def spec_verify(logits, eps, use_kernel: bool = True,
+                block_rows: int = 8, block_vocab: int = 1024,
+                interpret: bool | None = None):
+    """argmax(logits + eps) over the last axis; any leading shape."""
+    shape = logits.shape[:-1]
+    V = logits.shape[-1]
+    lg = logits.reshape(-1, V)
+    ep = eps.reshape(-1, V)
+    if not use_kernel:
+        out = spec_verify_ref(lg, ep)
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = spec_verify_kernel(lg, ep, block_rows=block_rows,
+                                 block_vocab=block_vocab,
+                                 interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the spec_verify kernel."""
+import jax.numpy as jnp
+
+
+def spec_verify_ref(logits, eps):
+    """argmax(logits + eps, axis=-1): (R, V) -> (R,) int32."""
+    return jnp.argmax(logits.astype(jnp.float32)
+                      + eps.astype(jnp.float32), axis=-1).astype(jnp.int32)

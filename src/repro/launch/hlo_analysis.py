@@ -1,0 +1,44 @@
+"""Post-SPMD HLO analysis helpers (no jax side effects on import)."""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO."""
+    totals = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            marker = f" {coll}("
+            if marker not in stripped:
+                continue
+            # result type(s) appear between '=' and the op name
+            lhs = stripped.split(marker)[0]
+            if "=" not in lhs:
+                continue
+            type_part = lhs.split("=", 1)[1]
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(type_part):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            totals[coll]["bytes"] += nbytes
+            totals[coll]["count"] += 1
+            break
+    return totals
+
+

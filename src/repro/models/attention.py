@@ -1,0 +1,311 @@
+"""Attention mixers: GQA/MQA (optional qk-norm, sliding window) and MLA.
+
+Two execution modes, shared weights:
+
+* ``full``   — whole-sequence causal attention (training / prefill).
+* ``window`` — W query tokens against a KV cache with per-sequence lengths
+  ``cache_len (B,)``; used by the predictive-sampling verify step (W = the
+  forecast window; W=1 recovers vanilla decode). Writes the window's K/V into
+  the cache at per-sequence offsets and returns the updated cache. On partial
+  accepts the engine simply rewinds ``cache_len`` — stale slots are never
+  read (mask is ``key_pos <= query_pos``) and get overwritten next verify.
+
+MLA (DeepSeek-V3) caches the compressed latent ``c_kv`` (+ decoupled RoPE
+key) instead of per-head K/V, and uses the absorbed-matrix formulation in
+window mode so decode touches only ``r + rope_dim`` bytes per cached token.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import Dense, RMSNorm
+from repro.nn.rope import apply_rope
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def write_window(buf, new, cache_len):
+    """Write W new entries into a cache at per-sequence offsets.
+
+    buf: (B, S, ...); new: (B, W, ...); cache_len: (B,).
+    Formulated as mask+gather+where (NOT dynamic_update_slice): under a
+    sequence-sharded cache this is fully local — the per-sequence DUS
+    variant forces GSPMD to all-gather the cache (§Perf C3).
+    """
+    B, S = buf.shape[:2]
+    W = new.shape[1]
+    off = jnp.arange(S)[None, :] - cache_len[:, None]        # (B, S)
+    in_win = (off >= 0) & (off < W)
+    idx = jnp.clip(off, 0, W - 1)
+    idx = idx.reshape(idx.shape + (1,) * (buf.ndim - 2))
+    vals = jnp.take_along_axis(new, idx, axis=1)             # (B, S, ...)
+    mask = in_win.reshape(in_win.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(mask, vals, buf)
+
+
+def _causal_mask(q_pos, k_pos, window: int = 0):
+    """(..., Q, K) boolean mask: key visible iff k <= q (and within sliding
+    window when ``window > 0``)."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B, Q, H, hd), k/v: (B, K, KV, hd) grouped; mask (B, Q, K) or (Q, K)."""
+    B, Q, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Q, KV, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(B, Q, H, hd)
+
+
+# Above this sequence length, full-sequence attention processes queries in
+# chunks (transient (B, H, CHUNK, S) score tiles instead of (B, H, S, S)) —
+# XLA-level flash-style tiling; the Pallas kernel is the TPU fast path.
+CHUNKED_THRESHOLD = 2048
+QUERY_CHUNK = 512
+
+
+def _pick_chunk(T: int, target: int = QUERY_CHUNK) -> int:
+    """Largest divisor of T that is <= target (handles prefix-extended
+    sequence lengths like 4096 + 256 frontend tokens)."""
+    for c in range(min(target, T), 0, -1):
+        if T % c == 0:
+            return c
+    return T
+
+
+def _sdpa_chunked(q, k, v, scale, window: int = 0):
+    """Causal chunked attention over full sequences. q: (B, T, H, hd);
+    k/v: (B, T, KV, hd). Scans query chunks; keys stay resident."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    cq = _pick_chunk(T)
+    n_chunks = T // cq
+    qc = q.reshape(B, n_chunks, cq, H, hd)
+    k_pos = jnp.arange(T)
+
+    # §Perf A3: checkpoint each chunk so the scan backward recomputes the
+    # (B, H, cq, T) softmax weights instead of storing them per chunk
+    @jax.checkpoint
+    def one_chunk(i, q_i):
+        q_pos = i * cq + jnp.arange(cq)
+        mask = _causal_mask(q_pos, k_pos, window)    # (cq, T)
+        return _sdpa(q_i, k, v, mask, scale)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, T, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+class GQAttention:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ks = jax.random.split(key, 6)
+        p = {
+            "wq": Dense.init(ks[0], D, H * hd, use_bias=False, dtype=dtype),
+            "wk": Dense.init(ks[1], D, KV * hd, use_bias=False, dtype=dtype),
+            "wv": Dense.init(ks[2], D, KV * hd, use_bias=False, dtype=dtype),
+            "wo": Dense.init(ks[3], H * hd, D, use_bias=False, dtype=dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = RMSNorm.init(hd, dtype=dtype)
+            p["k_norm"] = RMSNorm.init(hd, dtype=dtype)
+        return p
+
+    @staticmethod
+    def _qkv(p, x, cfg, positions):
+        B, T, D = x.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = Dense.apply(p["wq"], x).reshape(B, T, H, hd)
+        k = Dense.apply(p["wk"], x).reshape(B, T, KV, hd)
+        v = Dense.apply(p["wv"], x).reshape(B, T, KV, hd)
+        if "q_norm" in p:
+            q = RMSNorm.apply(p["q_norm"], q)
+            k = RMSNorm.apply(p["k_norm"], k)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    @staticmethod
+    def full(p, x, cfg, window: int = 0):
+        """x: (B, T, D) -> (B, T, D); causal (optionally sliding-window)."""
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        q, k, v = GQAttention._qkv(p, x, cfg, pos)
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        if T > CHUNKED_THRESHOLD:
+            out = _sdpa_chunked(q, k, v, scale, window)
+        else:
+            mask = _causal_mask(pos, pos, window)
+            out = _sdpa(q, k, v, mask, scale)
+        return Dense.apply(p["wo"], out.reshape(B, T, -1))
+
+    @staticmethod
+    def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, max_len, KV, hd), dtype),
+                "v": jnp.zeros((batch, max_len, KV, hd), dtype)}
+
+    @staticmethod
+    def window(p, x, cfg, cache, cache_len, window: int = 0):
+        """x: (B, W, D) verify-window queries; cache_len: (B,) valid lengths.
+
+        Returns (y, new_cache). Key positions are absolute; sliding-window
+        masking composes with the cache mask.
+        """
+        B, W, _ = x.shape
+        S = cache["k"].shape[1]
+        pos = cache_len[:, None] + jnp.arange(W)[None, :]  # (B, W)
+        q, k_new, v_new = GQAttention._qkv(p, x, cfg, pos)
+
+        k = write_window(cache["k"], k_new, cache_len)
+        v = write_window(cache["v"], v_new, cache_len)
+        k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = _causal_mask(pos, k_pos, window)
+        out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(cfg.head_dim))
+        y = Dense.apply(p["wo"], out.reshape(B, W, -1))
+        return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+class MLAttention:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        D, H = cfg.d_model, cfg.n_heads
+        r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        ks = jax.random.split(key, 8)
+        return {
+            "wq_a": Dense.init(ks[0], D, r_q, use_bias=False, dtype=dtype),
+            "q_norm": RMSNorm.init(r_q, dtype=dtype),
+            "wq_b": Dense.init(ks[1], r_q, H * (dn + dr), use_bias=False,
+                               dtype=dtype),
+            "wkv_a": Dense.init(ks[2], D, r_kv + dr, use_bias=False,
+                                dtype=dtype),
+            "kv_norm": RMSNorm.init(r_kv, dtype=dtype),
+            "wk_b": Dense.init(ks[3], r_kv, H * dn, use_bias=False,
+                               dtype=dtype),
+            "wv_b": Dense.init(ks[4], r_kv, H * dv, use_bias=False,
+                               dtype=dtype),
+            "wo": Dense.init(ks[5], H * dv, D, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def _q(p, x, cfg, positions):
+        B, T, _ = x.shape
+        H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+        q = Dense.apply(p["wq_b"], RMSNorm.apply(
+            p["q_norm"], Dense.apply(p["wq_a"], x)))
+        q = q.reshape(B, T, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        return q_nope, q_rope
+
+    @staticmethod
+    def _latent(p, x, cfg, positions):
+        """Compressed KV latent + decoupled rope key (shared across heads)."""
+        r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+        kv = Dense.apply(p["wkv_a"], x)
+        c_kv = RMSNorm.apply(p["kv_norm"], kv[..., :r_kv])
+        k_rope = kv[..., None, r_kv:]  # (B, T, 1, dr) single shared head
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+        return c_kv, k_rope[..., 0, :]
+
+    @staticmethod
+    def _attend_absorbed(p, q_nope, q_rope, c_kv, k_rope, mask, cfg):
+        """Absorbed-matrix attention over the latent cache.
+
+        q_nope: (B, Q, H, dn); c_kv: (B, S, r); k_rope: (B, S, dr).
+        scores = q_nope^T W_uk c + q_rope . k_rope; out via W_uv on the
+        attention-weighted latent (never materializes per-head K/V).
+        """
+        B, Q, H, dn = q_nope.shape
+        r = c_kv.shape[-1]
+        dv = cfg.v_head_dim
+        wk_b = p["wk_b"]["w"].reshape(r, H, dn)
+        wv_b = p["wv_b"]["w"].reshape(r, H, dv)
+        scale = 1.0 / math.sqrt(dn + cfg.qk_rope_dim)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv)
+                  + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+        logits = logits.astype(jnp.float32) * scale
+        if mask.ndim == 2:
+            mask = mask[None]
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        pattn = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, c_kv)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b)
+        return Dense.apply(p["wo"], out.reshape(B, Q, H * dv))
+
+    @staticmethod
+    def full(p, x, cfg, window: int = 0):
+        B, T, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        q_nope, q_rope = MLAttention._q(p, x, cfg, pos)
+        c_kv, k_rope = MLAttention._latent(p, x, cfg, pos)
+        if T > CHUNKED_THRESHOLD:
+            cq = _pick_chunk(T)
+            n_chunks = T // cq
+            k_pos = jnp.arange(T)
+
+            @jax.checkpoint
+            def one_chunk(i, qn_i, qr_i):
+                q_pos = i * cq + jnp.arange(cq)
+                mask = _causal_mask(q_pos, k_pos, window)
+                return MLAttention._attend_absorbed(p, qn_i, qr_i, c_kv,
+                                                    k_rope, mask, cfg)
+
+            qn = jnp.moveaxis(q_nope.reshape(B, n_chunks, cq, *q_nope.shape[2:]), 1, 0)
+            qr = jnp.moveaxis(q_rope.reshape(B, n_chunks, cq, *q_rope.shape[2:]), 1, 0)
+            out = jax.lax.map(lambda a: one_chunk(*a),
+                              (jnp.arange(n_chunks), qn, qr))
+            return jnp.moveaxis(out, 0, 1).reshape(B, T, -1)
+        mask = _causal_mask(pos, pos, window)
+        return MLAttention._attend_absorbed(p, q_nope, q_rope, c_kv, k_rope,
+                                            mask, cfg)
+
+    @staticmethod
+    def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
+        return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+
+    @staticmethod
+    def window(p, x, cfg, cache, cache_len, window: int = 0):
+        B, W, _ = x.shape
+        S = cache["c_kv"].shape[1]
+        pos = cache_len[:, None] + jnp.arange(W)[None, :]
+        q_nope, q_rope = MLAttention._q(p, x, cfg, pos)
+        c_new, kr_new = MLAttention._latent(p, x, cfg, pos)
+
+        c_kv = write_window(cache["c_kv"], c_new, cache_len)
+        k_rope = write_window(cache["k_rope"], kr_new, cache_len)
+        k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = _causal_mask(pos, k_pos, window)
+        y = MLAttention._attend_absorbed(p, q_nope, q_rope, c_kv, k_rope,
+                                         mask, cfg)
+        return y, {"c_kv": c_kv, "k_rope": k_rope}

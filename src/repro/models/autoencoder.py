@@ -1,0 +1,120 @@
+"""Discrete-latent autoencoder (paper §4.2, Appendix A.3).
+
+Encoder: two 3x3 convs (half width) -> strided 4x4 s2 (half) -> strided 4x4
+s2 (full) -> two residual blocks -> 1x1 to ``C_lat * K`` logits.
+Quantization: argmax-of-softmax, one-hot, straight-through gradient.
+Decoder mirrors the encoder. Loss: MSE (rate term handled by the separately
+trained latent ARM, two-phase training as in the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import Conv2D
+
+
+@dataclass(frozen=True)
+class AutoencoderConfig:
+    height: int = 32
+    width: int = 32
+    channels: int = 3          # image channels
+    width_filters: int = 512   # "width" parameter (paper: 512)
+    latent_channels: int = 4   # C_lat (paper: 4)
+    latent_categories: int = 128  # K (paper: 128)
+
+    @property
+    def latent_hw(self) -> tuple[int, int]:
+        return self.height // 4, self.width // 4
+
+
+def _resblock_init(key, ch, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"conv1": Conv2D.init(k1, ch, ch, (3, 3), dtype=dtype),
+            "conv2": Conv2D.init(k2, ch, ch, (3, 3), dtype=dtype)}
+
+
+def _resblock_apply(params, x):
+    u = jax.nn.relu(Conv2D.apply(params["conv1"], jax.nn.relu(x)))
+    u = Conv2D.apply(params["conv2"], u)
+    return x + u
+
+
+class DiscreteAutoencoder:
+    @staticmethod
+    def init(key, cfg: AutoencoderConfig, dtype=jnp.float32):
+        W, hw = cfg.width_filters, cfg.width_filters // 2
+        CL, K = cfg.latent_channels, cfg.latent_categories
+        ks = jax.random.split(key, 14)
+        enc = {
+            "c1": Conv2D.init(ks[0], cfg.channels, hw, (3, 3), dtype=dtype),
+            "c2": Conv2D.init(ks[1], hw, hw, (3, 3), dtype=dtype),
+            "s1": Conv2D.init(ks[2], hw, hw, (4, 4), dtype=dtype),
+            "s2": Conv2D.init(ks[3], hw, W, (4, 4), dtype=dtype),
+            "r1": _resblock_init(ks[4], W, dtype),
+            "r2": _resblock_init(ks[5], W, dtype),
+            "head": Conv2D.init(ks[6], W, CL * K, (1, 1), dtype=dtype),
+        }
+        dec = {
+            "embed": Conv2D.init(ks[7], CL * K, W, (1, 1), dtype=dtype),
+            "r1": _resblock_init(ks[8], W, dtype),
+            "r2": _resblock_init(ks[9], W, dtype),
+            "t1": Conv2D.init(ks[10], W, hw, (4, 4), dtype=dtype),
+            "t2": Conv2D.init(ks[11], hw, hw, (4, 4), dtype=dtype),
+            "c1": Conv2D.init(ks[12], hw, hw, (3, 3), dtype=dtype),
+            "c2": Conv2D.init(ks[13], hw, cfg.channels, (3, 3), dtype=dtype),
+        }
+        return {"enc": enc, "dec": dec}
+
+    # -- encoder -----------------------------------------------------------
+    @staticmethod
+    def encode_logits(params, x, cfg: AutoencoderConfig):
+        """x: (B, H, W, C) float in [-1, 1] -> latent logits (B, h, w, CL, K)."""
+        e = params["enc"]
+        u = jax.nn.relu(Conv2D.apply(e["c1"], x))
+        u = jax.nn.relu(Conv2D.apply(e["c2"], u))
+        u = jax.nn.relu(Conv2D.apply(e["s1"], u, stride=(2, 2)))
+        u = jax.nn.relu(Conv2D.apply(e["s2"], u, stride=(2, 2)))
+        u = _resblock_apply(e["r1"], u)
+        u = _resblock_apply(e["r2"], u)
+        logits = Conv2D.apply(e["head"], u)
+        B, h, w, _ = logits.shape
+        return logits.reshape(B, h, w, cfg.latent_channels,
+                              cfg.latent_categories)
+
+    @staticmethod
+    def quantize(logits):
+        """Straight-through argmax-of-softmax: returns (z_int, z_onehot_st)."""
+        z = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        hard = jax.nn.one_hot(z, logits.shape[-1], dtype=logits.dtype)
+        soft = jax.nn.softmax(logits, axis=-1)
+        st = soft + jax.lax.stop_gradient(hard - soft)
+        return z, st
+
+    # -- decoder -----------------------------------------------------------
+    @staticmethod
+    def decode(params, z_onehot, cfg: AutoencoderConfig):
+        """z_onehot: (B, h, w, CL, K) -> reconstruction (B, H, W, C)."""
+        d = params["dec"]
+        B, h, w, CL, K = z_onehot.shape
+        u = Conv2D.apply(d["embed"], z_onehot.reshape(B, h, w, CL * K))
+        u = _resblock_apply(d["r1"], u)
+        u = _resblock_apply(d["r2"], u)
+        u = jax.nn.relu(Conv2D.apply(d["t1"], u, stride=(2, 2), transpose=True))
+        u = jax.nn.relu(Conv2D.apply(d["t2"], u, stride=(2, 2), transpose=True))
+        u = jax.nn.relu(Conv2D.apply(d["c1"], u))
+        return jnp.tanh(Conv2D.apply(d["c2"], u))
+
+    @staticmethod
+    def reconstruct(params, x, cfg: AutoencoderConfig):
+        logits = DiscreteAutoencoder.encode_logits(params, x, cfg)
+        z, st = DiscreteAutoencoder.quantize(logits)
+        xhat = DiscreteAutoencoder.decode(params, st, cfg)
+        return xhat, z
+
+    @staticmethod
+    def mse_loss(params, x, cfg: AutoencoderConfig):
+        xhat, _ = DiscreteAutoencoder.reconstruct(params, x, cfg)
+        return jnp.mean(jnp.square(x - xhat))

@@ -1,0 +1,26 @@
+"""Stub modality frontends (the one sanctioned carve-out — see DESIGN.md).
+
+For [audio] (MusicGen over EnCodec tokens) and [vlm] (InternVL2) the assigned
+architectures specify the TRANSFORMER BACKBONE only; ``prefix_embeddings``
+stand in for the frozen conv-codec / ViT encoder outputs. These helpers
+produce shape-correct embeddings (ShapeDtypeStructs for the dry-run, random
+values for smoke tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prefix_spec(cfg, batch: int):
+    """ShapeDtypeStruct for the frontend embedding prefix, or None."""
+    if cfg.n_prefix_tokens == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.n_prefix_tokens, cfg.d_model),
+                                cfg.param_dtype)
+
+
+def random_prefix(key, cfg, batch: int):
+    if cfg.n_prefix_tokens == 0:
+        return None
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.n_prefix_tokens, cfg.d_model), cfg.param_dtype)

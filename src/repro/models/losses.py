@@ -1,0 +1,49 @@
+"""LM losses: next-token cross-entropy + optional forecasting-KL (the paper's
+Eq. 9 integrated into training, weight 0.01) + MoE aux."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerLM
+
+
+def next_token_xent(logits, tokens):
+    """logits (B, S, V) over the TOKEN part of the sequence; tokens (B, S).
+    Position s predicts token s+1 (last position unused)."""
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    true = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - true)
+
+
+def lm_loss(params, cfg, tokens, prefix_embeddings=None,
+            moe_aux_weight: float = 0.01, moe_capacity: float = 1.25,
+            remat: bool = False):
+    """Full training loss. Returns (loss, metrics dict). Training uses
+    finite MoE capacity (dropping); inference paths use no-drop."""
+    logits, h, aux = TransformerLM.apply(params, cfg, tokens,
+                                         prefix_embeddings,
+                                         moe_capacity=moe_capacity,
+                                         remat=remat)
+    n_pre = 0 if prefix_embeddings is None else prefix_embeddings.shape[1]
+    tok_logits = logits[:, n_pre:]
+    xent = next_token_xent(tok_logits, tokens)
+    loss = xent + moe_aux_weight * aux
+    metrics = {"xent": xent, "moe_aux": aux}
+
+    if cfg.forecast_horizon and "forecast" in params:
+        from repro.core.forecasting import TokenForecast, TokenForecastConfig
+        fcfg = TokenForecastConfig(cfg.d_model, cfg.vocab,
+                                   cfg.forecast_horizon, cfg.forecast_hidden)
+        h_tok = h[:, n_pre:]
+        fc_logits = TokenForecast.apply(params["forecast"], h_tok, fcfg)
+        # arm_logits[s] = dist over token s given x_{<s}: shift LM logits
+        arm = jnp.pad(tok_logits, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        kl = TokenForecast.kl_loss(fc_logits, arm)
+        loss = loss + cfg.forecast_loss_weight * kl
+        metrics["forecast_kl"] = kl
+
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Baseline formulation: sort-based dispatch into per-expert capacity buffers
+(E, C, D) -> batched expert matmuls -> weighted scatter-combine. Under GSPMD
+the expert dimension is sharded over the "model" mesh axis (expert
+parallelism); the §Perf hillclimb replaces the implicit resharding with an
+explicit shard_map all-to-all (see sharding/moe_a2a.py).
+
+Covers: DeepSeek-V3 (1 shared + 256 routed, top-8, sigmoid scoring +
+normalized weights), DBRX (16 routed, top-4, softmax), Jamba (16, top-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import Dense
+
+
+def _mlp_init(key, d_model, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"up": Dense.init(ks[0], d_model, d_ff, use_bias=False, dtype=dtype),
+         "down": Dense.init(ks[1], d_ff, d_model, use_bias=False, dtype=dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = Dense.init(ks[2], d_model, d_ff, use_bias=False,
+                               dtype=dtype)
+    return p
+
+
+def _mlp_apply(p, x, kind):
+    u = Dense.apply(p["up"], x)
+    if kind == "swiglu":
+        u = u * jax.nn.silu(Dense.apply(p["gate"], x))
+    elif kind == "geglu":
+        u = u * jax.nn.gelu(Dense.apply(p["gate"], x))
+    else:
+        u = jax.nn.gelu(u)
+    return Dense.apply(p["down"], u)
+
+
+class MoE:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        E = cfg.n_experts
+        D, F = cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+        k_r, k_e, k_s = jax.random.split(key, 3)
+        ks = jax.random.split(k_e, 3)
+        glu = cfg.mlp_kind in ("swiglu", "geglu")
+        experts = {
+            "up": 0.02 * jax.random.normal(ks[0], (E, D, F), dtype=dtype),
+            "down": 0.02 * jax.random.normal(ks[1], (E, F, D), dtype=dtype),
+        }
+        if glu:
+            experts["gate"] = 0.02 * jax.random.normal(ks[2], (E, D, F),
+                                                       dtype=dtype)
+        p = {
+            "router": Dense.init(k_r, D, E, use_bias=False, dtype=dtype),
+            "experts": experts,
+        }
+        if cfg.n_shared_experts:
+            p["shared"] = _mlp_init(k_s, D,
+                                    (cfg.moe_d_ff or cfg.d_ff)
+                                    * cfg.n_shared_experts,
+                                    cfg.mlp_kind, dtype)
+        return p
+
+    @staticmethod
+    def route(p, x_flat, cfg):
+        """x_flat: (N, D). Returns (expert_ids (N,k), weights (N,k), probs)."""
+        logits = Dense.apply(p["router"], x_flat).astype(jnp.float32)  # (N, E)
+        if cfg.router_score == "sigmoid":          # DeepSeek-V3
+            scores = jax.nn.sigmoid(logits)
+        else:
+            scores = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(scores, cfg.top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+        return ids.astype(jnp.int32), w, jax.nn.softmax(logits, axis=-1)
+
+    @staticmethod
+    def load_balance_loss(probs, ids, cfg):
+        """Switch-style aux loss: E * sum_e f_e * p_e."""
+        E = cfg.n_experts
+        onehot = jax.nn.one_hot(ids, E)                  # (N, k, E)
+        f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)    # fraction routed
+        pbar = jnp.mean(probs, axis=0)                   # mean router prob
+        return E * jnp.sum(f * pbar) / cfg.top_k
+
+    @staticmethod
+    def apply(p, x, cfg, capacity_factor: float | None = 1.25):
+        """x: (B, T, D) -> (y (B, T, D), aux_loss scalar).
+
+        ``capacity_factor=None`` => no-drop (C = N*k). REQUIRED for decode /
+        predictive-sampling verify: token dropping makes a token's output
+        depend on *other* tokens (capacity competition), which would break
+        both causality and the exactness guarantee. Training may drop
+        (standard efficiency trade).
+
+        Under an active mesh (sharding rules context) this dispatches to the
+        expert-parallel shard_map path (sharding/moe_shard.py)."""
+        from repro.sharding.api import current_rules
+        ctx = current_rules()
+        if ctx is not None:
+            mesh, rules = ctx
+            if ("model" in mesh.axis_names
+                    and cfg.n_experts % mesh.shape["model"] == 0):
+                from repro.sharding.moe_shard import moe_apply_sharded
+                ep_only = bool(rules.mapping.get("_moe_ep", False))
+                return moe_apply_sharded(p, x, cfg, mesh, capacity_factor,
+                                         ep_only=ep_only)
+        B, T, D = x.shape
+        E, k = cfg.n_experts, cfg.top_k
+        N = B * T
+        xf = x.reshape(N, D)
+        ids, w, probs = MoE.route(p, xf, cfg)
+        aux = MoE.load_balance_loss(probs, ids, cfg)
+
+        if capacity_factor is None:
+            C = N * k                      # no token can ever be dropped
+        else:
+            C = max(1, int(N * k * capacity_factor) // E)
+        ids_flat = ids.reshape(N * k)
+        w_flat = w.reshape(N * k)
+        tok_flat = jnp.repeat(jnp.arange(N), k)
+
+        order = jnp.argsort(ids_flat)
+        ids_s = ids_flat[order]
+        tok_s = tok_flat[order]
+        w_s = w_flat[order]
+        # position within each expert segment (sorted -> first-occurrence diff)
+        first = jnp.searchsorted(ids_s, ids_s, side="left")
+        pos = jnp.arange(N * k) - first
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C)  # C -> dropped via mode='drop'
+
+        # dispatch: (E, C, D)
+        buf = jnp.zeros((E, C, D), x.dtype)
+        buf = buf.at[ids_s, pos_c].set(xf[tok_s], mode="drop")
+
+        # expert MLPs, batched over E
+        up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"])
+        if "gate" in p["experts"]:
+            gate = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["gate"])
+            act = (jax.nn.silu(gate) if cfg.mlp_kind == "swiglu"
+                   else jax.nn.gelu(gate))
+            hidden = up * act
+        else:
+            hidden = jax.nn.gelu(up)
+        out = jnp.einsum("ecf,efd->ecd", hidden, p["experts"]["down"])
+
+        # combine: weighted scatter-add back to tokens
+        gathered = out.at[ids_s, pos_c].get(mode="fill", fill_value=0.0)
+        contrib = gathered * jnp.where(keep, w_s, 0.0)[:, None]
+        y = jnp.zeros((N, D), x.dtype).at[tok_s].add(contrib)
+
+        if "shared" in p:
+            y = y + _mlp_apply(p["shared"], xf, cfg.mlp_kind)
+        return y.reshape(B, T, D), aux

@@ -1,0 +1,134 @@
+"""PixelCNN ARM with fully-categorical channel-autoregressive output.
+
+Paper Appendix A.1 family: masked convolutions (mask A on the input, mask B
+inside), gated residual blocks with concat_elu, one-hot input encoding, and a
+categorical output distribution per (channel, row, col) in raster-scan order
+with channel-minor flat index ``i = (h*W + w)*C + c``.
+
+The network exposes ``apply -> (logits, h)`` where ``h`` is the penultimate
+representation shared with forecasting modules (paper §2.2), and a flat ARM
+interface for the predictive-sampling driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.core import MaskedConv2D, concat_elu, group_ids
+
+
+@dataclass(frozen=True)
+class PixelCNNConfig:
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    categories: int = 2           # K (2 = binary MNIST; 32 = 5-bit; 256 = 8-bit)
+    filters: int = 60             # per-layer filters (paper: 60 MNIST, 162 default)
+    n_res: int = 2                # gated residual blocks (paper: 2 MNIST, 5 default)
+    kernel: int = 3
+    first_kernel: int = 7
+
+    @property
+    def d(self) -> int:
+        return self.height * self.width * self.channels
+
+    def flat_to_chw(self, i):
+        """flat index -> (c, h, w) under channel-minor raster order."""
+        c = i % self.channels
+        p = i // self.channels
+        return c, p // self.width, p % self.width
+
+
+class PixelCNN:
+    @staticmethod
+    def init(key, cfg: PixelCNNConfig, dtype=jnp.float32):
+        C, K, F = cfg.channels, cfg.categories, cfg.filters
+        assert F % C == 0, "filters must be divisible by channels for group-AR"
+        keys = jax.random.split(key, 2 + 2 * cfg.n_res)
+        # one-hot input: C*K channels, group id = data channel
+        g_in = np.repeat(np.arange(C), K)
+        g_f = group_ids(F, C)
+        g_2f = np.concatenate([g_f, g_f])  # concat_elu duplicates groups
+        params = {
+            "in_conv": MaskedConv2D.init(
+                keys[0], C * K, F, (cfg.first_kernel, cfg.first_kernel),
+                mask_type="A", groups_in=g_in, groups_out=g_f, dtype=dtype),
+            "res": [],
+        }
+        for r in range(cfg.n_res):
+            params["res"].append({
+                "conv1": MaskedConv2D.init(
+                    keys[1 + 2 * r], 2 * F, F, (cfg.kernel, cfg.kernel),
+                    mask_type="B", groups_in=g_2f, groups_out=g_f, dtype=dtype),
+                "conv2": MaskedConv2D.init(
+                    keys[2 + 2 * r], 2 * F, 2 * F, (cfg.kernel, cfg.kernel),
+                    mask_type="B", groups_in=g_2f, groups_out=g_2f, dtype=dtype),
+            })
+        params["out_conv"] = MaskedConv2D.init(
+            keys[-1], 2 * F, C * K, (1, 1), mask_type="B",
+            groups_in=g_2f, groups_out=np.repeat(np.arange(C), K), dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x_onehot, cfg: PixelCNNConfig):
+        """x_onehot: (B, H, W, C*K) float. Returns (logits (B,H,W,C,K),
+        h (B,H,W,F)) — h is the shared representation (last residual out)."""
+        C, K = cfg.channels, cfg.categories
+        u = MaskedConv2D.apply(params["in_conv"], x_onehot)
+        for blk in params["res"]:
+            v = MaskedConv2D.apply(blk["conv1"], concat_elu(u))
+            v = MaskedConv2D.apply(blk["conv2"], concat_elu(v))
+            a, b = jnp.split(v, 2, axis=-1)
+            u = u + a * jax.nn.sigmoid(b)
+        h = u
+        logits = MaskedConv2D.apply(params["out_conv"], concat_elu(h))
+        B, H, W, _ = logits.shape
+        return logits.reshape(B, H, W, C, K), h
+
+    # ------------------------------------------------------------------
+    # int-image helpers
+    # ------------------------------------------------------------------
+    @staticmethod
+    def onehot(x_int, cfg: PixelCNNConfig):
+        """(B, H, W, C) int -> (B, H, W, C*K) one-hot float."""
+        oh = jax.nn.one_hot(x_int, cfg.categories, dtype=jnp.float32)
+        B, H, W, C, K = oh.shape
+        return oh.reshape(B, H, W, C * K)
+
+    @staticmethod
+    def forward_int(params, x_int, cfg: PixelCNNConfig):
+        return PixelCNN.apply(params, PixelCNN.onehot(x_int, cfg), cfg)
+
+    @staticmethod
+    def log_likelihood(params, x_int, cfg: PixelCNNConfig):
+        """Mean log-likelihood (nats per image) of int images (B, H, W, C)."""
+        logits, _ = PixelCNN.forward_int(params, x_int, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, x_int[..., None], axis=-1)[..., 0]
+        return jnp.sum(ll, axis=(1, 2, 3))
+
+    @staticmethod
+    def bpd(params, x_int, cfg: PixelCNNConfig):
+        """Bits per dimension."""
+        ll = PixelCNN.log_likelihood(params, x_int, cfg)
+        return -jnp.mean(ll) / (cfg.d * jnp.log(2.0))
+
+    # ------------------------------------------------------------------
+    # Flat ARM interface for the predictive-sampling driver
+    # ------------------------------------------------------------------
+    @staticmethod
+    def make_arm_fn(params, cfg: PixelCNNConfig):
+        """Returns ``arm_fn(x_flat (B, d) int) -> (logits (B, d, K), h)`` with
+        strict triangular dependence in the channel-minor raster order."""
+        C, H, W = cfg.channels, cfg.height, cfg.width
+
+        def arm_fn(x_flat):
+            B = x_flat.shape[0]
+            x_img = x_flat.reshape(B, H, W, C)
+            logits, h = PixelCNN.forward_int(params, x_img, cfg)
+            return logits.reshape(B, cfg.d, cfg.categories), h
+
+        return arm_fn

@@ -1,0 +1,435 @@
+"""Attention-free mixers: RWKV-6 ("Finch") time/channel mix and Mamba-1
+selective SSM (as interleaved in Jamba).
+
+Both support:
+* ``full``   — scan from zero state over the whole sequence (train/prefill).
+* ``window`` — scan a W-token verify window starting from a carried state
+  snapshot, returning per-position states so the predictive-sampling engine
+  can adopt the state at its accept point (see DESIGN.md §5: recurrent state
+  is cumulative, so the engine snapshots at the last accepted position).
+
+Recurrences use ``jax.lax.scan`` over time — the Pallas `rwkv_wkv` kernel
+(kernels/rwkv_wkv/) provides the chunked TPU implementation of the WKV loop;
+ops.py dispatches to it when enabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import Dense, LayerNorm
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+
+def _lora_init(key, dim, rank, out_dim, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"a": 0.02 * jax.random.normal(k1, (dim, rank), dtype=dtype),
+            "b": 0.02 * jax.random.normal(k2, (rank, out_dim), dtype=dtype)}
+
+
+def _lora_apply(p, x, base=None):
+    y = jnp.tanh(x @ p["a"]) @ p["b"]
+    return y if base is None else base + y
+
+
+class RWKV6TimeMix:
+    """Data-dependent-decay time mixing (the Finch contribution)."""
+
+    MIX_KEYS = ("r", "k", "v", "w", "g")
+
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        D = cfg.d_model
+        hd = cfg.rwkv_head_dim
+        H = D // hd
+        ks = jax.random.split(key, 12)
+        p = {
+            # token-shift interpolation factors (static part)
+            "mu": {m: 0.5 * jnp.ones((D,), dtype) for m in RWKV6TimeMix.MIX_KEYS},
+            "mu_x": 0.5 * jnp.ones((D,), dtype),
+            # data-dependent lerp LoRAs
+            "lora": {m: _lora_init(ks[i], D, 32, D, dtype)
+                     for i, m in enumerate(RWKV6TimeMix.MIX_KEYS)},
+            "wr": Dense.init(ks[5], D, D, use_bias=False, dtype=dtype),
+            "wk": Dense.init(ks[6], D, D, use_bias=False, dtype=dtype),
+            "wv": Dense.init(ks[7], D, D, use_bias=False, dtype=dtype),
+            "wg": Dense.init(ks[8], D, D, use_bias=False, dtype=dtype),
+            "wo": Dense.init(ks[9], D, D, use_bias=False, dtype=dtype),
+            # decay: w_t = exp(-exp(w0 + lora_w(x_mixed)))  (data-dependent!)
+            "w0": -6.0 + 0.5 * jax.random.normal(ks[10], (D,), dtype),
+            "w_lora": _lora_init(ks[11], D, 64, D, dtype),
+            "u": 0.5 * jnp.ones((H, hd), dtype),          # bonus
+            "ln_out": LayerNorm.init(D, dtype=dtype),     # group-norm stand-in
+        }
+        return p
+
+    @staticmethod
+    def _mix(p, x, x_prev):
+        """Token-shift ddlerp (v6): per-stream data-dependent interpolation.
+
+        x: (B, T, D); x_prev: (B, T, D) shifted-by-one inputs."""
+        dx = x_prev - x
+        xx = x + dx * p["mu_x"]
+        mixed = {}
+        for m in RWKV6TimeMix.MIX_KEYS:
+            mixed[m] = x + dx * (p["mu"][m] + _lora_apply(p["lora"][m], xx))
+        return mixed
+
+    @staticmethod
+    def _wkv_scan(r, k, v, w, u, state0):
+        """WKV recurrence. r,k,v,w: (B, T, H, hd); state0: (B, H, hd, hd).
+
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+        y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+        Returns y (B, T, H, hd) and per-step states (B, T, H, hd, hd).
+        """
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp  # (B, H, hd)
+            kv = k_t[..., :, None] * v_t[..., None, :]       # (B, H, hd, hd)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           S + u[None, :, :, None] * kv)
+            S_new = w_t[..., :, None] * S + kv
+            return S_new, (y, S_new)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+        S_fin, (ys, Ss) = jax.lax.scan(step, state0, xs)
+        return jnp.moveaxis(ys, 0, 1), jnp.moveaxis(Ss, 0, 1)
+
+    @staticmethod
+    def _project(p, x, x_prev, cfg):
+        B, T, D = x.shape
+        hd = cfg.rwkv_head_dim
+        H = D // hd
+        m = RWKV6TimeMix._mix(p, x, x_prev)
+        r = Dense.apply(p["wr"], m["r"]).reshape(B, T, H, hd)
+        k = Dense.apply(p["wk"], m["k"]).reshape(B, T, H, hd)
+        v = Dense.apply(p["wv"], m["v"]).reshape(B, T, H, hd)
+        g = jax.nn.silu(Dense.apply(p["wg"], m["g"]))
+        w = jnp.exp(-jnp.exp(
+            (p["w0"] + _lora_apply(p["w_lora"], m["w"])).astype(jnp.float32)))
+        w = w.reshape(B, T, H, hd).astype(x.dtype)
+        return r, k, v, w, g
+
+    @staticmethod
+    def _finish(p, y, g, B, T, D):
+        y = LayerNorm.apply(p["ln_out"], y.reshape(B, T, D))
+        return Dense.apply(p["wo"], y * g)
+
+    SCAN_CHUNK = 64
+
+    @staticmethod
+    def _wkv_scan_chunked(r, k, v, w, u, state0):
+        """Chunk-checkpointed WKV (§Perf A1 treatment): backward stores only
+        chunk-boundary states; the Pallas rwkv_wkv kernel is the TPU fast
+        path with the same chunking."""
+        B, T, H, hd = r.shape
+        ck = RWKV6TimeMix.SCAN_CHUNK
+        while T % ck:
+            ck //= 2
+        n_chunks = T // ck
+
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           S + u[None, :, :, None] * kv)
+            return w_t[..., :, None] * S + kv, y
+
+        @jax.checkpoint
+        def chunk_fn(S, xs_c):
+            return jax.lax.scan(step, S, xs_c)
+
+        xs = tuple(jnp.reshape(jnp.moveaxis(a, 1, 0),
+                               (n_chunks, ck) + a.shape[0:1] + a.shape[2:])
+                   for a in (r, k, v, w))
+        _, ys = jax.lax.scan(chunk_fn, state0, xs)
+        return jnp.moveaxis(ys.reshape(T, B, H, hd), 0, 1)
+
+    @staticmethod
+    def full(p, x, cfg):
+        B, T, D = x.shape
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        r, k, v, w, g = RWKV6TimeMix._project(p, x, x_prev, cfg)
+        hd = cfg.rwkv_head_dim
+        H = D // hd
+        S0 = jnp.zeros((B, H, hd, hd), x.dtype)
+        if T >= 256:
+            y = RWKV6TimeMix._wkv_scan_chunked(r, k, v, w, p["u"], S0)
+        else:
+            y, _ = RWKV6TimeMix._wkv_scan(r, k, v, w, p["u"], S0)
+        return RWKV6TimeMix._finish(p, y, g, B, T, D)
+
+    @staticmethod
+    def init_state(cfg, batch: int, dtype=jnp.float32):
+        D, hd = cfg.d_model, cfg.rwkv_head_dim
+        return {"x_last": jnp.zeros((batch, D), dtype),
+                "S": jnp.zeros((batch, D // hd, hd, hd), dtype)}
+
+    @staticmethod
+    def window(p, x, cfg, state):
+        """x: (B, W, D); state carries (x_last, S) from the accepted prefix.
+        Returns (y, per-position states dict with leading (B, W) axes)."""
+        B, W, D = x.shape
+        x_prev = jnp.concatenate([state["x_last"][:, None], x[:, :-1]], axis=1)
+        r, k, v, w, g = RWKV6TimeMix._project(p, x, x_prev, cfg)
+        y, Ss = RWKV6TimeMix._wkv_scan(r, k, v, w, p["u"], state["S"])
+        states = {"x_last": x, "S": Ss}  # per-position snapshots
+        return RWKV6TimeMix._finish(p, y, g, B, W, D), states
+
+    @staticmethod
+    def advance_state(p, x, cfg, state, accept):
+        """Two-pass memory mode (§Perf C4): state after ``accept`` tokens
+        only, no per-position (B, W, H, hd, hd) stack."""
+        B, W, D = x.shape
+        hd = cfg.rwkv_head_dim
+        x_prev = jnp.concatenate([state["x_last"][:, None], x[:, :-1]],
+                                 axis=1)
+        r, k, v, w, g = RWKV6TimeMix._project(p, x, x_prev, cfg)
+
+        def step(carry, inp):
+            S, t = carry
+            _, k_t, v_t, w_t = inp
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            S_new = w_t[..., :, None] * S + kv
+            live = (t < accept)[:, None, None, None]
+            return (jnp.where(live, S_new, S), t + 1), None
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+        (S_fin, _), _ = jax.lax.scan(
+            step, (state["S"], jnp.zeros((), jnp.int32)), xs)
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(accept - 1, 0)[:, None, None], axis=1)[:, 0]
+        return {"x_last": x_last, "S": S_fin}
+
+
+class RWKV6ChannelMix:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        D, F = cfg.d_model, cfg.d_ff
+        ks = jax.random.split(key, 3)
+        return {
+            "mu_k": 0.5 * jnp.ones((D,), dtype),
+            "mu_r": 0.5 * jnp.ones((D,), dtype),
+            "wk": Dense.init(ks[0], D, F, use_bias=False, dtype=dtype),
+            "wv": Dense.init(ks[1], F, D, use_bias=False, dtype=dtype),
+            "wr": Dense.init(ks[2], D, D, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def _apply(p, x, x_prev):
+        dx = x_prev - x
+        xk = x + dx * p["mu_k"]
+        xr = x + dx * p["mu_r"]
+        k = jnp.square(jax.nn.relu(Dense.apply(p["wk"], xk)))
+        return jax.nn.sigmoid(Dense.apply(p["wr"], xr)) * Dense.apply(p["wv"], k)
+
+    @staticmethod
+    def full(p, x, cfg):
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        return RWKV6ChannelMix._apply(p, x, x_prev)
+
+    @staticmethod
+    def init_state(cfg, batch: int, dtype=jnp.float32):
+        return {"x_last": jnp.zeros((batch, cfg.d_model), dtype)}
+
+    @staticmethod
+    def window(p, x, cfg, state):
+        x_prev = jnp.concatenate([state["x_last"][:, None], x[:, :-1]], axis=1)
+        y = RWKV6ChannelMix._apply(p, x, x_prev)
+        return y, {"x_last": x}
+
+    @staticmethod
+    def advance_state(p, x, cfg, state, accept):
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(accept - 1, 0)[:, None, None], axis=1)[:, 0]
+        return {"x_last": x_last}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (Jamba's SSM layer)
+# ---------------------------------------------------------------------------
+
+class Mamba:
+    D_CONV = 4
+
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        D = cfg.d_model
+        DI = 2 * D                       # d_inner (expand=2)
+        N = cfg.ssm_state
+        dt_rank = max(1, D // 16)
+        ks = jax.random.split(key, 6)
+        A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (DI, 1))
+        return {
+            "in_proj": Dense.init(ks[0], D, 2 * DI, use_bias=False,
+                                  dtype=dtype),
+            "conv_w": 0.1 * jax.random.normal(ks[1], (Mamba.D_CONV, DI),
+                                              dtype=dtype),
+            "conv_b": jnp.zeros((DI,), dtype),
+            "x_proj": Dense.init(ks[2], DI, dt_rank + 2 * N, use_bias=False,
+                                 dtype=dtype),
+            "dt_proj": Dense.init(ks[3], dt_rank, DI, dtype=dtype),
+            "A_log": jnp.log(A).astype(dtype),
+            "D": jnp.ones((DI,), dtype),
+            "out_proj": Dense.init(ks[4], DI, D, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def _conv(p, u, conv_state):
+        """Causal depthwise conv. u: (B, T, DI); conv_state: (B, D_CONV-1, DI)
+        holds the last inputs of the accepted prefix."""
+        ext = jnp.concatenate([conv_state, u], axis=1)
+        T = u.shape[1]
+        taps = [ext[:, t:t + T] * p["conv_w"][t] for t in range(Mamba.D_CONV)]
+        y = sum(taps) + p["conv_b"]
+        new_state = ext[:, -(Mamba.D_CONV - 1):] if Mamba.D_CONV > 1 else ext[:, :0]
+        return jax.nn.silu(y), new_state, ext
+
+    @staticmethod
+    def _dt_b_c(p, u, cfg):
+        N = cfg.ssm_state
+        dt_rank = p["dt_proj"]["w"].shape[0]
+        xdbc = Dense.apply(p["x_proj"], u)
+        dt = jax.nn.softplus(
+            Dense.apply(p["dt_proj"], xdbc[..., :dt_rank]).astype(jnp.float32))
+        Bm = xdbc[..., dt_rank:dt_rank + N].astype(jnp.float32)   # (B, T, N)
+        Cm = xdbc[..., dt_rank + N:].astype(jnp.float32)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (DI, N)
+        return dt, Bm, Cm, A
+
+    @staticmethod
+    def _ssm_scan(p, u, cfg, h0):
+        """Selective scan, per-step states retained (decode-window mode).
+        u: (B, T, DI); h0: (B, DI, N). Returns y, states (B, T, DI, N)."""
+        dt, Bm, Cm, A = Mamba._dt_b_c(p, u, cfg)
+
+        def step(h, inp):
+            dt_t, B_t, C_t, u_t = inp                  # time-major slices
+            dA = jnp.exp(dt_t[..., None] * A[None])    # (B, DI, N)
+            h_new = dA * h + (dt_t[..., None] * B_t[:, None, :]
+                              * u_t[..., None])
+            y_t = jnp.einsum("bdn,bn->bd", h_new, C_t)
+            return h_new, (y_t, h_new)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0)
+                   for a in (dt, Bm, Cm, u.astype(jnp.float32)))
+        _, (ys, hs) = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+        y = jnp.moveaxis(ys, 0, 1)
+        y = y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)
+        return y.astype(u.dtype), jnp.moveaxis(hs, 0, 1).astype(u.dtype)
+
+    # chunked-checkpointed scan for long sequences (§Perf iteration A1):
+    # never materializes (B, T, DI, N) discretized tensors; backward stores
+    # only chunk-boundary states and recomputes within a chunk.
+    SCAN_CHUNK = 64
+
+    @staticmethod
+    def _ssm_scan_chunked(p, u, cfg, h0):
+        B, T, DI = u.shape
+        dt, Bm, Cm, A = Mamba._dt_b_c(p, u, cfg)
+        ck = Mamba.SCAN_CHUNK
+        while T % ck:
+            ck //= 2
+        n_chunks = T // ck
+        io_dtype = u.dtype   # §Perf A2: scan inputs/outputs in model dtype
+        #                     (bf16); the recurrence carry stays f32 — same
+        #                     layout real Mamba kernels use.
+
+        def step(h, inp):
+            dt_t, B_t, C_t, u_t = (a.astype(jnp.float32) for a in inp)
+            dA = jnp.exp(dt_t[..., None] * A[None])
+            h_new = dA * h + (dt_t[..., None] * B_t[:, None, :]
+                              * u_t[..., None])
+            y_t = jnp.einsum("bdn,bn->bd", h_new, C_t)
+            return h_new, y_t.astype(io_dtype)
+
+        @jax.checkpoint
+        def chunk_fn(h, xs_c):
+            return jax.lax.scan(step, h, xs_c)
+
+        xs = tuple(jnp.reshape(jnp.moveaxis(a.astype(io_dtype), 1, 0),
+                               (n_chunks, ck) + a.shape[0:1] + a.shape[2:])
+                   for a in (dt, Bm, Cm, u))
+        _, ys = jax.lax.scan(chunk_fn, h0.astype(jnp.float32), xs)
+        y = jnp.moveaxis(ys.reshape(T, B, DI), 0, 1).astype(jnp.float32)
+        y = y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)
+        return y.astype(u.dtype)
+
+    @staticmethod
+    def _run(p, x, cfg, conv_state, h0):
+        B, T, D = x.shape
+        xz = Dense.apply(p["in_proj"], x)
+        u, z = jnp.split(xz, 2, axis=-1)
+        u, new_conv, ext = Mamba._conv(p, u, conv_state)
+        y, hs = Mamba._ssm_scan(p, u, cfg, h0)
+        y = y * jax.nn.silu(z)
+        return Dense.apply(p["out_proj"], y), new_conv, hs, ext
+
+    @staticmethod
+    def full(p, x, cfg):
+        B, T, D = x.shape
+        DI = 2 * D
+        conv0 = jnp.zeros((B, Mamba.D_CONV - 1, DI), x.dtype)
+        h0 = jnp.zeros((B, DI, cfg.ssm_state), x.dtype)
+        if T >= 256:   # chunk-checkpointed long-sequence path (§Perf A1)
+            xz = Dense.apply(p["in_proj"], x)
+            u, z = jnp.split(xz, 2, axis=-1)
+            u, _, _ = Mamba._conv(p, u, conv0)[0:3]
+            y = Mamba._ssm_scan_chunked(p, u, cfg, h0)
+            y = y * jax.nn.silu(z)
+            return Dense.apply(p["out_proj"], y)
+        y, _, _, _ = Mamba._run(p, x, cfg, conv0, h0)
+        return y
+
+    @staticmethod
+    def init_state(cfg, batch: int, dtype=jnp.float32):
+        DI = 2 * cfg.d_model
+        return {"conv": jnp.zeros((batch, Mamba.D_CONV - 1, DI), dtype),
+                "h": jnp.zeros((batch, DI, cfg.ssm_state), dtype)}
+
+    @staticmethod
+    def window(p, x, cfg, state):
+        """Returns (y, per-position states): conv inputs and ssm states at
+        every window position, so the engine can rewind to its accept point."""
+        B, W, D = x.shape
+        y, _, hs, ext = Mamba._run(p, x, cfg, state["conv"], state["h"])
+        # per-position conv states: after window pos t the last D_CONV-1
+        # inputs end at t -> ext indices (t+1 .. t+D_CONV-1)
+        idx = (jnp.arange(W)[:, None] + 1
+               + jnp.arange(Mamba.D_CONV - 1)[None, :])
+        conv_pp = ext[:, idx]          # (B, W, D_CONV-1, DI)
+        return y, {"conv": conv_pp, "h": hs}
+
+    @staticmethod
+    def advance_state(p, x, cfg, state, accept):
+        """Two-pass memory mode (§Perf C4): recompute the window and return
+        ONLY the state after ``accept`` (B,) tokens — per-step updates are
+        masked off once t >= accept, so no (B, W, DI, N) stack exists."""
+        B, W, D = x.shape
+        xz = Dense.apply(p["in_proj"], x)
+        u, _ = jnp.split(xz, 2, axis=-1)
+        u, _, ext = Mamba._conv(p, u, state["conv"])
+        dt, Bm, Cm, A = Mamba._dt_b_c(p, u, cfg)
+
+        def step(carry, inp):
+            h, t = carry
+            dt_t, B_t, u_t = inp
+            dA = jnp.exp(dt_t[..., None] * A[None])
+            h_new = dA * h + (dt_t[..., None] * B_t[:, None, :]
+                              * u_t[..., None])
+            live = (t < accept)[:, None, None]
+            return (jnp.where(live, h_new, h), t + 1), None
+
+        xs = tuple(jnp.moveaxis(a, 1, 0)
+                   for a in (dt, Bm, u.astype(jnp.float32)))
+        (h_fin, _), _ = jax.lax.scan(
+            step, (state["h"].astype(jnp.float32), jnp.zeros((), jnp.int32)),
+            xs)
+        # conv state after `accept` tokens: ext indices accept..accept+2
+        idx = (accept[:, None] + jnp.arange(Mamba.D_CONV - 1)[None, :])
+        conv = jnp.take_along_axis(
+            ext, idx[:, :, None].astype(jnp.int32), axis=1)
+        return {"conv": conv, "h": h_fin.astype(x.dtype)}

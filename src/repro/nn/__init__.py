@@ -1,0 +1,33 @@
+"""Minimal functional NN substrate on raw pytrees (no flax dependency).
+
+Every layer is a pair of pure functions:
+  ``init(key, ...) -> params``  (params is a dict pytree)
+  ``apply(params, x, ...) -> y``
+Composite models assemble these dicts; everything jit/pjit-compatible.
+"""
+from repro.nn.core import (
+    Dense,
+    Embedding,
+    LayerNorm,
+    RMSNorm,
+    Conv2D,
+    MaskedConv2D,
+    concat_elu,
+    variance_scaling,
+    truncated_normal_init,
+)
+from repro.nn.rope import apply_rope, rope_frequencies
+
+__all__ = [
+    "Dense",
+    "Embedding",
+    "LayerNorm",
+    "RMSNorm",
+    "Conv2D",
+    "MaskedConv2D",
+    "concat_elu",
+    "variance_scaling",
+    "truncated_normal_init",
+    "apply_rope",
+    "rope_frequencies",
+]

@@ -1,0 +1,203 @@
+"""Core layers: Dense, Embedding, norms, (masked) convolutions.
+
+Layers are namespaced classes of static methods so call sites read
+``Dense.init`` / ``Dense.apply``; parameters are plain dict pytrees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def variance_scaling(key, shape, fan_in=None, scale=1.0, dtype=jnp.float32):
+    """LeCun-style variance scaling (truncated-normal-free, plain normal)."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) >= 1 else 1
+    std = math.sqrt(scale / max(1, fan_in))
+    return std * jax.random.normal(key, shape, dtype=dtype)
+
+
+def truncated_normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / Embedding
+# ---------------------------------------------------------------------------
+
+class Dense:
+    @staticmethod
+    def init(key, in_dim: int, out_dim: int, use_bias: bool = True,
+             dtype=jnp.float32, scale: float = 1.0):
+        kw, _ = jax.random.split(key)
+        params = {"w": variance_scaling(kw, (in_dim, out_dim), fan_in=in_dim,
+                                        scale=scale, dtype=dtype)}
+        if use_bias:
+            params["b"] = jnp.zeros((out_dim,), dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x):
+        y = x @ params["w"]
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+
+class Embedding:
+    @staticmethod
+    def init(key, vocab: int, dim: int, dtype=jnp.float32, std: float = 0.02):
+        return {"table": std * jax.random.normal(key, (vocab, dim), dtype=dtype)}
+
+    @staticmethod
+    def apply(params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    @staticmethod
+    def attend(params, x):
+        """Tied-readout logits: x @ table.T"""
+        return x @ params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+class RMSNorm:
+    @staticmethod
+    def init(dim: int, dtype=jnp.float32):
+        return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+    @staticmethod
+    def apply(params, x, eps: float = 1e-6):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+class LayerNorm:
+    @staticmethod
+    def init(dim: int, dtype=jnp.float32):
+        return {"scale": jnp.ones((dim,), dtype=dtype),
+                "bias": jnp.zeros((dim,), dtype=dtype)}
+
+    @staticmethod
+    def apply(params, x, eps: float = 1e-5):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions (NHWC)
+# ---------------------------------------------------------------------------
+
+class Conv2D:
+    @staticmethod
+    def init(key, in_ch: int, out_ch: int, kernel: Sequence[int] = (3, 3),
+             use_bias: bool = True, dtype=jnp.float32, scale: float = 1.0):
+        kh, kw_ = kernel
+        fan_in = in_ch * kh * kw_
+        params = {"w": variance_scaling(key, (kh, kw_, in_ch, out_ch),
+                                        fan_in=fan_in, scale=scale, dtype=dtype)}
+        if use_bias:
+            params["b"] = jnp.zeros((out_ch,), dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x, stride: Sequence[int] = (1, 1), padding="SAME",
+              transpose: bool = False):
+        if transpose:
+            y = jax.lax.conv_transpose(
+                x, params["w"], strides=tuple(stride), padding=padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        else:
+            y = jax.lax.conv_general_dilated(
+                x, params["w"], window_strides=tuple(stride), padding=padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+
+def group_ids(n_ch: int, n_groups: int) -> np.ndarray:
+    """Contiguous-block channel->group assignment (n_ch divisible preferred)."""
+    return np.arange(n_ch) * n_groups // max(n_ch, 1)
+
+
+def _pixelcnn_mask(kh: int, kw: int, gi: np.ndarray, go: np.ndarray,
+                   mask_type: str) -> np.ndarray:
+    """Raster-scan causal mask for PixelCNN convolutions.
+
+    Channels carry explicit group ids ``gi``/``go`` (e.g. R,G,B sub-channel
+    groups; concat_elu duplicates the id vector): at the centre pixel, output
+    group ``go`` may see input group ``g`` iff ``g < go`` (mask 'A', strict)
+    or ``g <= go`` (mask 'B'). ``mask_type='T'`` is the strictly-triangular
+    *spatial* mask used by the forecasting module: centre pixel fully blocked.
+    """
+    in_ch, out_ch = len(gi), len(go)
+    mask = np.ones((kh, kw, in_ch, out_ch), dtype=np.float32)
+    ch, cw = kh // 2, kw // 2
+    # rows strictly below centre
+    mask[ch + 1:, :, :, :] = 0.0
+    # same row, right of centre
+    mask[ch, cw + 1:, :, :] = 0.0
+    if mask_type == "T":
+        mask[ch, cw, :, :] = 0.0
+        return mask
+    if mask_type == "A":
+        centre = (gi[:, None] < go[None, :]).astype(np.float32)
+    elif mask_type == "B":
+        centre = (gi[:, None] <= go[None, :]).astype(np.float32)
+    else:
+        raise ValueError(f"unknown mask type {mask_type!r}")
+    mask[ch, cw, :, :] = centre
+    return mask
+
+
+class MaskedConv2D:
+    """PixelCNN masked convolution with channel-autoregressive centre masks."""
+
+    @staticmethod
+    def init(key, in_ch: int, out_ch: int, kernel=(3, 3), mask_type="B",
+             groups_in=1, groups_out=1, use_bias: bool = True,
+             dtype=jnp.float32):
+        """``groups_in``/``groups_out`` may be ints (contiguous blocks) or
+        explicit per-channel group-id vectors."""
+        params = Conv2D.init(key, in_ch, out_ch, kernel, use_bias, dtype)
+        gi = (group_ids(in_ch, groups_in) if np.isscalar(groups_in)
+              else np.asarray(groups_in))
+        go = (group_ids(out_ch, groups_out) if np.isscalar(groups_out)
+              else np.asarray(groups_out))
+        mask = _pixelcnn_mask(kernel[0], kernel[1], gi, go, mask_type)
+        # mask is static (buffer, not trainable) — store as numpy-backed const
+        params["_mask"] = jnp.asarray(mask, dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x):
+        w = params["w"] * params["_mask"]
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+
+def concat_elu(x):
+    """concat_elu nonlinearity from PixelCNN++."""
+    return jax.nn.elu(jnp.concatenate([x, -x], axis=-1))

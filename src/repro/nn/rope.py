@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE), split-half convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for RoPE over ``head_dim`` (must be even)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Apply RoPE to ``x`` of shape (..., seq, heads, head_dim).
+
+    ``positions``: int array broadcastable to (..., seq).
+    Uses the split-half (rotate_half) convention used by Llama/Gemma/Qwen.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, half)
+    # broadcast over head dim: (..., seq, 1, half)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

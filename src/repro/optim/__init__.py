@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (adamw, adafactor, sgd, clip_by_global_norm,
+                                    apply_updates, zero_frozen)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine, constant_schedule
+
+__all__ = [
+    "adamw", "adafactor", "sgd", "clip_by_global_norm", "apply_updates",
+    "zero_frozen",
+    "cosine_schedule", "linear_warmup_cosine", "constant_schedule",
+]

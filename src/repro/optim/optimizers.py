@@ -1,0 +1,165 @@
+"""Optimizers as (init, update) pairs on pytrees — optax-style GradientTransformation
+without the optax dependency.
+
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates(params, updates)``. All states are pytrees -> jit/pjit-safe.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def zero_frozen(tree):
+    """Zero out gradients/updates for non-trainable buffers — any leaf whose
+    dict key starts with '_' (e.g. PixelCNN conv masks)."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (jax.tree.map(jnp.zeros_like, v)
+                        if k.startswith("_") else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(tree)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        u = jax.tree.map(lambda g: -lr_fn(step) * g, grads)
+        return u, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with decoupled weight decay. Moments in ``moment_dtype``
+    (use bfloat16 for memory-tight giant-model configs)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def mom(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype)
+
+        def sqmom(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(moment_dtype)
+
+        mu = jax.tree.map(mom, state["mu"], grads)
+        nu = jax.tree.map(sqmom, state["nu"], grads)
+        step_size = lr_fn(step)
+
+        def upd(m, v, p):
+            m_hat = m.astype(jnp.float32) / bc1
+            v_hat = v.astype(jnp.float32) / bc2
+            u = -step_size * (m_hat / (jnp.sqrt(v_hat) + eps)
+                              + weight_decay * p.astype(jnp.float32))
+            return u.astype(jnp.float32)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), factored second moments, no first
+    moment. Memory ~= (rows + cols) per matrix instead of 2x params — the
+    optimizer of record for the >=100B dry-run configs (see DESIGN.md §4)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(per_leaf, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+        step_size = lr_fn(step)
+
+        def per_leaf(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g32 * rfac[..., None] * cfac[..., None, :]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(vv + eps)
+                new_v = {"v": vv}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -step_size * (u + weight_decay * p.astype(jnp.float32))
+            return u, new_v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [per_leaf(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_v = treedef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup_steps)
+        t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def exponential_decay(lr0: float, decay: float):
+    """Paper Appendix A: per-iteration multiplicative decay (0.999995)."""
+    def fn(step):
+        return lr0 * decay ** step.astype(jnp.float32)
+    return fn

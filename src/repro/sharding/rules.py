@@ -1,0 +1,193 @@
+"""Parameter/optimizer/batch sharding for the production meshes.
+
+Strategy (baseline; §Perf iterates on it):
+* tensor parallel over "model": expert dim (EP) when present, else the
+  largest divisible weight dim (heads / d_ff / vocab end up there naturally);
+* ZeRO-3/FSDP over "data": next largest divisible dim;
+* multi-pod: pure data parallelism over "pod" (batch only) — gradients
+  all-reduce over ("pod", "data");
+* scanned-block leading axes and small tensors (< 64k elems) replicated.
+
+Assignment is size-heuristic rather than name-table: every leaf gets a
+valid spec for ANY architecture in the zoo, and the dry-run verifies the
+composite lowers + fits. Activation rules live in ``Rules`` (api.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import Rules
+
+REPLICATE_BELOW = 64 * 1024
+
+# module-level switch (set by launch/dryrun for decode lowering): experts
+# use the inference EP-only layout (§Perf C2)
+MOE_INFERENCE_LAYOUT = False
+
+
+def default_activation_rules(mesh: Mesh, shard_embed: bool = False,
+                             no_tp: bool = False) -> Rules:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if no_tp:
+        # small-model scheme (§Perf B1): the "model" axis becomes extra data
+        # parallelism; no tensor-parallel activation collectives at all.
+        dpm = tuple(dp) + ("model",)
+        return Rules({"batch": dpm, "seq": None, "embed": None,
+                      "vocab": None, "experts": None, "heads": None})
+    return Rules({
+        "batch": dp,
+        "seq": None,
+        "embed": "model" if shard_embed else None,
+        "vocab": "model",
+        "experts": "model",
+        "heads": "model",
+    })
+
+
+def _leaf_spec(path_names, leaf, mesh: Mesh) -> P:
+    """Pick a PartitionSpec for one parameter leaf."""
+    dims = list(leaf.shape)
+    n = len(dims)
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape["data"]
+
+    in_blocks = path_names and path_names[0] == "blocks"
+    start = 1 if in_blocks else 0          # never shard the scan axis
+
+    # MoE: specs must match the shard_map contract (moe_shard.py):
+    # router replicated, experts P('model' on E, 'data' on dim1).
+    if "router" in path_names:
+        return P()
+    if "experts" in path_names:
+        spec = [None] * n
+        if MOE_INFERENCE_LAYOUT:
+            # §Perf C2: full EP — experts E-wise over both axes, no FSDP
+            if dims[start] % (model_n * data_n) == 0:
+                spec[start] = ("model", "data")
+            elif dims[start] % model_n == 0:
+                spec[start] = "model"
+            return P(*spec)
+        if dims[start] % model_n == 0:
+            spec[start] = "model"
+        if n - start >= 2 and dims[start + 1] % data_n == 0:
+            spec[start + 1] = "data"
+        return P(*spec)
+
+    if np.prod(dims, initial=1) < REPLICATE_BELOW:
+        return P()
+
+    spec = [None] * n
+    used_dims = set()
+
+    # 1) "model" axis (tensor parallel): largest divisible dim
+    for i in sorted(range(start, n), key=lambda i: -dims[i]):
+        if dims[i] % model_n == 0:
+            spec[i] = "model"
+            used_dims.add(i)
+            break
+
+    # 2) "data" axis (FSDP): largest remaining divisible dim
+    for i in sorted(range(start, n), key=lambda i: -dims[i]):
+        if i not in used_dims and dims[i] % data_n == 0:
+            spec[i] = "data"
+            break
+
+    return P(*spec)
+
+
+def param_shardings(params_shape, mesh: Mesh, no_tp: bool = False):
+    """Pytree of NamedShardings mirroring a params (or opt-state) pytree of
+    ShapeDtypeStructs/arrays. ``no_tp``: FSDP over all mesh axes instead of
+    TP over "model" (small-model scheme, §Perf B1)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+
+    def names_of(path):
+        out = []
+        for k in path:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return out
+
+    leaf_fn = _leaf_spec_no_tp if no_tp else _leaf_spec
+    specs = [NamedSharding(mesh, leaf_fn(names_of(p), l, mesh))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _leaf_spec_no_tp(path_names, leaf, mesh: Mesh) -> P:
+    """FSDP-only: shard the largest divisible dim over ALL mesh axes
+    (("pod",)"data","model" flattened); small leaves replicated."""
+    dims = list(leaf.shape)
+    n = len(dims)
+    if np.prod(dims, initial=1) < REPLICATE_BELOW:
+        return P()
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    in_blocks = path_names and path_names[0] == "blocks"
+    start = 1 if in_blocks else 0
+    spec = [None] * n
+    for i in sorted(range(start, n), key=lambda i: -dims[i]):
+        if dims[i] % total == 0:
+            spec[i] = axes
+            return P(*spec)
+    for i in sorted(range(start, n), key=lambda i: -dims[i]):
+        if dims[i] % mesh.shape["data"] == 0:
+            spec[i] = "data"
+            return P(*spec)
+    return P(*spec)
+
+
+def _cache_leaf_spec(path_names, leaf, mesh: Mesh, batch: int) -> P:
+    """KV caches / recurrent states: batch over dp when divisible, "model"
+    over the largest remaining divisible dim (head_dim / kv_lora / state)."""
+    dims = list(leaf.shape)
+    n = len(dims)
+    model_n = mesh.shape["model"]
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = 1
+    for ax in dp:
+        dp_size *= mesh.shape[ax]
+    in_blocks = path_names and path_names[0] == "blocks"
+    start = 1 if in_blocks else 0
+    spec = [None] * n
+    # batch axis: first dim of size `batch` after the optional scan axis
+    b_dim = None
+    for i in range(start, n):
+        if dims[i] == batch:
+            b_dim = i
+            break
+    if b_dim is not None and batch % dp_size == 0:
+        spec[b_dim] = dp if len(dp) > 1 else dp[0]
+    for i in sorted(range(start, n), key=lambda i: -dims[i]):
+        if i != b_dim and spec[i] is None and dims[i] % model_n == 0:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+
+    def names_of(path):
+        return [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+
+    specs = [NamedSharding(mesh, _cache_leaf_spec(names_of(p), l, mesh, batch))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_sharding(mesh: Mesh, no_tp: bool = False):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if no_tp:
+        dp = tuple(dp) + ("model",)
+    return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

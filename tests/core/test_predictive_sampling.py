@@ -1,0 +1,131 @@
+"""Exactness + call-count tests for predictive sampling (Algorithms 1 & 2).
+
+A tiny random "ARM" with strict triangular dependence serves as oracle: its
+logits at position p are a fixed nonlinear function of x[:p]. Exactness of
+predictive sampling must hold for ANY such ARM — this is the paper's claim 3).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictive_sampling as ps
+from repro.core import reparam
+
+
+def make_toy_arm(key, d, K, hdim=16, temp=1.0):
+    """Random triangular ARM: logits[p] = MLP(cumsum of embedded x[<p])."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    emb = jax.random.normal(k1, (K, hdim)) * 0.5
+    w1 = jax.random.normal(k2, (hdim, hdim)) * 0.5
+    w2 = jax.random.normal(k3, (hdim, K)) * 0.5
+
+    def arm_fn(x):  # x: (B, d) int
+        e = emb[x]  # (B, d, hdim)
+        # shift right: position p sees strict prefix
+        e = jnp.pad(e, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        csum = jnp.cumsum(e, axis=1) / jnp.sqrt(1.0 + jnp.arange(x.shape[1]))[None, :, None]
+        h = jnp.tanh(csum @ w1)
+        logits = (h @ w2) / temp
+        return logits, h
+
+    return arm_fn
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 24), st.integers(2, 8),
+       st.integers(1, 4))
+def test_fpi_exactness(seed, d, K, B):
+    """FPI output is bit-identical to ancestral sampling under shared eps."""
+    key = jax.random.PRNGKey(seed)
+    ka, ke = jax.random.split(key)
+    arm_fn = make_toy_arm(ka, d, K)
+    eps = reparam.gumbel(ke, (B, d, K))
+
+    x_ref, ref_stats = ps.ancestral_sample(arm_fn, eps)
+    x_fpi, fpi_stats = ps.fixed_point_sample(arm_fn, eps)
+    x_alg1, alg1_stats = ps.predictive_sample(arm_fn, ps.fpi_forecast, eps)
+
+    np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x_fpi))
+    np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x_alg1))
+    assert int(ref_stats.arm_calls) == d
+    assert int(fpi_stats.arm_calls) <= d + 1
+    assert int(alg1_stats.arm_calls) <= d
+    # Alg 1 vs Alg 2 call counts agree within one observation pass
+    assert abs(int(fpi_stats.arm_calls) - int(alg1_stats.arm_calls)) <= 1
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_baseline_forecasters_exactness(seed):
+    """zeros / predict-last forecasts change call counts, never samples."""
+    key = jax.random.PRNGKey(seed)
+    ka, ke = jax.random.split(key)
+    d, K, B = 16, 4, 2
+    arm_fn = make_toy_arm(ka, d, K)
+    eps = reparam.gumbel(ke, (B, d, K))
+    x_ref, _ = ps.ancestral_sample(arm_fn, eps)
+    for fc in (ps.zeros_forecast, ps.predict_last_forecast):
+        x, stats = ps.predictive_sample(arm_fn, fc, eps)
+        np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x))
+        assert int(stats.arm_calls) <= d
+
+
+def test_weakly_coupled_arm_converges_fast():
+    """An ARM whose conditionals depend only weakly on preceding values
+    (the regime the paper exploits: 'may converge much faster if variables do
+    not depend strongly on adjacent previous variables') needs << d calls."""
+    key = jax.random.PRNGKey(0)
+    ka, kb, ke = jax.random.split(key, 3)
+    d, K, B = 32, 4, 2
+    bias = 8.0 * jax.random.normal(kb, (d, K))  # strong positional prior
+    weak = make_toy_arm(ka, d, K)
+
+    def arm_fn(x):
+        logits, h = weak(x)
+        return 0.05 * logits + bias[None], h
+
+    eps = reparam.gumbel(ke, (B, d, K))
+    x, stats = ps.predictive_sample(arm_fn, ps.fpi_forecast, eps)
+    x_ref, _ = ps.ancestral_sample(arm_fn, eps)
+    np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x))
+    assert int(stats.arm_calls) < d // 4
+
+
+def test_converge_iter_monotone_and_bounded():
+    key = jax.random.PRNGKey(7)
+    ka, ke = jax.random.split(key)
+    d, K, B = 20, 3, 3
+    arm_fn = make_toy_arm(ka, d, K)
+    eps = reparam.gumbel(ke, (B, d, K))
+    x, stats = ps.predictive_sample(arm_fn, ps.fpi_forecast, eps)
+    conv = np.asarray(stats.converge_iter)
+    assert (conv >= 1).all() and (conv <= int(stats.arm_calls)).all()
+    # valid prefix only grows: converge iterations are monotone nondecreasing
+    assert (np.diff(conv, axis=1) >= 0).all()
+    # per-sample <= batch-level calls
+    assert (np.asarray(stats.per_sample_calls) <= int(stats.arm_calls)).all()
+
+
+def test_without_reparametrization_no_fixed_point_speedup():
+    """Paper Table 3: removing reparametrization (resampling fresh noise per
+    iteration) destroys convergence — forecasts stop matching outputs."""
+    key = jax.random.PRNGKey(0)
+    ka, ke = jax.random.split(key)
+    d, K, B = 24, 8, 2
+    arm_fn = make_toy_arm(ka, d, K, temp=1.5)  # high-entropy
+    eps = reparam.gumbel(ke, (B, d, K))
+    _, stats_shared = ps.predictive_sample(arm_fn, ps.fpi_forecast, eps)
+
+    # adversarial variant: forecast with DIFFERENT noise than the verifier,
+    # emulating "most likely value according to P_F" mismatching the sampler.
+    eps2 = reparam.gumbel(jax.random.PRNGKey(99), (B, d, K))
+
+    def bad_forecast(x, h, prev_out, eps_, i):
+        # prev_out was computed under eps; re-argmax under eps2 to de-correlate
+        return prev_out * 0  # degenerate: like no-reparam, rarely matches
+    _, stats_bad = ps.predictive_sample(arm_fn, bad_forecast, eps)
+    assert int(stats_bad.arm_calls) >= int(stats_shared.arm_calls)

@@ -1,0 +1,71 @@
+"""Tests for the Gumbel-max reparametrization and posterior noise (App. B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reparam
+
+
+def test_reparam_argmax_matches_categorical_distribution():
+    """Gumbel-max samples must follow softmax(logits)."""
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([2.0, 0.0, -1.0, 1.0])
+    n = 20000
+    eps = reparam.gumbel(key, (n, 4))
+    xs = reparam.reparam_argmax(jnp.broadcast_to(logits, (n, 4)), eps)
+    freq = np.bincount(np.asarray(xs), minlength=4) / n
+    probs = np.asarray(jax.nn.softmax(logits))
+    np.testing.assert_allclose(freq, probs, atol=0.02)
+
+
+def test_reparam_argmax_shift_invariance():
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (16, 10))
+    eps = reparam.gumbel(jax.random.PRNGKey(2), (16, 10))
+    a = reparam.reparam_argmax(logits, eps)
+    b = reparam.reparam_argmax(logits + 123.4, eps)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 7))
+def test_posterior_gumbel_consistency(seed, K, batch):
+    """argmax(logits + posterior_eps) must equal the conditioning sample x —
+    exactly, for any logits/x (the Appendix-B invariant)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    logits = 3.0 * jax.random.normal(k1, (batch, K))
+    x = jax.random.randint(k2, (batch,), 0, K)
+    eps = reparam.posterior_gumbel(k3, logits, x)
+    rec = reparam.reparam_argmax(logits, eps)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(x))
+
+
+def test_posterior_gumbel_marginal():
+    """Marginalizing (x ~ softmax, eps ~ p(eps|x)) must recover the standard
+    Gumbel prior on eps (Appendix B, Eq. 12)."""
+    key = jax.random.PRNGKey(3)
+    n, K = 40000, 3
+    logits = jnp.broadcast_to(jnp.asarray([1.0, 0.0, -0.5]), (n, K))
+    kx, ke = jax.random.split(key)
+    x = jax.random.categorical(kx, logits)
+    eps = reparam.posterior_gumbel(ke, logits, x)
+    # each marginal eps_{:, c} should be standard Gumbel: mean ~ 0.5772
+    m = np.asarray(jnp.mean(eps, axis=0))
+    np.testing.assert_allclose(m, np.full(K, np.euler_gamma), atol=0.03)
+    v = np.asarray(jnp.var(eps, axis=0))
+    np.testing.assert_allclose(v, np.full(K, np.pi**2 / 6), atol=0.1)
+
+
+def test_posterior_gumbel_strictness():
+    """Non-argmax perturbed values stay strictly below the max (no ties)."""
+    key = jax.random.PRNGKey(4)
+    logits = jax.random.normal(key, (64, 8))
+    x = jax.random.randint(jax.random.PRNGKey(5), (64,), 0, 8)
+    eps = reparam.posterior_gumbel(jax.random.PRNGKey(6), logits, x)
+    vals = logits + eps
+    mx = jnp.take_along_axis(vals, x[:, None], axis=-1)
+    others = jnp.where(jax.nn.one_hot(x, 8, dtype=bool), -jnp.inf, vals)
+    assert bool(jnp.all(others < mx))

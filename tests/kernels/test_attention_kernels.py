@@ -1,0 +1,68 @@
+"""flash_attention / decode_attention kernels vs jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("S,d,H,KV", [(64, 32, 2, 2), (96, 64, 4, 2),
+                                      (130, 32, 2, 1)])
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(S, d, H, KV, window, dtype):
+    key = jax.random.PRNGKey(S + d)
+    kq, kk, kv = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(kq, (B, S, H, d)).astype(dtype)
+    k = jax.random.normal(kk, (B, S, KV, d)).astype(dtype)
+    v = jax.random.normal(kv, (B, S, KV, d)).astype(dtype)
+    got = flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    want = flash_attention(q, k, v, window=window, use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,W,d", [(128, 1, 32), (256, 8, 64), (200, 4, 32)])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(S, W, d, window, dtype):
+    key = jax.random.PRNGKey(S * 7 + W)
+    B, H, KV = 2, 4, 2
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, W, H, d)).astype(dtype)
+    k = jax.random.normal(kk, (B, S, KV, d)).astype(dtype)
+    v = jax.random.normal(kv, (B, S, KV, d)).astype(dtype)
+    lengths = jax.random.randint(kl, (B,), 1, S - W)
+    got = decode_attention(q, k, v, lengths, window=window, block_k=64)
+    want = decode_attention(q, k, v, lengths, window=window,
+                            use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_matches_model_attention_semantics():
+    """decode kernel must agree with the model's _sdpa window path."""
+    from repro.models.attention import _causal_mask, _sdpa
+    B, W, H, KV, d, S = 2, 4, 4, 2, 32, 96
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k = jax.random.normal(kk, (B, S, KV, d))
+    v = jax.random.normal(kv, (B, S, KV, d))
+    lengths = jnp.asarray([10, 40])
+    pos = lengths[:, None] + jnp.arange(W)[None, :]
+    k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = _causal_mask(pos, k_pos)
+    want = _sdpa(q, k, v, mask, 1.0 / d ** 0.5)
+    got = decode_attention(q, k, v, lengths, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

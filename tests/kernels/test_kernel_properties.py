@@ -1,0 +1,37 @@
+"""Hypothesis property sweeps for the Pallas kernels (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.spec_verify.ops import spec_verify
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 9), st.integers(2, 700),
+       st.sampled_from([64, 128, 256, 333]))
+def test_spec_verify_property(seed, R, V, bv):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    logits = 4.0 * jax.random.normal(k1, (R, V))
+    eps = jax.random.gumbel(k2, (R, V))
+    got = spec_verify(logits, eps, block_rows=4, block_vocab=bv)
+    want = jnp.argmax(logits + eps, axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 48, 65]),
+       st.sampled_from([16, 32]), st.sampled_from([0, 24]))
+def test_flash_attention_property(seed, S, d, window):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, H, KV = 1, 2, 1
+    q = jax.random.normal(kq, (B, S, H, d))
+    k = jax.random.normal(kk, (B, S, KV, d))
+    v = jax.random.normal(kv, (B, S, KV, d))
+    got = flash_attention(q, k, v, window=window, block_q=16, block_k=16)
+    want = flash_attention(q, k, v, window=window, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

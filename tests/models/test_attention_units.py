@@ -1,0 +1,86 @@
+"""Attention substrate unit tests: RoPE properties, masks, MLA cache size,
+window-write equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (_causal_mask, write_window, GQAttention,
+                                    MLAttention)
+from repro.nn.rope import apply_rope
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 6, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    y = apply_rope(x, pos)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on (m - n)
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]))
+        kn = apply_rope(k, jnp.asarray([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 1), rel=1e-3)
+
+
+def test_causal_and_sliding_masks():
+    q = jnp.arange(6)
+    k = jnp.arange(6)
+    m = _causal_mask(q, k)
+    assert bool(m[3, 3]) and bool(m[3, 0]) and not bool(m[3, 4])
+    mw = _causal_mask(q, k, window=2)
+    assert bool(mw[4, 3]) and bool(mw[4, 4])
+    assert not bool(mw[4, 2])          # outside window
+    assert not bool(mw[4, 5])          # future
+
+
+def test_write_window_matches_dus():
+    """Mask-write (§Perf C3) must equal per-sequence dynamic_update_slice."""
+    key = jax.random.PRNGKey(0)
+    buf = jax.random.normal(key, (3, 20, 4))
+    new = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 4))
+    lens = jnp.asarray([0, 7, 15])
+    got = write_window(buf, new, lens)
+    want = jax.vmap(
+        lambda b, n, o: jax.lax.dynamic_update_slice_in_dim(b, n, o, 0)
+    )(buf, new, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_mla_cache_is_latent_sized():
+    """MLA's decode cache must store the compressed latent, not per-head
+    K/V — the whole point of MLA (DeepSeek-V3)."""
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v3-671b")
+    cache = jax.eval_shape(lambda: MLAttention.init_cache(cfg, 1, 1000))
+    per_tok = sum(np.prod(v.shape[1:]) / 1000 * v.dtype.itemsize
+                  for v in jax.tree.leaves(cache))
+    # latent 512 + rope 64 floats vs GQA-equivalent 128 heads x 128 x 2
+    assert per_tok <= (cfg.kv_lora_rank + cfg.qk_rope_dim) * 4 + 1
+    gqa_equiv = 2 * cfg.n_heads * cfg.head_dim * 4
+    assert per_tok < gqa_equiv / 25
+
+
+def test_gqa_window_one_token_matches_full_last_position():
+    from repro.configs import get_config
+    cfg = get_config("gemma-2b", reduced=True)
+    p = GQAttention.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, cfg.d_model))
+    full = GQAttention.full(p, x, cfg)
+    cache = GQAttention.init_cache(cfg, 1, 16)
+    clen = jnp.zeros((1,), jnp.int32)
+    outs = []
+    for t in range(9):
+        y, cache = GQAttention.window(p, x[:, t:t + 1], cfg, cache, clen)
+        outs.append(y)
+        clen = clen + 1
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)

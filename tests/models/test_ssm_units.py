@@ -1,0 +1,63 @@
+"""SSM substrate units: chunked-scan equivalence (hypothesis), window/full
+consistency, decay ranges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.ssm import Mamba, RWKV6TimeMix
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([256, 320, 512]))
+def test_mamba_chunked_equals_plain(seed, T):
+    cfg = get_config("jamba-1.5-large-398b", reduced=True)
+    p = Mamba.init(jax.random.PRNGKey(seed), cfg)
+    x = 0.2 * jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                                (1, T, cfg.d_model))
+    conv0 = jnp.zeros((1, Mamba.D_CONV - 1, 2 * cfg.d_model))
+    h0 = jnp.zeros((1, 2 * cfg.d_model, cfg.ssm_state))
+    y_plain, _, _, _ = Mamba._run(p, x, cfg, conv0, h0)
+    y_chunk = Mamba.full(p, x, cfg)    # T >= 256 -> chunked path
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_plain),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = get_config("rwkv6-7b", reduced=True)
+    p = RWKV6TimeMix.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    _, _, _, w, _ = RWKV6TimeMix._project(p, x, x_prev, cfg)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+
+def test_mamba_window_continuation_matches_full():
+    """Two consecutive windows from carried state == one full pass."""
+    cfg = get_config("jamba-1.5-large-398b", reduced=True)
+    p = Mamba.init(jax.random.PRNGKey(2), cfg)
+    x = 0.2 * jax.random.normal(jax.random.PRNGKey(3), (2, 12, cfg.d_model))
+    full = Mamba.full(p, x, cfg)
+    st0 = Mamba.init_state(cfg, 2)
+    y1, pp1 = Mamba.window(p, x[:, :6], cfg, st0)
+    st1 = jax.tree.map(lambda a: a[:, -1], pp1)   # adopt last position
+    y2, _ = Mamba.window(p, x[:, 6:], cfg, st1)
+    got = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rwkv_window_continuation_matches_full():
+    cfg = get_config("rwkv6-7b", reduced=True)
+    p = RWKV6TimeMix.init(jax.random.PRNGKey(4), cfg)
+    x = 0.2 * jax.random.normal(jax.random.PRNGKey(5), (2, 10, cfg.d_model))
+    full = RWKV6TimeMix.full(p, x, cfg)
+    st0 = RWKV6TimeMix.init_state(cfg, 2)
+    y1, pp1 = RWKV6TimeMix.window(p, x[:, :5], cfg, st0)
+    st1 = jax.tree.map(lambda a: a[:, -1], pp1)
+    y2, _ = RWKV6TimeMix.window(p, x[:, 5:], cfg, st1)
+    got = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,58 @@
+"""Deliverable-integrity checks: the dry-run artifact set matches the
+assigned (architecture x shape x mesh) matrix and every record is complete.
+
+Skips gracefully if the sweep hasn't been run in this checkout."""
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(ART) or len(os.listdir(ART)) < 80,
+    reason="dry-run sweep artifacts not present (run launch/dryrun --all)")
+
+
+def _load_all():
+    return {f: json.load(open(os.path.join(ART, f)))
+            for f in os.listdir(ART) if f.endswith(".json")}
+
+
+def test_full_matrix_covered():
+    from repro.configs import ARCHS, SHAPES
+    recs = _load_all()
+    assert len(recs) == len(ARCHS) * len(SHAPES) * 2   # 10 x 4 x 2 meshes
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("pod16x16", "pod2x16x16"):
+                assert f"{a}__{s}__{m}.json" in recs
+
+
+def test_all_runnable_pairs_compiled_ok():
+    from repro.configs import shape_applicable
+    recs = _load_all()
+    for name, r in recs.items():
+        runnable, _ = shape_applicable(r["arch"], r["shape"])
+        if runnable:
+            assert r["status"] == "ok", (name, r.get("error", "")[:200])
+            assert r["flops"] > 0
+            assert r["bytes_accessed"] > 0
+            assert "collectives" in r and "memory" in r
+        else:
+            assert r["status"] == "skipped"
+            assert r["reason"]
+
+
+def test_multipod_shards_the_pod_axis():
+    """2-pod records must exist for every runnable pair and train flops per
+    device should not exceed the single-pod value (batch split over pods)."""
+    recs = _load_all()
+    for name, r in recs.items():
+        if r["status"] != "ok" or r["mesh"] != "pod2x16x16":
+            continue
+        single = recs[name.replace("pod2x16x16", "pod16x16")]
+        if single["status"] != "ok" or r["shape"] != "train_4k":
+            continue
+        assert r["flops"] <= single["flops"] * 1.1, name

@@ -1,0 +1,39 @@
+"""Checkpoint round-trip: nested dicts/lists/tuples of arrays."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "embed": {"table": jnp.arange(12.0).reshape(3, 4)},
+        "blocks": [{"w": jnp.ones((2, 2)), "b": jnp.zeros(2)},
+                   {"w": 2 * jnp.ones((2, 2)), "b": jnp.ones(2)}],
+        "empty": [],
+        "scalar": jnp.asarray(3),
+    }
+    save_pytree(tree, str(tmp_path), step=7)
+    assert latest_step(str(tmp_path)) == 7
+    back = restore_pytree(str(tmp_path), 7)
+    flat_a = jax.tree.leaves(tree)
+    flat_b = jax.tree.leaves(back)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert back["empty"] == []
+    assert isinstance(back["blocks"], list) and len(back["blocks"]) == 2
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    save_pytree(params, str(tmp_path), step=1)
+    back = restore_pytree(str(tmp_path), 1)
+    tok = jnp.zeros((1, 4), jnp.int32)
+    a, _, _ = TransformerLM.apply(params, cfg, tok)
+    b, _, _ = TransformerLM.apply(back, cfg, tok)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,57 @@
+"""Data generators + pipeline: determinism, shapes, category bounds."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (binary_strokes, quantized_textures,
+                                  repetitive_tokens, synthetic_tokens,
+                                  token_batches)
+
+
+def test_binary_strokes():
+    a = binary_strokes(8, 16, 16, seed=3)
+    b = binary_strokes(8, 16, 16, seed=3)
+    np.testing.assert_array_equal(a, b)           # deterministic
+    assert a.shape == (8, 16, 16, 1)
+    assert set(np.unique(a)) <= {0, 1}
+    assert 0.02 < a.mean() < 0.6                  # sparse strokes
+
+
+@pytest.mark.parametrize("K", [2, 16, 256])
+def test_quantized_textures(K):
+    a = quantized_textures(4, 8, 8, 3, categories=K, seed=1)
+    assert a.shape == (4, 8, 8, 3)
+    assert a.min() >= 0 and a.max() < K
+    # smooth fields: neighbouring pixels mostly close
+    d = np.abs(np.diff(a.astype(int), axis=2)).mean()
+    assert d < K * 0.35
+
+
+def test_token_generators():
+    t = synthetic_tokens(4, 32, 1000, seed=0)
+    assert t.shape == (4, 32) and t.min() >= 0 and t.max() < 1000
+    r = repetitive_tokens(4, 32, 1000, seed=0, motif_len=8)
+    # motif repetition: strong lag-8 autocorrelation
+    agree = (r[:, 8:] == r[:, :-8]).mean()
+    assert agree > 0.8
+
+
+def test_token_batches_stream():
+    it = token_batches(32, 8, 16, 100, seed=0)
+    b1, b2 = next(it), next(it)
+    assert b1.shape == (8, 16)
+    assert not np.array_equal(b1, b2)
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import parse_collective_bytes
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-gather(%a, %b), dims={0}
+  %nope = f32[2,2]{1,0} add(%p, %q)
+  %a2a = u8[1024]{0} all-to-all(%m), dims={0}
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-reduce"] == {"bytes": 16 * 128 * 4, "count": 1}
+    assert out["all-gather"] == {"bytes": 2 * 4 * 8 * 2, "count": 1}
+    assert out["all-to-all"] == {"bytes": 1024, "count": 1}
+    assert out["reduce-scatter"]["count"] == 0
