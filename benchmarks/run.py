@@ -31,7 +31,14 @@ def _csv_rows_table(rows):
             out.append((name, f"{(t or 0)*1e6:.0f}",
                         f"calls_pct={r['calls_pct']}"))
         elif tbl == "serving":
-            if "scheduler" in r:
+            if "scenario" in r:
+                us = r["time_s"] * 1e6 / max(1, r["verify_rounds"])
+                out.append((f"serving/{r['scenario']}", f"{us:.0f}",
+                            f"calls_pct={r['calls_vs_ancestral_pct']};"
+                            f"prefix_hit={r['prefix_hit_rate']};"
+                            f"p50={r['latency_p50_s']}s;"
+                            f"p95={r['latency_p95_s']}s"))
+            elif "scheduler" in r:
                 out.append(("serving/continuous_batching", "0",
                             f"calls_pct={r['calls_pct']}"))
             else:

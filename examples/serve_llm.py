@@ -72,6 +72,11 @@ def main():
     for r in done:
         print(f"  req {r.uid}: +{r.new_tokens} tok, "
               f"{r.calls_used} calls, tail={r.result[-8:]}")
+    m = batcher.export_metrics()   # ContinuousBatcher is a paged ServingEngine
+    print(f"telemetry: p50={m['latency_p50_s']:.2f}s "
+          f"p95={m['latency_p95_s']:.2f}s "
+          f"occupancy={m['mean_batch_occupancy']:.2f} "
+          f"blocks_in_use={m['blocks_in_use']}")
 
 
 if __name__ == "__main__":

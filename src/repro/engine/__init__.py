@@ -1,6 +1,14 @@
 from repro.engine.spec_decode import (PredictiveSampler, GenState,
-                                      make_eps_fn)
-from repro.engine.scheduler import Request, ContinuousBatcher
+                                      make_eps_fn, verify_round)
 
-__all__ = ["PredictiveSampler", "GenState", "make_eps_fn", "Request",
-           "ContinuousBatcher"]
+__all__ = ["PredictiveSampler", "GenState", "make_eps_fn", "verify_round",
+           "Request", "ContinuousBatcher"]
+
+
+def __getattr__(name):
+    # Lazy: scheduler pulls in repro.serving, whose engine imports
+    # spec_decode from this package — importing it eagerly here would cycle.
+    if name in ("Request", "ContinuousBatcher"):
+        from repro.engine import scheduler
+        return getattr(scheduler, name)
+    raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

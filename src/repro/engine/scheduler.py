@@ -1,146 +1,30 @@
-"""Continuous-batching request scheduler (beyond-paper).
+"""Continuous-batching request scheduler — thin alias over ``repro.serving``.
 
-The paper (§4.1) measures batched sampling where "the slowest image
-determines the number of ARM inference passes" and defers a scheduling
-system to future work. Here it is: requests are admitted into free slots of
-a fixed-width batch; every verify round each sequence advances by its *own*
-accept length; finished sequences free their slot immediately. Throughput
-approaches the batch-size-1 ARM-call rate the paper reports.
+The paper (§4.1) defers a scheduling system to future work. The seed's dense
+``ContinuousBatcher`` lived here; it is now a compatibility shim over the
+paged ``ServingEngine`` (``repro.serving.engine``), which adds a paged
+KV-cache block manager with a prefix cache, priority admission with
+row-local chunked prefill, adaptive speculation windows, and telemetry.
+Construction from a ``PredictiveSampler`` pins the window (no adaptation)
+to preserve the original behaviour; ``Request`` is re-exported unchanged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.engine.spec_decode import GenState, PredictiveSampler
-from repro.models.transformer import TransformerLM
+from repro.serving.admission import Request
+from repro.serving.engine import ServingEngine
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray           # (L_p,) int
-    new_tokens: int
-    result: Optional[np.ndarray] = None
-    calls_used: int = 0
+class ContinuousBatcher(ServingEngine):
+    """Seed-compatible facade: ``ContinuousBatcher(sampler, batch)`` with
+    ``submit`` / ``run`` / ``done`` / ``state.rounds`` intact."""
+
+    def __init__(self, sampler, batch: int):
+        super().__init__(
+            sampler.cfg, sampler.params, batch=batch,
+            window_max=sampler.W, max_len=sampler.max_len,
+            eps_fn=sampler.eps_fn, adaptive=False,
+            use_forecast_heads=sampler.use_forecast_heads,
+            use_verify_kernel=sampler.use_verify_kernel)
 
 
-class ContinuousBatcher:
-    def __init__(self, sampler: PredictiveSampler, batch: int):
-        self.s = sampler
-        self.B = batch
-        self.slots: list[Optional[Request]] = [None] * batch
-        self.queue: list[Request] = []
-        self.done: list[Request] = []
-        self.state: Optional[GenState] = None
-        self.target = np.zeros(batch, np.int32)
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    # ------------------------------------------------------------------
-    def _reset_row(self, state: GenState, b: int, prompt: np.ndarray):
-        """Admit a request into slot b: zero the row's recurrent snapshots,
-        prefill its prompt, point its counters at the new sequence."""
-        cfg, W = self.s.cfg, self.s.W
-        L_p = len(prompt)
-
-        def zero_row(x):
-            return x.at[_row_index(x, b)].set(0) if False else x
-        # recurrent snapshots: zero just row b
-        cache = jax.tree.map(
-            lambda x: x.at[_batch_axis_index(x, self.B, b)].set(0),
-            state.cache)
-
-        tokens = state.tokens.at[b].set(0)
-        tokens = tokens.at[b, :L_p].set(jnp.asarray(prompt, jnp.int32))
-        n = state.n.at[b].set(L_p)
-        cand = state.cand.at[b].set(0)
-        cand = cand.at[b, 0].set(int(prompt[-1]))
-        state = state._replace(tokens=tokens, n=n, cand=cand, cache=cache,
-                               per_seq_calls=state.per_seq_calls.at[b].set(0),
-                               accept_hist=state.accept_hist.at[b].set(0))
-
-        if L_p > 1:
-            # row-local prefill: run the whole batch's decode_window but only
-            # adopt row b (simple, correct; a production system would group
-            # admissions). Prompt chunked through the W-wide window.
-            for s0 in range(0, L_p - 1, W):
-                chunk = prompt[s0:s0 + W]
-                wlen = len(chunk)
-                win = np.zeros((self.B, W), np.int32)
-                win[b, :wlen] = chunk
-                cache_len = jnp.maximum(state.n - 1, 0)
-                cache_len = cache_len.at[b].set(s0)
-                _, _, nc = TransformerLM.decode_window(
-                    self.s.params, cfg, jnp.asarray(win), state.cache,
-                    cache_len)
-                accept = jnp.ones((self.B,), jnp.int32)
-                accept = accept.at[b].set(wlen)
-                sel = TransformerLM.select_states(cfg, nc, accept)
-                # adopt ONLY row b of the new cache
-                cache = jax.tree.map(
-                    lambda old, new: _adopt_row(old, new, self.B, b),
-                    state.cache, sel)
-                state = state._replace(cache=cache)
-        return state
-
-    # ------------------------------------------------------------------
-    def run(self, max_rounds: int = 10_000):
-        """Drain the queue; returns completed Requests with stats."""
-        B = self.B
-        while self.queue or any(s is not None for s in self.slots):
-            # admit
-            for b in range(B):
-                if self.slots[b] is None and self.queue:
-                    req = self.queue.pop(0)
-                    if self.state is None:
-                        prompts = np.zeros((B, len(req.prompt)), np.int32)
-                        prompts[b] = req.prompt
-                        self.state = self.s.init_state(
-                            jnp.asarray(prompts), B)
-                        # other rows: inactive (target 0)
-                        self.target[:] = 0
-                    else:
-                        self.state = self._reset_row(self.state, b,
-                                                     req.prompt)
-                    self.slots[b] = req
-                    self.target[b] = len(req.prompt) + req.new_tokens
-            # one verify round for the whole batch
-            pre_calls = np.asarray(self.state.per_seq_calls).copy()
-            self.state = self.s._round(self.state,
-                                       jnp.asarray(self.target))
-            # harvest
-            n_host = np.asarray(self.state.n)
-            for b in range(B):
-                req = self.slots[b]
-                if req is not None and n_host[b] >= self.target[b]:
-                    toks = np.asarray(self.state.tokens[b, :n_host[b]])
-                    req.result = toks
-                    req.calls_used = int(
-                        np.asarray(self.state.per_seq_calls)[b]
-                        - pre_calls[b]) + int(pre_calls[b])
-                    self.done.append(req)
-                    self.slots[b] = None
-                    self.target[b] = 0
-            max_rounds -= 1
-            if max_rounds <= 0:
-                raise RuntimeError("scheduler did not converge")
-        return self.done
-
-
-def _batch_axis_index(x, B: int, b: int):
-    """Index tuple selecting batch row b, for leaves shaped (B, ...) or
-    (n_blocks, B, ...) (scanned segments)."""
-    if x.ndim >= 1 and x.shape[0] == B:
-        return (b,)
-    return (slice(None), b)
-
-
-def _adopt_row(old, new, B: int, b: int):
-    idx = _batch_axis_index(old, B, b)
-    return old.at[idx].set(new[idx])
+__all__ = ["Request", "ContinuousBatcher"]

@@ -37,16 +37,20 @@ from repro.models.transformer import TransformerLM
 
 
 def make_eps_fn(key, vocab: int):
-    """Deterministic per-(sequence, position) Gumbel noise function."""
-    def eps_fn(positions):
-        # positions: (B, W) absolute token positions
-        def one(b, row):
-            kb = jax.random.fold_in(key, b)
+    """Deterministic per-(noise stream, position) Gumbel noise function.
+
+    ``eps_fn(seq_ids, positions)`` — ``seq_ids (B,)`` names each row's noise
+    stream (a serving engine pins it to the request, so a request keeps its
+    stream across slots and batch shapes; a plain sampler uses the row index).
+    """
+    def eps_fn(seq_ids, positions):
+        # seq_ids: (B,); positions: (B, W) absolute token positions
+        def one(sid, row):
+            kb = jax.random.fold_in(key, sid)
             return jax.vmap(
                 lambda p: jax.random.gumbel(jax.random.fold_in(kb, p),
                                             (vocab,)))(row)
-        B = positions.shape[0]
-        return jax.vmap(one)(jnp.arange(B), positions)
+        return jax.vmap(one)(seq_ids, positions)
     return eps_fn
 
 
@@ -58,6 +62,7 @@ class GenState(NamedTuple):
     rounds: jnp.ndarray      # () total verify rounds (batch-level ARM calls)
     per_seq_calls: jnp.ndarray  # (B,) rounds in which the sequence was active
     accept_hist: jnp.ndarray    # (B,) total accepted tokens while active
+    seq_ids: jnp.ndarray        # (B,) noise-stream id per row (see make_eps_fn)
 
 
 class PredictiveSampler:
@@ -82,9 +87,10 @@ class PredictiveSampler:
         self._round = jax.jit(self._round_impl)
 
     # ------------------------------------------------------------------
-    def init_state(self, prompts, batch: int) -> GenState:
+    def init_state(self, prompts, batch: int, seq_ids=None) -> GenState:
         """prompts: (B, L_p) int (uniform prompt length for the state init;
-        ragged admission is handled by the ContinuousBatcher)."""
+        ragged admission is handled by the serving engine). ``seq_ids``
+        selects each row's noise stream (default: row index)."""
         cfg, W = self.cfg, self.W
         B, L_p = prompts.shape
         assert L_p >= 1
@@ -103,109 +109,33 @@ class PredictiveSampler:
         n = jnp.full((B,), L_p, jnp.int32)
         cand = jnp.zeros((B, W), jnp.int32)
         cand = cand.at[:, 0].set(prompts[:, -1])
+        if seq_ids is None:
+            seq_ids = jnp.arange(B, dtype=jnp.int32)
         return GenState(tokens, n, cand, cache,
                         jnp.zeros((), jnp.int32),
                         jnp.zeros((B,), jnp.int32),
-                        jnp.zeros((B,), jnp.int32))
+                        jnp.zeros((B,), jnp.int32),
+                        jnp.asarray(seq_ids, jnp.int32))
 
     # ------------------------------------------------------------------
     def _round_impl(self, state: GenState, target_len) -> GenState:
-        cfg, W = self.cfg, self.W
-        B = state.n.shape[0]
-        active = state.n < target_len
-
-        cache_len = state.n - 1
-        logits, h, new_cache = TransformerLM.decode_window(
-            self.params, cfg, state.cand, state.cache, cache_len)
-        out_pos = state.n[:, None] + jnp.arange(W)[None, :]   # sampled positions
-        eps = self.eps_fn(out_pos)
-        if self.use_verify_kernel:
-            from repro.kernels.spec_verify.ops import spec_verify
-            out = spec_verify(logits.astype(jnp.float32), eps)  # (B, W)
-        else:
-            out = reparam_argmax(logits.astype(jnp.float32), eps)
-
-        # accept length: slot t+1 valid while candidate c_{n+t} matched o_t
-        match = state.cand[:, 1:] == out[:, :-1]               # (B, W-1)
-        a = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
-        a = jnp.minimum(a, jnp.maximum(target_len - state.n, 1))
-        a = jnp.where(active, a, 0)
-
-        # write accepted tokens
-        pos = jnp.arange(self.max_len)[None, :]
-        newly = (pos >= state.n[:, None]) & (pos < (state.n + a)[:, None])
-        slot = jnp.clip(pos - state.n[:, None], 0, W - 1)
-        tokens = jnp.where(newly, jnp.take_along_axis(out, slot, axis=1),
-                           state.tokens)
-
-        n_new = state.n + a
-        # cache: adopt window writes; recurrent states at the accept point.
-        # Inactive rows must keep their old recurrent snapshot (a=0 -> the
-        # gather would fetch slot -1); clamp handles it because their cand
-        # window re-ran from the same snapshot: slot 0 state == snapshot
-        # after x_{n-1}... only true if cand[:,0] stayed x_{n-1} — it does.
-        sel = TransformerLM.select_states(cfg, new_cache,
-                                          jnp.maximum(a, 1))
-        cache = sel
-
-        # next window: slot0 = last accepted token; FPI forecasts = this
-        # round's outputs past the accept point (paper §2.3)
-        idx = (a - 1)[:, None] + jnp.arange(W)[None, :]        # (B, W)
-        fpi = jnp.take_along_axis(out, jnp.minimum(idx, W - 1), axis=1)
-        valid_fpi = idx <= (W - 1)
-        cand = jnp.where(valid_fpi, fpi, 0)
-
-        if self.use_forecast_heads:
-            from repro.core.forecasting import (TokenForecast,
-                                                TokenForecastConfig)
-            fcfg = TokenForecastConfig(cfg.d_model, cfg.vocab,
-                                       cfg.forecast_horizon,
-                                       cfg.forecast_hidden)
-            fc_logits = TokenForecast.apply(self.params["forecast"], h, fcfg)
-            # anchor slot a (uses h[a-1], the last fully-valid slot); offset
-            # j forecasts window slot a-1+j -> next-window slot j + ... we
-            # fill tail slots where FPI ran out (valid_fpi == False).
-            # anchor s=a reads h[a-1] (last fully-valid slot); its offset-t
-            # logits forecast window slot a+t... = position n_new-1+t, i.e.
-            # next-window slot s' uses offset t = s'.
-            anchor = jnp.minimum(a, W - 1)
-            fc_a = jnp.take_along_axis(
-                fc_logits, anchor[:, None, None, None], axis=1)[:, 0]  # (B,T,V)
-            T = cfg.forecast_horizon
-            s_idx = jnp.arange(W)
-            t_of_s = jnp.clip(s_idx, 0, T - 1)
-            eps_next = self.eps_fn(n_new[:, None] - 1 + s_idx[None, :])
-            fc_tok = reparam_argmax(
-                jnp.take_along_axis(
-                    fc_a, jnp.broadcast_to(t_of_s[None, :, None],
-                                           (B, W, 1)), axis=1),
-                eps_next)
-            use_fc = (~valid_fpi) & (s_idx[None, :] < T)
-            cand = jnp.where(use_fc, fc_tok, cand)
-
-        # slot 0 must be the last accepted token
-        last_tok = jnp.take_along_axis(tokens,
-                                       jnp.maximum(n_new - 1, 0)[:, None],
-                                       axis=1)[:, 0]
-        cand = cand.at[:, 0].set(last_tok)
-        cand = jnp.where(active[:, None], cand, state.cand)
-        n_new = jnp.where(active, n_new, state.n)
-        tokens = jnp.where(active[:, None], tokens, state.tokens)
-
-        return GenState(
-            tokens, n_new, cand, cache,
-            state.rounds + jnp.any(active).astype(jnp.int32),
-            state.per_seq_calls + active.astype(jnp.int32),
-            state.accept_hist + a,
-        )
+        return verify_round(self.params, self.cfg, self.eps_fn, state,
+                            target_len,
+                            use_forecast_heads=self.use_forecast_heads,
+                            use_verify_kernel=self.use_verify_kernel)
 
     # ------------------------------------------------------------------
-    def generate(self, prompts, new_tokens: int):
-        """Generate ``new_tokens`` per sequence. Returns (tokens, stats)."""
+    def generate(self, prompts, new_tokens: int, seq_ids=None):
+        """Generate ``new_tokens`` per sequence. Returns (tokens, stats).
+
+        ``seq_ids`` pins each row to a noise stream (default: row index) —
+        a serving engine replays the same stream to reproduce a request
+        bit-for-bit regardless of which batch slot served it."""
         B, L_p = prompts.shape
         target = jnp.full((B,), L_p + new_tokens, jnp.int32)
         assert L_p + new_tokens <= self.max_len
-        state = self.init_state(jnp.asarray(prompts, jnp.int32), B)
+        state = self.init_state(jnp.asarray(prompts, jnp.int32), B,
+                                seq_ids=seq_ids)
         while bool(jnp.any(state.n < target)):
             state = self._round(state, target)
         stats = {
@@ -216,3 +146,106 @@ class PredictiveSampler:
                 state.accept_hist / jnp.maximum(state.per_seq_calls, 1))),
         }
         return state.tokens, stats
+
+
+# ---------------------------------------------------------------------------
+# The verify round as a pure function (shared by PredictiveSampler and the
+# serving engine, which feeds it block-table cache views and variable W)
+# ---------------------------------------------------------------------------
+
+def verify_round(params, cfg, eps_fn, state: GenState, target_len,
+                 use_forecast_heads: bool = False,
+                 use_verify_kernel: bool = False) -> GenState:
+    """One verify round over ``state`` (dense cache view). W is taken from
+    ``state.cand.shape[1]`` so callers may vary the window round-to-round
+    (adaptive speculation): candidates only gate acceptance, never token
+    values, so any W yields the same accepted stream (DESIGN.md §3, §7)."""
+    B, W = state.cand.shape
+    max_len = state.tokens.shape[1]
+    active = state.n < target_len
+
+    cache_len = state.n - 1
+    logits, h, new_cache = TransformerLM.decode_window(
+        params, cfg, state.cand, state.cache, cache_len)
+    out_pos = state.n[:, None] + jnp.arange(W)[None, :]   # sampled positions
+    eps = eps_fn(state.seq_ids, out_pos)
+    if use_verify_kernel:
+        from repro.kernels.spec_verify.ops import spec_verify
+        out = spec_verify(logits.astype(jnp.float32), eps)  # (B, W)
+    else:
+        out = reparam_argmax(logits.astype(jnp.float32), eps)
+
+    # accept length: slot t+1 valid while candidate c_{n+t} matched o_t
+    match = state.cand[:, 1:] == out[:, :-1]               # (B, W-1)
+    a = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    a = jnp.minimum(a, jnp.maximum(target_len - state.n, 1))
+    a = jnp.where(active, a, 0)
+
+    # write accepted tokens
+    pos = jnp.arange(max_len)[None, :]
+    newly = (pos >= state.n[:, None]) & (pos < (state.n + a)[:, None])
+    slot = jnp.clip(pos - state.n[:, None], 0, W - 1)
+    tokens = jnp.where(newly, jnp.take_along_axis(out, slot, axis=1),
+                       state.tokens)
+
+    n_new = state.n + a
+    # cache: adopt window writes; recurrent states at the accept point.
+    # Inactive rows must keep their old recurrent snapshot (a=0 -> the
+    # gather would fetch slot -1); clamp handles it because their cand
+    # window re-ran from the same snapshot: slot 0 state == snapshot
+    # after x_{n-1}... only true if cand[:,0] stayed x_{n-1} — it does.
+    sel = TransformerLM.select_states(cfg, new_cache,
+                                      jnp.maximum(a, 1))
+    cache = sel
+
+    # next window: slot0 = last accepted token; FPI forecasts = this
+    # round's outputs past the accept point (paper §2.3)
+    idx = (a - 1)[:, None] + jnp.arange(W)[None, :]        # (B, W)
+    fpi = jnp.take_along_axis(out, jnp.minimum(idx, W - 1), axis=1)
+    valid_fpi = idx <= (W - 1)
+    cand = jnp.where(valid_fpi, fpi, 0)
+
+    if use_forecast_heads:
+        from repro.core.forecasting import (TokenForecast,
+                                            TokenForecastConfig)
+        fcfg = TokenForecastConfig(cfg.d_model, cfg.vocab,
+                                   cfg.forecast_horizon,
+                                   cfg.forecast_hidden)
+        fc_logits = TokenForecast.apply(params["forecast"], h, fcfg)
+        # anchor slot a (uses h[a-1], the last fully-valid slot); offset
+        # j forecasts window slot a-1+j -> next-window slot j + ... we
+        # fill tail slots where FPI ran out (valid_fpi == False).
+        # anchor s=a reads h[a-1] (last fully-valid slot); its offset-t
+        # logits forecast window slot a+t... = position n_new-1+t, i.e.
+        # next-window slot s' uses offset t = s'.
+        anchor = jnp.minimum(a, W - 1)
+        fc_a = jnp.take_along_axis(
+            fc_logits, anchor[:, None, None, None], axis=1)[:, 0]  # (B,T,V)
+        T = cfg.forecast_horizon
+        s_idx = jnp.arange(W)
+        t_of_s = jnp.clip(s_idx, 0, T - 1)
+        eps_next = eps_fn(state.seq_ids, n_new[:, None] - 1 + s_idx[None, :])
+        fc_tok = reparam_argmax(
+            jnp.take_along_axis(
+                fc_a, jnp.broadcast_to(t_of_s[None, :, None],
+                                       (B, W, 1)), axis=1),
+            eps_next)
+        use_fc = (~valid_fpi) & (s_idx[None, :] < T)
+        cand = jnp.where(use_fc, fc_tok, cand)
+
+    # slot 0 must be the last accepted token
+    last_tok = jnp.take_along_axis(tokens,
+                                   jnp.maximum(n_new - 1, 0)[:, None],
+                                   axis=1)[:, 0]
+    cand = cand.at[:, 0].set(last_tok)
+    cand = jnp.where(active[:, None], cand, state.cand)
+    n_new = jnp.where(active, n_new, state.n)
+    tokens = jnp.where(active[:, None], tokens, state.tokens)
+
+    return GenState(
+        tokens, n_new, cand, cache,
+        state.rounds + jnp.any(active).astype(jnp.int32),
+        state.per_seq_calls + active.astype(jnp.int32),
+        state.accept_hist + a,
+        state.seq_ids,
+    )

@@ -1,6 +1,10 @@
-"""Serving launcher: predictive-sampling generation with continuous batching.
+"""Serving launcher: predictive sampling through the paged serving runtime.
 
 ``python -m repro.launch.serve --arch qwen3-1.7b --reduced --requests 6``
+
+Drives ``repro.serving.ServingEngine`` (paged KV blocks, prefix cache,
+adaptive speculation window, telemetry). ``--no-adaptive`` pins the window;
+``--no-prefix-cache`` disables block sharing.
 
 Also exports ``make_serve_step`` — the W-token verify step the multi-pod
 dry-run lowers for the decode shapes (decode_32k / long_500k).
@@ -8,6 +12,7 @@ dry-run lowers for the decode shapes (decode_32k / long_500k).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,8 +21,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.reparam import reparam_argmax
-from repro.engine import ContinuousBatcher, PredictiveSampler, Request
 from repro.models.transformer import TransformerLM
+from repro.serving import Request, ServingEngine
 
 
 def make_serve_step(cfg, window: int = 8, low_memory: bool = False):
@@ -57,35 +62,48 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--window", type=int, default=8,
+                    help="max verify window W (adaptive controller's bound)")
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV-cache block size (tokens per physical block)")
+    ap.add_argument("--no-adaptive", action="store_true",
+                    help="pin W instead of adapting it to acceptance")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
-    sampler = PredictiveSampler(cfg, params, window=args.window,
-                                max_len=args.max_len,
-                                eps_key=jax.random.PRNGKey(1))
-    batcher = ContinuousBatcher(sampler, batch=args.batch)
+    engine = ServingEngine(cfg, params, batch=args.batch,
+                           window_max=args.window, max_len=args.max_len,
+                           eps_key=jax.random.PRNGKey(1),
+                           block_size=args.block_size,
+                           adaptive=not args.no_adaptive,
+                           prefix_cache=not args.no_prefix_cache)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        batcher.submit(Request(
+        engine.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab,
                                        size=int(rng.integers(2, 8))),
             new_tokens=args.new_tokens))
     t0 = time.time()
-    done = batcher.run()
+    done = engine.run()
     dt = time.time() - t0
-    total_rounds = int(np.asarray(batcher.state.rounds))
+    m = engine.export_metrics()
     total_new = sum(r.new_tokens for r in done)
     print(f"served {len(done)} requests / {total_new} tokens "
-          f"in {total_rounds} verify rounds ({dt:.1f}s)")
+          f"in {m['rounds']} verify rounds ({dt:.1f}s)")
     print(f"ARM calls vs ancestral baseline: "
-          f"{100.0 * total_rounds / total_new:.1f}% "
-          f"(continuous batching + window={args.window})")
+          f"{100.0 * m['arm_calls_vs_ancestral']:.1f}% "
+          f"(paged engine, W<= {args.window}, "
+          f"adaptive={not args.no_adaptive})")
+    print("telemetry: " + json.dumps(
+        {k: (round(v, 4) if isinstance(v, float) else v)
+         for k, v in m.items()}, indent=2))
     for r in done[:3]:
-        print(f"  req {r.uid}: calls={r.calls_used} tokens={r.result[:12]}…")
+        print(f"  req {r.uid}: calls={r.calls_used} "
+              f"prefill={r.prefill_calls} tokens={r.result[:12]}…")
 
 
 if __name__ == "__main__":

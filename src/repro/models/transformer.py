@@ -404,6 +404,132 @@ class TransformerLM:
         logits = TransformerLM._head(params, cfg, h)
         return logits, h, new_cache
 
+    # -- paged (block-table) cache access ------------------------------------
+    #
+    # The serving runtime stores attention K/V (and MLA latents) in fixed-size
+    # blocks of a shared physical pool instead of dense per-slot buffers:
+    # leaf (B, S, ...) becomes (P, block_size, ...) plus a per-sequence block
+    # table (B, S / block_size) of physical ids. Physical block 0 is reserved
+    # as a write sink for masked scatter lanes and unallocated table entries —
+    # its contents are garbage by design and are never read unmasked
+    # (DESIGN.md §6). Recurrent mixer states (Mamba/RWKV) are tiny per-slot
+    # snapshots, not paged; they stay batch-indexed.
+
+    @staticmethod
+    def _map_paged(cfg: ModelConfig, caches, fn_attn, fn_rec):
+        """Walk one or more cache-shaped pytrees in lockstep, applying
+        ``fn_attn(stacked, *leaves)`` to attention cache leaves and
+        ``fn_rec(stacked, *leaves)`` to recurrent state leaves."""
+        def per_layer(spec, entries, stacked):
+            mixer, ffn = spec
+            out = {}
+            if mixer in ("attn", "local", "mla"):
+                out["mixer"] = jax.tree.map(
+                    lambda *ls: fn_attn(stacked, *ls),
+                    *[e["mixer"] for e in entries])
+            elif mixer in ("mamba", "rwkv"):
+                out["mixer"] = jax.tree.map(
+                    lambda *ls: fn_rec(stacked, *ls),
+                    *[e["mixer"] for e in entries])
+            if ffn == "rwkv_cmix":
+                out["ffn"] = jax.tree.map(
+                    lambda *ls: fn_rec(stacked, *ls),
+                    *[e["ffn"] for e in entries])
+            return out
+
+        res = {"prefix": [per_layer(s, [c["prefix"][i] for c in caches],
+                                    False)
+                          for i, s in enumerate(cfg.layer_prefix)],
+               "suffix": [per_layer(s, [c["suffix"][i] for c in caches],
+                                    False)
+                          for i, s in enumerate(cfg.layer_suffix)]}
+        if cfg.n_blocks:
+            res["blocks"] = [per_layer(s, [c["blocks"][i] for c in caches],
+                                       True)
+                             for i, s in enumerate(cfg.layer_block)]
+        return res
+
+    @staticmethod
+    def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                         block_size: int, dtype=None):
+        """Physical block pool: attention leaves (num_blocks, block_size, ...)
+        (scanned segments keep their leading layer axis); recurrent state
+        leaves stay (batch, ...) slot-indexed."""
+        dtype = dtype or cfg.param_dtype
+        tmpl = TransformerLM.init_cache(cfg, batch, block_size, dtype)
+
+        def attn(stacked, leaf):
+            if stacked:
+                return jnp.zeros((leaf.shape[0], num_blocks)
+                                 + leaf.shape[2:], leaf.dtype)
+            return jnp.zeros((num_blocks,) + leaf.shape[1:], leaf.dtype)
+
+        return TransformerLM._map_paged(cfg, (tmpl,), attn,
+                                        lambda stacked, leaf: leaf)
+
+    @staticmethod
+    def gather_paged(cfg: ModelConfig, paged, tables, rows):
+        """Materialize a dense cache view for ``decode_window``.
+
+        tables: (R, nb) physical block ids per view row; rows: (R,) batch
+        slots (selects recurrent states). View sequence length is
+        ``nb * block_size``; table entries past a sequence's allocation point
+        at block 0 — those positions are causally masked, so its garbage
+        contents never reach an unmasked lane."""
+        def attn(stacked, leaf):
+            if stacked:
+                g = leaf[:, tables]                    # (L, R, nb, bs, ...)
+                return g.reshape((g.shape[0], g.shape[1],
+                                  g.shape[2] * g.shape[3]) + g.shape[4:])
+            g = leaf[tables]                           # (R, nb, bs, ...)
+            return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
+                             + g.shape[3:])
+
+        def rec(stacked, leaf):
+            return leaf[:, rows] if stacked else leaf[rows]
+
+        return TransformerLM._map_paged(cfg, (paged,), attn, rec)
+
+    @staticmethod
+    def scatter_paged(cfg: ModelConfig, paged, dense_new, tables, rows,
+                      start, width: int, active):
+        """Write a dense view's ``[start, start + width)`` positions back into
+        the physical pool. Only blocks intersecting the written span are
+        touched; lanes of inactive rows (and slots past the span) are routed
+        to the reserved sink block 0. Recurrent state leaves are adopted
+        unconditionally for every view row (mirrors the dense engine, where
+        an inactive row's re-run reproduces its snapshot bit-for-bit)."""
+        R, nb = tables.shape
+
+        def attn(stacked, pleaf, dleaf):
+            bs = pleaf.shape[2] if stacked else pleaf.shape[1]
+            # max physical blocks a width-wide span can straddle
+            T = (width + bs - 2) // bs + 1
+            slots = start[:, None] // bs + jnp.arange(T)[None, :]   # (R, T)
+            last = (start + width - 1) // bs
+            valid = ((slots <= last[:, None]) & (slots < nb)
+                     & active[:, None])
+            slots_c = jnp.clip(slots, 0, nb - 1)
+            phys = tables[jnp.arange(R)[:, None], slots_c]
+            phys = jnp.where(valid, phys, 0)
+            if stacked:
+                L = dleaf.shape[0]
+                dv = dleaf.reshape((L, R, nb, bs) + dleaf.shape[3:])
+                vals = dv[:, jnp.arange(R)[:, None], slots_c]
+                return pleaf.at[:, phys.reshape(-1)].set(
+                    vals.reshape((L, R * T, bs) + vals.shape[4:]))
+            dv = dleaf.reshape((R, nb, bs) + dleaf.shape[2:])
+            vals = dv[jnp.arange(R)[:, None], slots_c]      # (R, T, bs, ...)
+            return pleaf.at[phys.reshape(-1)].set(
+                vals.reshape((R * T, bs) + vals.shape[3:]))
+
+        def rec(stacked, pleaf, dleaf):
+            if stacked:
+                return pleaf.at[:, rows].set(dleaf)
+            return pleaf.at[rows].set(dleaf)
+
+        return TransformerLM._map_paged(cfg, (paged, dense_new), attn, rec)
+
     @staticmethod
     def select_states(cfg: ModelConfig, new_cache, accept_idx):
         """Adopt the verify outputs: attention buffers are taken as-is (the

@@ -1,0 +1,15 @@
+"""Paged KV-cache serving runtime with adaptive speculation and telemetry.
+
+See DESIGN.md §6-8 and ``repro.serving.engine.ServingEngine`` for the
+architecture; ``repro.engine.ContinuousBatcher`` remains as a thin
+compatibility alias over this subsystem.
+"""
+from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
+from repro.serving.adaptive import AdaptiveWindowController
+from repro.serving.blocks import BlockManager, chain_hashes
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import EngineMetrics, percentile
+
+__all__ = ["AdmissionQueue", "Request", "prefill_chunks",
+           "AdaptiveWindowController", "BlockManager", "chain_hashes",
+           "ServingEngine", "EngineMetrics", "percentile"]

@@ -1,0 +1,86 @@
+"""Acceptance-driven adaptive speculation window (DESIGN.md §7).
+
+The verify window W is the engine's one speculation knob: each round costs
+one ARM pass over W positions and yields ``a in [1, W]`` accepted tokens.
+On weakly-coupled (repetitive) streams acceptance saturates the window and a
+deep W amortizes the pass over many tokens; on strongly-coupled streams
+acceptance hugs 1 and every extra slot is wasted compute (the paper's §2.4
+cascading-errors regime). Wiggers & Hoogeboom fix W offline; Yoo et al.'s
+confidence-guided sampling (PAPERS.md) motivates adapting depth online — and
+since predictive sampling's acceptance is *exact* (not a heuristic draft
+score), the observed accept length is the natural control signal.
+
+The controller tracks an EWMA of per-round mean accept lengths and proposes
+``W = clip(round(headroom * ewma), 1, w_max)`` quantized to powers of two, so
+a serving engine compiles at most ``log2(w_max) + 1`` round shapes. Hysteresis
+(a proposal must repeat ``patience`` rounds before adoption) keeps the window
+from thrashing between adjacent shapes. Exactness is indifferent to W —
+candidates gate only acceptance, never token values — so the controller can
+retune freely mid-request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def _pow2_at_most(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+@dataclass
+class AdaptiveWindowController:
+    w_max: int = 16
+    w_init: int = 0              # 0 -> start at w_max (optimistic)
+    alpha: float = 0.3           # EWMA weight of the newest observation
+    headroom: float = 1.7        # W targets headroom * expected accept
+    patience: int = 2            # rounds a proposal must persist
+    enabled: bool = True
+
+    def __post_init__(self):
+        assert self.w_max >= 1
+        if self.w_init <= 0:
+            self._w = self.w_max       # optimistic start at the bound
+        else:
+            # pin to the grid: pow2 rungs plus w_max itself
+            w = min(self.w_init, self.w_max)
+            self._w = w if w == self.w_max else _pow2_at_most(w)
+        self._ewma = float(self._w)   # optimistic: assume the window fills
+        self._pending = self._w
+        self._streak = 0
+        self.history: list[int] = []
+
+    @property
+    def window(self) -> int:
+        return self._w
+
+    @property
+    def ewma_accept(self) -> float:
+        return self._ewma
+
+    def observe(self, accepts) -> int:
+        """Feed this round's accept lengths (active rows only); returns the
+        window to use next round."""
+        accepts = np.asarray(accepts, np.float64)
+        self.history.append(self._w)
+        if not self.enabled or accepts.size == 0:
+            return self._w
+        self._ewma += self.alpha * (float(accepts.mean()) - self._ewma)
+        want = int(np.clip(round(self.headroom * self._ewma), 1, self.w_max))
+        # quantize to the pow2 grid (plus w_max itself as the top rung),
+        # rounding up: the next rung above a pow2 is its double, capped at
+        # the w_max rung itself
+        prop = _pow2_at_most(want)
+        if want > prop:
+            prop = min(prop * 2, self.w_max)
+        if prop == self._pending:
+            self._streak += 1
+        else:
+            self._pending, self._streak = prop, 1
+        if self._streak >= self.patience and prop != self._w:
+            self._w = prop
+        return self._w

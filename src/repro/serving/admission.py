@@ -1,0 +1,91 @@
+"""Request admission: priority/FCFS queueing for the serving engine.
+
+The queue orders by ``(priority, arrival_seq)`` — lower priority value first,
+FIFO within a class — and admits a request only when the engine has both a
+free batch slot and enough physical blocks to cover its prompt plus its full
+generation target (admission control, not mid-flight preemption: a request
+admitted here can always run to completion).
+
+Prefill itself is *row-local and chunked* (DESIGN.md §6): the admitted row's
+blocks are gathered into a batch-1 cache view and the un-cached tail of the
+prompt is pushed through ``decode_window`` in power-of-two chunks, so
+admitting one request never pays a full-batch forward pass (the seed
+``ContinuousBatcher`` re-ran the whole batch per admission chunk).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (L_p,) int
+    new_tokens: int
+    priority: int = 0            # lower = sooner (FCFS within a class)
+    noise_seed: Optional[int] = None   # noise-stream id; defaults to uid
+    result: Optional[np.ndarray] = None
+    calls_used: int = 0          # verify rounds this request participated in
+    prefill_calls: int = 0       # row-local prefill chunks paid at admission
+    prefix_hit_blocks: int = 0   # prompt blocks served from the prefix cache
+    submit_time: float = 0.0
+    admit_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def seq_id(self) -> int:
+        return self.uid if self.noise_seed is None else self.noise_seed
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.submit_time
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit_time - self.submit_time
+
+
+def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
+    """Greedy power-of-two cover of ``length`` positions (largest first).
+
+    Bounds distinct compiled prefill widths to ``log2(max_chunk) + 1``
+    while covering any prompt length exactly (no padding writes).
+    """
+    out, c = [], max_chunk
+    while length > 0:
+        while c > length:
+            c //= 2
+        out.append(c)
+        length -= c
+    return out
+
+
+class AdmissionQueue:
+    """Priority + FCFS admission queue with simple occupancy accounting."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, req: Request):
+        req.submit_time = time.monotonic()
+        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+
+    def pop(self) -> Request:
+        _, _, req = heapq.heappop(self._heap)
+        return req
+
+    def peek(self) -> Optional[Request]:
+        return self._heap[0][2] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,331 @@
+"""`ServingEngine`: paged predictive-sampling serving runtime (DESIGN.md §6-8).
+
+Subsumes the seed ``ContinuousBatcher`` (kept as a thin alias in
+``repro.engine.scheduler``): requests are admitted from a priority/FCFS queue
+into free slots of a fixed-width batch, every verify round advances each
+sequence by its own accept length, and finished sequences free their slot and
+blocks immediately. What's new over the dense batcher:
+
+* **Paged KV cache** — attention K/V lives in fixed-size blocks of a shared
+  physical pool (``TransformerLM.init_paged_cache``); per-sequence block
+  tables are gathered into dense views for ``decode_window`` and only the
+  window-touched blocks are scattered back. Admission allocates blocks
+  instead of zeroing a whole cache row.
+* **Prefix cache** — full prompt blocks are content-hashed (chained keys);
+  admissions sharing a prompt prefix point their tables at the cached blocks
+  and skip recomputing them (attention-only models; recurrent stacks carry
+  un-paged per-slot state, so they always prefill — see ``_has_recurrent``).
+* **Row-local chunked prefill** — an admitted row prefills through batch-1
+  windows over its own blocks; nothing scales with the batch width.
+* **Adaptive speculation** — the verify window W is retuned per round from
+  the observed accept-length EWMA (``AdaptiveWindowController``), bounded to
+  powers of two in ``[1, w_max]`` so at most ``log2(w_max)+1`` round shapes
+  compile.
+* **Telemetry** — per-request latency/accept/ARM-call counters and engine
+  gauges exported as plain dicts (``EngineMetrics``).
+
+Exactness: every path emits tokens bit-identical to a per-request
+``PredictiveSampler.generate`` run with the same eps key and noise-stream id
+(``Request.seq_id``) — asserted in tests/serving/test_engine.py.
+"""
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.spec_decode import GenState, make_eps_fn, verify_round
+from repro.models.transformer import TransformerLM
+from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
+from repro.serving.adaptive import AdaptiveWindowController
+from repro.serving.blocks import BlockManager
+from repro.serving.metrics import EngineMetrics
+
+
+def _has_recurrent(cfg) -> bool:
+    return any(m in ("mamba", "rwkv") or f == "rwkv_cmix"
+               for m, f in cfg.layer_specs())
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, batch: int, window_max: int = 8,
+                 max_len: int = 256, eps_key=None, eps_fn=None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 adaptive: bool = True, window_init: int = 0,
+                 prefix_cache: bool = True, prefill_chunk: int = 64,
+                 use_forecast_heads: bool = False,
+                 use_verify_kernel: bool = False):
+        assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
+        assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
+        self.cfg = cfg
+        self.params = params
+        self.B = batch
+        self.W_max = window_max
+        self.max_len = max_len
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.use_forecast_heads = (use_forecast_heads
+                                   and "forecast" in params
+                                   and cfg.forecast_horizon > 0)
+        self.use_verify_kernel = use_verify_kernel
+        self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
+            eps_key if eps_key is not None else jax.random.PRNGKey(0),
+            cfg.vocab)
+
+        # ---- paged cache ------------------------------------------------
+        self.nb = -(-(max_len + window_max) // block_size)  # table width
+        if num_blocks is None:
+            # full occupancy + slack so unreferenced prefix blocks survive
+            num_blocks = 1 + batch * self.nb + 2 * self.nb
+        self.blocks = BlockManager(num_blocks, block_size)
+        self.paged = TransformerLM.init_paged_cache(
+            cfg, batch, num_blocks, block_size, dtype=cfg.param_dtype)
+        self.tables = np.zeros((batch, self.nb), np.int32)
+        self.owned: list[list[int]] = [[] for _ in range(batch)]
+        # prefix-cache hits need the post-prefix recurrent state too, which
+        # is per-slot (not paged) — so recurrent stacks always prefill
+        self.prefix_enabled = prefix_cache and not _has_recurrent(cfg)
+
+        # ---- control / telemetry ---------------------------------------
+        self.controller = AdaptiveWindowController(
+            w_max=window_max, w_init=window_init, enabled=adaptive)
+        self.metrics = EngineMetrics()
+        self.queue = AdmissionQueue()
+        self.slots: list[Optional[Request]] = [None] * batch
+        self.done: list[Request] = []
+        self.target = np.zeros(batch, np.int64)
+        # worst-case block need reserved per slot at admission (run-to-
+        # completion guarantee: lazy growth may never exhaust the pool)
+        self.reserved = np.zeros(batch, np.int64)
+
+        # ---- per-slot device state -------------------------------------
+        self.tokens = jnp.zeros((batch, max_len), jnp.int32)
+        self.n = jnp.ones((batch,), jnp.int32)          # cleared-row sentinel
+        self.cand = jnp.zeros((batch, window_max), jnp.int32)
+        self.seq_ids = jnp.zeros((batch,), jnp.int32)
+
+        self._round_fns: dict[int, callable] = {}
+        self._prefill_fns: dict[int, callable] = {}
+
+    # -- seed-API compatibility -------------------------------------------
+    @property
+    def state(self):
+        """Seed ``ContinuousBatcher`` exposed ``state.rounds``; preserved."""
+        return SimpleNamespace(rounds=self.metrics.rounds, n=self.n,
+                               tokens=self.tokens)
+
+    def submit(self, req: Request):
+        assert len(req.prompt) >= 1
+        assert len(req.prompt) + req.new_tokens <= self.max_len, \
+            (len(req.prompt), req.new_tokens, self.max_len)
+        self.queue.push(req)
+
+    # -- jitted steps -------------------------------------------------------
+    def _round_fn(self, W: int):
+        if W not in self._round_fns:
+            cfg, B = self.cfg, self.B
+
+            def fn(params, paged, tables, tokens, n, cand, seq_ids, target):
+                rows = jnp.arange(B)
+                view = TransformerLM.gather_paged(cfg, paged, tables, rows)
+                st = GenState(tokens, n, cand[:, :W], view,
+                              jnp.zeros((), jnp.int32),
+                              jnp.zeros((B,), jnp.int32),
+                              jnp.zeros((B,), jnp.int32), seq_ids)
+                st2 = verify_round(
+                    params, cfg, self.eps_fn, st, target,
+                    use_forecast_heads=self.use_forecast_heads,
+                    use_verify_kernel=self.use_verify_kernel)
+                active = n < target
+                paged2 = TransformerLM.scatter_paged(
+                    cfg, paged, st2.cache, tables, rows,
+                    jnp.maximum(n - 1, 0), W, active)
+                cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
+                return paged2, st2.tokens, st2.n, cand2, st2.n - n
+
+            self._round_fns[W] = jax.jit(fn)
+        return self._round_fns[W]
+
+    def _prefill_fn(self, C: int):
+        if C not in self._prefill_fns:
+            cfg = self.cfg
+
+            def fn(params, paged, table_row, row, chunk, start):
+                view = TransformerLM.gather_paged(cfg, paged, table_row, row)
+                _, _, nc = TransformerLM.decode_window(
+                    params, cfg, chunk, view, start)
+                sel = TransformerLM.select_states(
+                    cfg, nc, jnp.full((1,), C, jnp.int32))
+                return TransformerLM.scatter_paged(
+                    cfg, paged, sel, table_row, row, start, C,
+                    jnp.ones((1,), bool))
+
+            self._prefill_fns[C] = jax.jit(fn)
+        return self._prefill_fns[C]
+
+    # -- slot / block plumbing ---------------------------------------------
+    def _ensure_capacity(self, b: int, upto_pos: int):
+        """Grow slot ``b``'s block table to cover positions [0, upto_pos)."""
+        need = -(-upto_pos // self.block_size)
+        assert need <= self.nb, (need, self.nb)
+        while len(self.owned[b]) < need:
+            blk = self.blocks.alloc(1)[0]
+            self.tables[b, len(self.owned[b])] = blk
+            self.owned[b].append(blk)
+
+    def _clear_row(self, b: int):
+        """Reset a released slot so its (inactive) lane reads no stale or
+        garbage cache positions: n=1, cache_len=0 -> only its own window."""
+        self.blocks.release_all(self.owned[b])
+        self.owned[b] = []
+        self.tables[b] = 0
+        self.target[b] = 0
+        self.reserved[b] = 0
+        self.tokens = self.tokens.at[b].set(0)
+        self.n = self.n.at[b].set(1)
+        self.cand = self.cand.at[b].set(0)
+
+    def _reset_recurrent_row(self, b: int):
+        def rec(stacked, leaf):
+            return leaf.at[:, b].set(0) if stacked else leaf.at[b].set(0)
+
+        self.paged = TransformerLM._map_paged(
+            self.cfg, (self.paged,), lambda stacked, leaf: leaf, rec)
+
+    # -- admission -----------------------------------------------------------
+    def _worst_case_blocks(self, req: Request) -> int:
+        # every prompt+generation block a fresh allocation, window at W_max
+        return -(-(len(req.prompt) + req.new_tokens + self.W_max)
+                 // self.block_size)
+
+    def _outstanding_reservations(self) -> int:
+        """Blocks already promised to in-flight slots but not yet allocated
+        (their tables grow lazily as n advances)."""
+        return int(sum(max(0, int(self.reserved[b]) - len(self.owned[b]))
+                       for b in range(self.B) if self.slots[b] is not None))
+
+    def _can_admit(self, req: Request) -> bool:
+        return (self.blocks.available() - self._outstanding_reservations()
+                >= self._worst_case_blocks(req))
+
+    def _admit(self, req: Request, b: int):
+        req.admit_time = time.monotonic()
+        prompt = np.asarray(req.prompt, np.int64)
+        L_p = len(prompt)
+
+        # prefix-cache: reuse full blocks strictly below position L_p - 1
+        # (the verify window rewrites position n-1 = L_p-1 onward, so those
+        # blocks stay read-only and shareable)
+        hits, keys = [], []
+        nb_full = (L_p - 1) // self.block_size
+        if self.prefix_enabled and nb_full:
+            hits, keys = self.blocks.lookup_prefix(prompt, nb_full)
+        req.prefix_hit_blocks = len(hits)
+        self.owned[b] = list(hits)
+        self.tables[b] = 0
+        self.tables[b, :len(hits)] = hits
+        self._ensure_capacity(b, L_p)
+
+        # per-slot state
+        self.tokens = self.tokens.at[b].set(0).at[b, :L_p].set(
+            jnp.asarray(prompt, jnp.int32))
+        self.n = self.n.at[b].set(L_p)
+        self.cand = self.cand.at[b].set(0).at[b, 0].set(int(prompt[-1]))
+        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        if _has_recurrent(self.cfg):
+            self._reset_recurrent_row(b)
+
+        # chunked row-local prefill of the un-cached prompt tail
+        start = len(hits) * self.block_size
+        table_row = jnp.asarray(self.tables[b:b + 1])
+        row = jnp.asarray([b], jnp.int32)
+        for C in prefill_chunks(L_p - 1 - start, self.prefill_chunk):
+            chunk = jnp.asarray(prompt[None, start:start + C], jnp.int32)
+            self.paged = self._prefill_fn(C)(
+                self.params, self.paged, table_row, row, chunk,
+                jnp.asarray([start], jnp.int32))
+            start += C
+            req.prefill_calls += 1
+            self.metrics.prefill_calls += 1
+
+        # publish this prompt's freshly computed full blocks
+        if self.prefix_enabled:
+            for j in range(len(hits), nb_full):
+                self.blocks.register(self.owned[b][j], keys[j])
+
+        self.slots[b] = req
+        self.target[b] = L_p + req.new_tokens
+        self.reserved[b] = self._worst_case_blocks(req)
+
+    # -- main loop -----------------------------------------------------------
+    def step(self) -> bool:
+        """Admit what fits, run one verify round, harvest finished requests.
+        Returns True while there is (or may be) work left."""
+        for b in range(self.B):
+            if self.slots[b] is None and self.queue:
+                nxt = self.queue.peek()
+                if not self._can_admit(nxt):
+                    break
+                self._admit(self.queue.pop(), b)
+
+        if not any(s is not None for s in self.slots):
+            if self.queue:
+                raise MemoryError(
+                    "admission deadlock: queued request cannot fit an empty "
+                    "engine (prompt+target exceeds the block pool)")
+            return False
+
+        W = self.controller.window
+        target_dev = jnp.asarray(self.target, jnp.int32)
+        for b in range(self.B):
+            if self.slots[b] is not None:
+                self._ensure_capacity(b, int(self.target[b]) + W)
+        n_before = np.asarray(self.n)
+        (self.paged, self.tokens, self.n, self.cand, a_dev) = \
+            self._round_fn(W)(self.params, self.paged,
+                              jnp.asarray(self.tables), self.tokens,
+                              self.n, self.cand, self.seq_ids, target_dev)
+        a = np.asarray(a_dev)
+        n_host = np.asarray(self.n)
+
+        active_rows = [b for b in range(self.B)
+                       if self.slots[b] is not None
+                       and n_before[b] < self.target[b]]
+        for b in active_rows:
+            self.slots[b].calls_used += 1
+        self.metrics.observe_round(W, len(active_rows), self.B,
+                                   int(a[active_rows].sum())
+                                   if active_rows else 0)
+        self.controller.observe(a[active_rows])
+
+        for b in range(self.B):
+            req = self.slots[b]
+            if req is not None and n_host[b] >= self.target[b]:
+                req.result = np.asarray(self.tokens[b, :n_host[b]])
+                req.finish_time = time.monotonic()
+                self.metrics.observe_finish(req)
+                self.done.append(req)
+                self.slots[b] = None
+                self._clear_row(b)
+        return True
+
+    def run(self, max_rounds: int = 10_000) -> list[Request]:
+        """Drain the queue; returns completed Requests with stats."""
+        while self.queue or any(s is not None for s in self.slots):
+            if not self.step():
+                break
+            max_rounds -= 1
+            if max_rounds <= 0:
+                raise RuntimeError("serving engine did not converge")
+        return self.done
+
+    # -- telemetry -----------------------------------------------------------
+    def export_metrics(self) -> dict:
+        out = self.metrics.export(self.blocks.stats.export())
+        out["blocks_in_use"] = self.blocks.blocks_in_use()
+        out["blocks_available"] = self.blocks.available()
+        return out

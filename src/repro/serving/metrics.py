@@ -1,0 +1,82 @@
+"""Serving telemetry: per-request and engine-level counters as plain dicts.
+
+No external metrics dependency — everything exports to ``dict`` so callers
+can feed dashboards, benchmark tables, or test assertions directly. The
+engine updates these from values it already syncs to host each round, so
+telemetry adds no extra device round-trips.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def percentile(values, p: float) -> float:
+    """p in [0, 100]; 0.0 on empty input (missing-data sentinel)."""
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return 0.0
+    return float(np.percentile(np.asarray(vals, np.float64), p))
+
+
+@dataclass
+class EngineMetrics:
+    rounds: int = 0                      # batch-level verify rounds (ARM calls)
+    prefill_calls: int = 0               # row-local prefill chunk passes
+    tokens_generated: int = 0
+    tokens_accepted_hist: list = field(default_factory=list)  # per-round sums
+    occupancy_hist: list = field(default_factory=list)        # active/B per round
+    window_hist: list = field(default_factory=list)           # W per round
+    requests_finished: int = 0
+    request_latencies: list = field(default_factory=list)
+    request_queue_waits: list = field(default_factory=list)
+    request_calls: list = field(default_factory=list)         # rounds/request
+    request_new_tokens: list = field(default_factory=list)
+
+    def observe_round(self, window: int, active: int, batch: int,
+                      accepted: int):
+        self.rounds += 1
+        self.window_hist.append(int(window))
+        self.occupancy_hist.append(active / batch if batch else 0.0)
+        self.tokens_accepted_hist.append(int(accepted))
+        self.tokens_generated += int(accepted)
+
+    def observe_finish(self, req):
+        self.requests_finished += 1
+        self.request_latencies.append(req.latency)
+        self.request_queue_waits.append(req.queue_wait)
+        self.request_calls.append(req.calls_used)
+        self.request_new_tokens.append(req.new_tokens)
+
+    def export(self, block_stats: dict | None = None) -> dict:
+        calls = np.asarray(self.request_calls, np.float64)
+        new = np.asarray(self.request_new_tokens, np.float64)
+        out = {
+            "rounds": self.rounds,
+            "prefill_calls": self.prefill_calls,
+            "tokens_generated": self.tokens_generated,
+            "requests_finished": self.requests_finished,
+            "mean_accept_per_round": (
+                float(np.mean(self.tokens_accepted_hist))
+                if self.tokens_accepted_hist else 0.0),
+            "mean_batch_occupancy": (
+                float(np.mean(self.occupancy_hist))
+                if self.occupancy_hist else 0.0),
+            "mean_window": (float(np.mean(self.window_hist))
+                            if self.window_hist else 0.0),
+            "window_final": self.window_hist[-1] if self.window_hist else 0,
+            "arm_calls_per_request_mean": (
+                float(calls.mean()) if calls.size else 0.0),
+            # < 1.0 means speculation beat ancestral decode
+            "arm_calls_vs_ancestral": (
+                float((calls / np.maximum(new, 1)).mean())
+                if calls.size else 0.0),
+            "latency_p50_s": percentile(self.request_latencies, 50),
+            "latency_p95_s": percentile(self.request_latencies, 95),
+            "queue_wait_p50_s": percentile(self.request_queue_waits, 50),
+            "queue_wait_p95_s": percentile(self.request_queue_waits, 95),
+        }
+        if block_stats:
+            out.update(block_stats)
+        return out

@@ -1,0 +1,63 @@
+"""AdaptiveWindowController: widens on saturated acceptance, narrows toward
+ancestral on accept~1 streams, stays in [1, w_max] on the pow2 grid."""
+import numpy as np
+
+from repro.serving.adaptive import AdaptiveWindowController
+from repro.serving.admission import prefill_chunks
+
+
+def test_widens_on_saturated_acceptance():
+    c = AdaptiveWindowController(w_max=16, w_init=2)
+    for _ in range(10):
+        c.observe(np.full(4, c.window))     # window always fully accepted
+    assert c.window == 16
+
+
+def test_narrows_to_near_ancestral_on_hard_stream():
+    c = AdaptiveWindowController(w_max=16)
+    assert c.window == 16                   # optimistic start
+    for _ in range(20):
+        c.observe(np.ones(4))               # accept length 1 every round
+    assert c.window <= 2                    # degraded to ~ancestral cost
+
+
+def test_bounds_and_grid():
+    c = AdaptiveWindowController(w_max=12, w_init=5)
+    seen = set()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        seen.add(c.observe(rng.uniform(1, 12, size=3)))
+    assert all(1 <= w <= 12 for w in seen)
+    for w in seen:
+        assert w == 12 or (w & (w - 1)) == 0   # pow2 grid + w_max rung
+
+
+def test_saturating_acceptance_reaches_non_pow2_w_max():
+    """The top rung is w_max itself even when it is not a power of two."""
+    c = AdaptiveWindowController(w_max=12, w_init=4, headroom=1.7)
+    for _ in range(10):
+        c.observe(np.full(4, c.window))     # window always fully accepted
+    assert c.window == 12
+
+
+def test_disabled_controller_pins_window():
+    c = AdaptiveWindowController(w_max=8, w_init=8, enabled=False)
+    for _ in range(5):
+        c.observe(np.ones(2))
+    assert c.window == 8
+
+
+def test_hysteresis_resists_single_round_noise():
+    c = AdaptiveWindowController(w_max=16, w_init=16, patience=2)
+    w0 = c.window
+    c.observe(np.ones(4))                   # one bad round
+    assert c.window == w0                   # needs `patience` agreement
+
+
+def test_prefill_chunks_cover_exactly():
+    for n in range(0, 200):
+        chunks = prefill_chunks(n, 64)
+        assert sum(chunks) == n
+        assert all(c & (c - 1) == 0 for c in chunks)
+    assert prefill_chunks(0) == []
+    assert len(set(prefill_chunks(199, 64))) <= 7   # bounded compile shapes

@@ -1,0 +1,75 @@
+"""BlockManager units: free-list accounting, refcounts, prefix-cache chain
+lookup, LRU eviction of cached-free blocks, reserved sink block."""
+import numpy as np
+import pytest
+
+from repro.serving.blocks import BlockManager, chain_hashes
+
+
+def test_alloc_never_hands_out_block_zero():
+    m = BlockManager(num_blocks=8, block_size=4)
+    got = m.alloc(7)
+    assert 0 not in got
+    assert sorted(got) == list(range(1, 8))
+    with pytest.raises(MemoryError):
+        m.alloc(1)
+
+
+def test_release_returns_capacity():
+    m = BlockManager(num_blocks=6, block_size=4)
+    got = m.alloc(5)
+    assert m.available() == 0
+    m.release_all(got)
+    assert m.available() == 5
+    assert m.blocks_in_use() == 0
+    with pytest.raises(AssertionError):
+        m.release(got[0])   # double free
+
+
+def test_chain_hashes_depend_on_whole_prefix():
+    a = chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = chain_hashes([9, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert len(a) == len(b) == 2
+    assert a[0] != b[0]
+    # differing first block must change the SECOND block's key too (chained)
+    assert a[1] != b[1]
+    # identical prompts agree
+    assert a == chain_hashes(np.asarray([1, 2, 3, 4, 5, 6, 7, 8]), 4)
+
+
+def test_prefix_lookup_hits_registered_chain():
+    m = BlockManager(num_blocks=10, block_size=4)
+    prompt = np.arange(12)
+    keys = chain_hashes(prompt, 4)
+    blks = m.alloc(3)
+    for b, k in zip(blks, keys):
+        m.register(b, k)
+    # same prompt: full chain hit, refcounts bumped
+    hits, keys2 = m.lookup_prefix(prompt, 3)
+    assert hits == blks and keys2 == keys
+    assert all(m.refcount[b] == 2 for b in blks)
+    # divergent second block: only the first block hits
+    other = np.concatenate([prompt[:4], np.asarray([99, 98, 97, 96]),
+                            prompt[8:]])
+    hits2, _ = m.lookup_prefix(other, 3)
+    assert hits2 == blks[:1]
+    stats = m.stats.export()
+    assert stats["prefix_hits"] == 4 and stats["prefix_misses"] == 2
+
+
+def test_cached_free_blocks_survive_until_evicted():
+    m = BlockManager(num_blocks=4, block_size=2)   # 3 usable blocks
+    blks = m.alloc(2)
+    keys = chain_hashes([7, 7, 7, 7], 2)
+    for b, k in zip(blks, keys):
+        m.register(b, k)
+    m.release_all(blks)                 # refcount 0, but still hittable
+    hits, _ = m.lookup_prefix([7, 7, 7, 7], 2)
+    assert hits == blks                 # resurrected from cached-free
+    m.release_all(blks)
+    # exhaust: 1 plain free + 2 cached-free -> eviction unregisters them
+    got = m.alloc(3)
+    assert set(blks) <= set(got)
+    assert m.stats.evictions >= 1
+    hits3, _ = m.lookup_prefix([7, 7, 7, 7], 2)
+    assert hits3 == []                  # evicted chain no longer hittable

@@ -1,0 +1,233 @@
+"""ServingEngine system tests — the acceptance bar is bit-exactness: every
+serving path (paged cache, ragged mid-flight admission, prefix-cache hits,
+adaptive W) must emit tokens identical to a per-request
+``PredictiveSampler.generate`` run with the same eps key and noise stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import ContinuousBatcher, PredictiveSampler
+from repro.models.transformer import TransformerLM
+from repro.serving import Request, ServingEngine
+
+EPS_KEY = jax.random.PRNGKey(9)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo_reference(cfg, params, req, window, max_len):
+    s = PredictiveSampler(cfg, params, window=window, max_len=max_len,
+                          eps_key=EPS_KEY)
+    t, _ = s.generate(jnp.asarray(np.asarray(req.prompt)[None], jnp.int32),
+                      req.new_tokens,
+                      seq_ids=jnp.asarray([req.seq_id], jnp.int32))
+    return np.asarray(t[0, :len(req.prompt) + req.new_tokens])
+
+
+def _assert_all_exact(cfg, params, done, window, max_len):
+    assert done, "no requests completed"
+    for req in done:
+        ref = _solo_reference(cfg, params, req, window, max_len)
+        np.testing.assert_array_equal(
+            req.result, ref,
+            err_msg=f"request {req.uid} diverged from its solo run")
+
+
+def test_ragged_midflight_admission_bit_exact(qwen):
+    """Satellite: requests of different prompt lengths arriving while others
+    are mid-flight must each match their per-request solo run bit-for-bit
+    (slot reuse, ragged prefill, paged scatter all exercised)."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=8, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(0)
+
+    first = [Request(uid=i,
+                     prompt=rng.integers(0, cfg.vocab,
+                                         size=int(rng.integers(2, 10))),
+                     new_tokens=int(rng.integers(6, 12)))
+             for i in range(3)]
+    for r in first:
+        eng.submit(r)
+    # run a few rounds so slots are mid-flight, then admit ragged latecomers
+    for _ in range(2):
+        eng.step()
+    late = [Request(uid=10 + i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(1, 14))),
+                    new_tokens=int(rng.integers(3, 9)))
+            for i in range(3)]
+    for r in late:
+        eng.submit(r)
+    done = eng.run()
+
+    assert len(done) == 6
+    assert {r.uid for r in done} == {0, 1, 2, 10, 11, 12}
+    _assert_all_exact(cfg, params, done, window=8, max_len=64)
+    # slot reuse happened: 6 requests through 2 slots
+    assert eng.metrics.requests_finished == 6
+    for req in done:
+        np.testing.assert_array_equal(req.result[:len(req.prompt)],
+                                      np.asarray(req.prompt))
+
+
+def test_prefix_cache_hits_stay_exact_and_save_prefill(qwen):
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=8, max_len=96,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(1)
+    system_prompt = rng.integers(0, cfg.vocab, size=21)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate(
+                        [system_prompt,
+                         rng.integers(0, cfg.vocab,
+                                      size=int(rng.integers(2, 6)))]),
+                    new_tokens=6)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    _assert_all_exact(cfg, params, done, window=8, max_len=96)
+
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].prefix_hit_blocks == 0          # first pays full prefill
+    for i in (1, 2, 3):                              # the rest share 5 blocks
+        assert by_uid[i].prefix_hit_blocks == 5
+        assert by_uid[i].prefill_calls < by_uid[0].prefill_calls
+    assert eng.export_metrics()["prefix_hit_rate"] > 0.5
+
+
+def test_adaptive_window_stays_exact(qwen):
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=8, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, adaptive=True)
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(2, 8))),
+                    new_tokens=int(rng.integers(6, 14)))
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    # exactness is W-independent: compare against fixed W=8 solo runs even
+    # though the engine varied W round-to-round
+    _assert_all_exact(cfg, params, done, window=8, max_len=64)
+    assert len(set(eng.metrics.window_hist)) >= 1
+    assert all(1 <= w <= 8 for w in eng.metrics.window_hist)
+
+
+def test_adaptive_widens_into_an_accepting_stream(qwen):
+    """Engine-level controller integration: starting narrow on a stream
+    whose acceptance saturates the window, the EWMA must widen W (the
+    narrowing direction is unit-tested in test_adaptive.py — an *untrained*
+    LM is actually easy for FPI, since position-pinned noise makes its
+    outputs nearly position-deterministic, so a genuinely hard stream needs
+    a trained strongly-coupled model as in benchmarks/serving_bench.py)."""
+    cfg, params = qwen
+    # peaked model (scaled tied embeddings) -> near-deterministic stream
+    peaked = dict(params)
+    peaked["embed"] = {"table": params["embed"]["table"] * 6.0}
+    easy = ServingEngine(cfg, peaked, batch=2, window_max=16, max_len=96,
+                         eps_key=EPS_KEY, block_size=8, adaptive=True,
+                         window_init=2)
+    for i in range(2):
+        easy.submit(Request(uid=i, prompt=np.zeros(2, np.int64),
+                            new_tokens=40))
+    easy.run()
+    assert max(easy.metrics.window_hist) > 2     # widened into the stream
+    assert all(w == 16 or (w & (w - 1)) == 0     # stayed on the pow2 grid
+               for w in easy.metrics.window_hist)
+    # telemetry and controller agree on the round count
+    assert len(easy.controller.history) == easy.metrics.rounds
+
+
+def test_peaked_model_beats_ancestral_call_count(qwen):
+    cfg, params = qwen
+    peaked = dict(params)
+    peaked["embed"] = {"table": params["embed"]["table"] * 6.0}
+    eng = ServingEngine(cfg, peaked, batch=2, window_max=8, max_len=96,
+                        eps_key=EPS_KEY, block_size=8, adaptive=True)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=np.zeros(2, np.int64),
+                           new_tokens=48))
+    done = eng.run()
+    for req in done:
+        assert req.calls_used < req.new_tokens, \
+            (req.uid, req.calls_used, req.new_tokens)
+    m = eng.export_metrics()
+    assert m["arm_calls_vs_ancestral"] < 1.0
+    assert m["latency_p95_s"] >= m["latency_p50_s"] > 0.0
+
+
+def test_priority_admission_order(qwen):
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=48,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(4)
+    lo = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 3), new_tokens=4,
+                 priority=5)
+    hi = Request(uid=1, prompt=rng.integers(0, cfg.vocab, 3), new_tokens=4,
+                 priority=0)
+    eng.submit(lo)
+    eng.submit(hi)
+    done = eng.run()
+    assert [r.uid for r in done] == [1, 0]       # high priority served first
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+
+def test_tight_pool_serializes_instead_of_crashing(qwen):
+    """Admission reserves each request's worst-case block need: two requests
+    that would jointly oversubscribe a tight pool must be served one after
+    the other (run-to-completion), not crash mid-generation."""
+    cfg, params = qwen
+    # each request needs ceil((4 + 40 + 4)/4) = 12 blocks worst-case;
+    # pool of 15 usable blocks fits one at a time, never both
+    eng = ServingEngine(cfg, params, batch=2, window_max=4, max_len=48,
+                        eps_key=EPS_KEY, block_size=4, num_blocks=16,
+                        adaptive=False, prefix_cache=False)
+    rng = np.random.default_rng(6)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 4),
+                           new_tokens=40))
+    done = eng.run()
+    assert len(done) == 2
+    assert eng.metrics.export()["mean_batch_occupancy"] <= 0.5  # serialized
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+
+def test_admission_deadlock_raises(qwen):
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, num_blocks=4,
+                        adaptive=False)
+    eng.submit(Request(uid=0, prompt=np.zeros(30, np.int64), new_tokens=20))
+    with pytest.raises(MemoryError):
+        eng.run()
+
+
+def test_continuous_batcher_alias_is_serving_engine(qwen):
+    """The seed API survives: ContinuousBatcher(sampler, batch) drains a
+    queue through the paged engine, and its results are bit-exact too."""
+    cfg, params = qwen
+    sampler = PredictiveSampler(cfg, params, window=4, max_len=64,
+                                eps_key=EPS_KEY)
+    batcher = ContinuousBatcher(sampler, batch=2)
+    assert isinstance(batcher, ServingEngine)
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, size=int(rng.integers(2, 6))),
+                    int(rng.integers(4, 8)))
+            for i in range(4)]
+    for r in reqs:
+        batcher.submit(r)
+    done = batcher.run()
+    assert len(done) == 4
+    assert int(np.asarray(batcher.state.rounds)) >= 1
+    _assert_all_exact(cfg, params, done, window=4, max_len=64)
