@@ -215,6 +215,53 @@ def to_markdown(rows):
     return "\n".join(lines)
 
 
+def paged_decode_rows(capacities=(4096, 32768, 262144), batch: int = 8,
+                      used: int = 2048, window: int = DECODE_WINDOW):
+    """Paged-vs-dense-gather serving round, analytic HBM traffic per arch.
+
+    The dense round-trip (gather the full-capacity K/V view, decode,
+    scatter the window back) moves ~3x the *capacity* every round; the
+    paged kernel streams only each sequence's *used* blocks through its
+    block table — per-round traffic independent of how large the pool /
+    per-sequence capacity is. Pure shape arithmetic (same spirit as the
+    roofline terms), so it covers the full-scale configs, not the reduced
+    CPU variants."""
+    from benchmarks.serving_bench import round_bytes_model
+    from repro.configs import ARCHS, get_config
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if not any(m in ("attn", "local", "mla")
+                   for m, _ in cfg.layer_specs()):
+            continue                    # pure-recurrent stacks aren't paged
+        for cap in capacities:
+            bm = round_bytes_model(cfg, batch, cap, used=used, window=window)
+            rows.append({
+                "table": "roofline_paged", "arch": arch, "capacity": cap,
+                "dense_bytes": bm["dense_bytes"],
+                "paged_bytes": bm["paged_bytes"],
+                "dense_s": bm["dense_bytes"] / HBM,
+                "paged_s": bm["paged_bytes"] / HBM,
+                "traffic_ratio": round(bm["dense_bytes"]
+                                       / max(1, bm["paged_bytes"]), 1),
+            })
+    return rows
+
+
+def paged_to_markdown(rows):
+    lines = ["| arch | capacity | dense GB/round | paged GB/round | "
+             "dense(s) | paged(s) | ratio |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['capacity']} | "
+            f"{r['dense_bytes']/1e9:.3f} | {r['paged_bytes']/1e9:.3f} | "
+            f"{r['dense_s']:.2e} | {r['paged_s']:.2e} | "
+            f"{r['traffic_ratio']} |")
+    return "\n".join(lines)
+
+
 def run(fast: bool = True):
     rows = analyze(correct_scan=not fast)
     ok = [r for r in rows if r["status"] == "ok"]
@@ -226,9 +273,15 @@ def run(fast: bool = True):
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "roofline.md"), "w") as f:
         f.write(md + "\n")
+    paged = paged_decode_rows()
+    with open(os.path.join(ART, "roofline_paged.md"), "w") as f:
+        f.write(paged_to_markdown(paged) + "\n")
+    out.extend(paged)
     return out
 
 
 if __name__ == "__main__":
     rows = analyze(correct_scan="--fast" not in sys.argv)
     print(to_markdown(rows))
+    print()
+    print(paged_to_markdown(paged_decode_rows()))

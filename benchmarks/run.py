@@ -6,13 +6,24 @@ serving/roofline reports. Prints ``name,us_per_call,derived`` CSV.
 
 Full run: ``PYTHONPATH=src python -m benchmarks.run``
 (set REPRO_BENCH_FULL=1 for the longer-training variant).
+
+Serving rows are additionally written to
+``benchmarks/artifacts/BENCH_serving.json`` — the perf-trajectory baseline
+(per-round latency, HBM bytes moved, prefix hit rate, paged vs dense-gather)
+that CI uploads from the tier-1 workflow. ``--serving-only`` produces just
+that artifact from the training-free scenarios (paged-vs-dense sweep +
+mixed traffic with untrained weights) so CI stays fast.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 import traceback
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+BENCH_SERVING = os.path.join(ART, "BENCH_serving.json")
 
 
 def _csv_rows_table(rows):
@@ -31,7 +42,15 @@ def _csv_rows_table(rows):
             out.append((name, f"{(t or 0)*1e6:.0f}",
                         f"calls_pct={r['calls_pct']}"))
         elif tbl == "serving":
-            if "scenario" in r:
+            if r.get("scenario") == "paged_vs_dense":
+                out.append((f"serving/paged_vs_dense/cap{r['capacity']}",
+                            f"{r['paged_wall_us_per_round']}",
+                            f"dense_wall_us={r['dense_wall_us_per_round']};"
+                            f"backend={r['backend']};"
+                            f"paged_MB={r['paged_bytes']/1e6:.2f};"
+                            f"dense_MB={r['dense_bytes']/1e6:.2f};"
+                            f"traffic_ratio={r['traffic_ratio']}"))
+            elif "scenario" in r:
                 us = r["time_s"] * 1e6 / max(1, r["verify_rounds"])
                 out.append((f"serving/{r['scenario']}", f"{us:.0f}",
                             f"calls_pct={r['calls_vs_ancestral_pct']};"
@@ -58,7 +77,43 @@ def _csv_rows_table(rows):
                         f"ok={r['pairs_ok']}of{r['pairs_total']};"
                         f"compute={bt['compute']};memory={bt['memory']};"
                         f"collective={bt['collective']}"))
+        elif tbl == "roofline_paged":
+            out.append((f"roofline/paged/{r['arch']}/cap{r['capacity']}",
+                        f"{r['paged_s']*1e6:.0f}",
+                        f"dense_us={r['dense_s']*1e6:.0f};"
+                        f"traffic_ratio={r['traffic_ratio']}"))
     return out
+
+
+def _write_bench_serving(rows) -> None:
+    """Persist the serving perf baseline (acceptance artifact): every
+    serving-table row, most importantly the paged-vs-dense sweep whose
+    ``paged_bytes`` stays flat in capacity while ``dense_bytes`` grows."""
+    os.makedirs(ART, exist_ok=True)
+    serving = [r for r in rows if r.get("table") == "serving"]
+    with open(BENCH_SERVING, "w") as f:
+        json.dump({"rows": serving}, f, indent=2, sort_keys=True)
+    print(f"# wrote {BENCH_SERVING} ({len(serving)} rows)", file=sys.stderr)
+
+
+def serving_only() -> None:
+    """Training-free serving baseline for CI: the paged-vs-dense capacity
+    sweep plus one mixed-traffic run (prefix hit rate, latency percentiles)
+    on untrained weights — no acceptance bar asserted for the latter."""
+    import jax
+
+    from benchmarks.serving_bench import mixed_traffic, paged_vs_dense
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    rows = paged_vs_dense(cfg, params)
+    rows.append(mixed_traffic(cfg, params, assert_bar=False))
+    print("name,us_per_call,derived")
+    for row in _csv_rows_table(rows):
+        print(",".join(str(c) for c in row))
+    _write_bench_serving(rows)
 
 
 def main() -> None:
@@ -79,6 +134,8 @@ def main() -> None:
             rows = mod.run(fast=fast)
             for row in _csv_rows_table(rows):
                 print(",".join(str(c) for c in row))
+            if name == "serving":
+                _write_bench_serving(rows)
             print(f"# {name} done in {time.time()-t0:.0f}s",
                   file=sys.stderr)
         except Exception:  # noqa: BLE001
@@ -87,4 +144,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--serving-only" in sys.argv:
+        serving_only()
+    else:
+        main()

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reparam import reparam_argmax
-from repro.models.transformer import TransformerLM
+from repro.models.transformer import PagedView, TransformerLM
 
 
 def make_eps_fn(key, vocab: int):
@@ -155,18 +155,27 @@ class PredictiveSampler:
 
 def verify_round(params, cfg, eps_fn, state: GenState, target_len,
                  use_forecast_heads: bool = False,
-                 use_verify_kernel: bool = False) -> GenState:
-    """One verify round over ``state`` (dense cache view). W is taken from
+                 use_verify_kernel: bool = False,
+                 paged: Optional[PagedView] = None) -> GenState:
+    """One verify round over ``state``. W is taken from
     ``state.cand.shape[1]`` so callers may vary the window round-to-round
     (adaptive speculation): candidates only gate acceptance, never token
-    values, so any W yields the same accepted stream (DESIGN.md §3, §7)."""
+    values, so any W yields the same accepted stream (DESIGN.md §3, §7).
+
+    ``state.cache`` is a dense cache view, or — with ``paged`` — the paged
+    block-pool pytree, decoded in place through the block tables (no dense
+    attention K/V view is ever materialized; DESIGN.md §9)."""
     B, W = state.cand.shape
     max_len = state.tokens.shape[1]
     active = state.n < target_len
 
     cache_len = state.n - 1
-    logits, h, new_cache = TransformerLM.decode_window(
-        params, cfg, state.cand, state.cache, cache_len)
+    if paged is None:
+        logits, h, new_cache = TransformerLM.decode_window(
+            params, cfg, state.cand, state.cache, cache_len)
+    else:
+        logits, h, new_cache = TransformerLM.decode_window_paged(
+            params, cfg, state.cand, state.cache, paged, cache_len)
     out_pos = state.n[:, None] + jnp.arange(W)[None, :]   # sampled positions
     eps = eps_fn(state.seq_ids, out_pos)
     if use_verify_kernel:
@@ -196,7 +205,11 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     # after x_{n-1}... only true if cand[:,0] stayed x_{n-1} — it does.
     sel = TransformerLM.select_states(cfg, new_cache,
                                       jnp.maximum(a, 1))
-    cache = sel
+    if paged is None:
+        cache = sel
+    else:
+        cache = TransformerLM.adopt_states_paged(cfg, state.cache, sel,
+                                                 paged.rows)
 
     # next window: slot0 = last accepted token; FPI forecasts = this
     # round's outputs past the accept point (paper §2.3)

@@ -1,3 +1,22 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel plumbing.
+
+Every ``ops.py`` wrapper dispatches its Pallas kernel through
+``resolve_interpret``: interpret-mode (bit-exact, slow) everywhere except a
+real TPU backend, where the kernel compiles. Callers can still force either
+mode explicitly (tests pin ``interpret=True``; TPU benchmarks pin ``False``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Backend dispatch for Pallas kernels: ``None`` means "compiled on TPU,
+    interpreted elsewhere" — the CPU CI path and the TPU serving path run the
+    same kernel code without every call site re-deriving the flag."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -5,9 +5,13 @@ cache of up to 524,288 keys. Compute is dominated by streaming the cache
 through VMEM once (bandwidth-bound, the long_500k roofline term); queries
 ride along whole.
 
-grid = (BH, S/bk): per (batch*head), KV tiles stream sequentially with the
-online-softmax state for all W queries in scratch. Per-sequence valid length
-masks tail tiles (cache slots beyond ``length + W`` are never counted).
+grid = (BH, ceil(S/bk)): per (batch*head), KV tiles stream sequentially with
+the online-softmax state for all W queries in scratch. Per-sequence valid
+length masks tail tiles (cache slots beyond ``length + W`` are never
+counted). A ragged final tile is masked *in-kernel* against the true S —
+no host-side ``jnp.pad`` copy of the whole cache on the hot path; its
+out-of-bounds K/V rows are zeroed before the matmuls so garbage (possibly
+non-finite) memory can never poison the accumulator through ``0 * v``.
 """
 from __future__ import annotations
 
@@ -18,11 +22,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG = -1.0e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, bk: int, scale: float, window: int):
+                   acc_ref, *, bk: int, s_len: int, scale: float,
+                   window: int):
     jk = pl.program_id(1)
     nk = pl.num_programs(1)
 
@@ -36,12 +43,17 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     k = k_ref[0].astype(jnp.float32)                     # (bk, d)
     v = v_ref[0].astype(jnp.float32)
     W = q.shape[0]
+    # ragged tail tile: rows at k_pos >= S are out-of-bounds reads
+    in_bounds = (jk * bk
+                 + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)) < s_len
+    k = jnp.where(in_bounds, k, 0.0)
+    v = jnp.where(in_bounds, v, 0.0)
     s = (q @ k.T) * scale                                # (W, bk)
 
     base = len_ref[0]                                    # valid cache length
     q_pos = base + jax.lax.broadcasted_iota(jnp.int32, (W, bk), 0)
     k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (W, bk), 1)
-    mask = k_pos <= q_pos
+    mask = (k_pos <= q_pos) & (k_pos < s_len)
     if window > 0:
         mask &= k_pos > (q_pos - window)
     s = jnp.where(mask, s, NEG)
@@ -65,22 +77,19 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
                                              "interpret"))
 def decode_attention_kernel(q, k, v, lengths, window: int = 0,
-                            block_k: int = 512, interpret: bool = True):
+                            block_k: int = 512,
+                            interpret: bool | None = None):
     """q: (BH, W, d) window queries; k, v: (BH, S, d) caches (window keys
     already written at positions lengths..lengths+W-1); lengths: (BH,) valid
     prefix lengths. Query w attends keys < lengths + w + 1."""
     BH, W, d = q.shape
     S = k.shape[1]
     bk = min(block_k, S)
-    Sp = -(-S // bk) * bk
-    if Sp != S:
-        pad = ((0, 0), (0, Sp - S), (0, 0))
-        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
 
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, bk=bk, scale=1.0 / d ** 0.5,
-                          window=window),
-        grid=(BH, Sp // bk),
+        functools.partial(_decode_kernel, bk=bk, s_len=S,
+                          scale=1.0 / d ** 0.5, window=window),
+        grid=(BH, -(-S // bk)),
         in_specs=[
             pl.BlockSpec((1,), lambda b, j: (b,),
                          memory_space=pltpu.SMEM),
@@ -95,6 +104,6 @@ def decode_attention_kernel(q, k, v, lengths, window: int = 0,
             pltpu.VMEM((W,), jnp.float32),
             pltpu.VMEM((W, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(lengths.astype(jnp.int32), q, k, v)
     return out

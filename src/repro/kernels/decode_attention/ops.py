@@ -1,9 +1,9 @@
 """Jit'd public decode-attention op (GQA expansion + head flattening)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
@@ -23,10 +23,9 @@ def decode_attention(q, k, v, lengths, window: int = 0,
     vf = vx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
     lf = jnp.repeat(lengths, H)
     if use_kernel:
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
         of = decode_attention_kernel(qf, kf, vf, lf, window=window,
-                                     block_k=block_k, interpret=interpret)
+                                     block_k=block_k,
+                                     interpret=resolve_interpret(interpret))
     else:
         of = decode_attention_ref(qf, kf, vf, lf, window=window)
     return of.reshape(B, H, W, d).transpose(0, 2, 1, 3)

@@ -1,9 +1,9 @@
 """Jit'd public flash-attention op with GQA head expansion."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
@@ -21,11 +21,9 @@ def flash_attention(q, k, v, window: int = 0, use_kernel: bool = True,
     kf = kx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
     vf = vx.transpose(0, 2, 1, 3).reshape(B * H, S, d)
     if use_kernel:
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
         of = flash_attention_kernel(qf, kf, vf, window=window,
                                     block_q=block_q, block_k=block_k,
-                                    interpret=interpret)
+                                    interpret=resolve_interpret(interpret))
     else:
         of = flash_attention_ref(qf, kf, vf, window=window)
     return of.reshape(B, H, S, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: paged flash-decode — attend through block tables.
+
+The serving runtime stores attention K/V in fixed-size blocks of a shared
+physical pool (``TransformerLM.init_paged_cache``); each sequence owns a
+block table mapping logical block ``j`` to a physical pool id. The dense
+engine round used to materialize a contiguous per-sequence K/V view
+(``gather_paged``), attend, and scatter the window back — an O(B*S*d) HBM
+round-trip wrapping a bandwidth-bound op. This kernel attends *in place*:
+
+grid = (B, KV, nb): per (sequence, kv-head), logical KV blocks stream
+sequentially. The per-sequence block table and valid lengths ride in SMEM via
+scalar prefetch, so the K/V BlockSpec index_map resolves ``table[b, j]``
+before each tile's DMA — the pool is read once, block-granular, and no dense
+view ever exists. Online-softmax state for all G*W rows (G grouped query
+heads x W window queries) lives in VMEM scratch, exactly like the dense
+``decode_attention`` kernel.
+
+Masking handles the two paged-specific hazards:
+
+* **Tail blocks** — table entries past a sequence's allocation point at the
+  reserved sink block 0; their *logical* positions ``j*bs + t`` exceed
+  ``length + W - 1`` so the causal mask ``k_pos <= q_pos`` zeroes them (the
+  pool is always initialized/written memory — no NaN risk, unlike the dense
+  kernel's out-of-bounds tail tiles).
+* **Window keys** — the W fresh keys are written into their physical blocks
+  *before* the kernel runs (``write_window_paged``), so query w sees keys
+  ``<= length + w`` through the same table indirection as the prefix.
+
+``latent=True`` is the MLA variant: scores are the sum of two inner products
+(absorbed-latent query vs the c_kv pool, rope query vs the shared rope-key
+pool) and the value *is* the c_kv tile — one pool read serves both matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
+                  window: int, W: int, latent: bool):
+    if latent:
+        q1_ref, q2_ref, k1_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q1_ref, k1_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    base = len_ref[b]                                     # valid cache length
+    # skip fully-masked tiles outright: tail tiles past the last query
+    # position (sink-aliased table entries) and, under a sliding window,
+    # tiles wholly below the earliest visible key. A skipped tile's update
+    # is the identity (p = 0, alpha = 1), so skipping is bitwise-neutral —
+    # per-round compute tracks the *used* blocks, not the table width.
+    visible = j * bs <= base + W - 1
+    if window > 0:
+        visible &= (j + 1) * bs > base - window + 1
+
+    @pl.when(visible)
+    def _tile():
+        q = q1_ref[0, 0].astype(jnp.float32)              # (R, dk) R = G*W
+        k = k1_ref[0, :, 0, :].astype(jnp.float32)        # (bs, dk)
+        R = q.shape[0]
+        s = (q @ k.T) * scale                             # (R, bs)
+        if latent:
+            q2 = q2_ref[0, 0].astype(jnp.float32)         # (R, dr)
+            k2 = k2_ref[0, :, 0, :].astype(jnp.float32)   # (bs, dr)
+            s += (q2 @ k2.T) * scale
+
+        # row r serves window query w = r % W (G heads share a kv head)
+        q_pos = base + jax.lax.broadcasted_iota(jnp.int32, (R, bs), 0) % W
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (R, bs), 1)
+        mask = k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1)
+        v = k if latent else v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "window", "scale",
+                                             "interpret"))
+def paged_decode_kernel(q, k_pool, v_pool, tables, lengths, *, W: int,
+                        window: int = 0, scale: float | None = None,
+                        interpret: bool = True):
+    """q: (B, KV, G*W, d) grouped window queries (row = g*W + w); k_pool,
+    v_pool: (P, bs, KV, d) physical block pools (window keys already written
+    at positions lengths..lengths+W-1 through the tables); tables: (B, nb)
+    physical block ids; lengths: (B,) valid prefix lengths. Query w attends
+    keys < lengths + w + 1. Returns (B, KV, G*W, dv)."""
+    B, KV, R, dk = q.shape
+    P, bs = k_pool.shape[:2]
+    nb = tables.shape[1]
+    dv = v_pool.shape[-1]
+    if scale is None:
+        scale = 1.0 / dk ** 0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, dk), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, dv),
+                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, scale=scale, window=window,
+                          W=W, latent=False),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, R, dv), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "scale", "interpret"))
+def paged_latent_kernel(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
+                        W: int, scale: float, interpret: bool = True):
+    """MLA absorbed-latent variant: q_lat: (B, 1, H*W, r); q_rope:
+    (B, 1, H*W, dr); c_pool: (P, bs, 1, r); kr_pool: (P, bs, 1, dr). Scores
+    sum both inner products; the output is the attention-weighted *latent*
+    (B, 1, H*W, r) — the shared c_kv tile doubles as the value."""
+    B, _, R, r = q_lat.shape
+    P, bs = c_pool.shape[:2]
+    dr = q_rope.shape[-1]
+    nb = tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, 1, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, r), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, dr), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, r),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dr),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, r),
+                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, scale=scale, window=0,
+                          W=W, latent=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, R, r), q_lat.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q_lat, q_rope, c_pool, kr_pool)

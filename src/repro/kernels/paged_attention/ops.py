@@ -1,0 +1,61 @@
+"""Jit'd public paged-attention ops (GQA row grouping, MLA latent variant).
+
+Unlike the dense ``decode_attention`` wrapper, GQA is handled by *grouping*
+query heads onto their kv head (row = g*W + w) instead of ``jnp.repeat`` on
+the cache — the pool is never expanded or copied. The kernel streams physical
+blocks through the per-sequence table; the ref gathers the dense view (the
+CPU oracle / fallback shape).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import resolve_interpret
+from repro.kernels.paged_attention.kernel import (paged_decode_kernel,
+                                                 paged_latent_kernel)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                              paged_latent_ref)
+
+
+def paged_attention(q, k_pool, v_pool, tables, lengths, window: int = 0,
+                    use_kernel: bool = True, interpret: bool | None = None):
+    """q: (B, W, H, d) window queries; k_pool/v_pool: (P, bs, KV, d) physical
+    block pools with the window keys already written through ``tables``;
+    tables: (B, nb); lengths: (B,). Returns (B, W, H, d)."""
+    B, W, H, d = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    if not use_kernel:
+        return paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                                   window=window)
+    qg = (q.reshape(B, W, KV, G, d)
+          .transpose(0, 2, 3, 1, 4)          # (B, KV, G, W, d): row = g*W + w
+          .reshape(B, KV, G * W, d))
+    out = paged_decode_kernel(qg, k_pool, v_pool, tables, lengths, W=W,
+                              window=window,
+                              interpret=resolve_interpret(interpret))
+    return (out.reshape(B, KV, G, W, d)
+            .transpose(0, 3, 1, 2, 4)
+            .reshape(B, W, H, d))
+
+
+def paged_latent_attention(q_lat, q_rope, c_pool, kr_pool, tables, lengths,
+                           scale: float, use_kernel: bool = True,
+                           interpret: bool | None = None):
+    """MLA absorbed-matrix decode over the latent pools. q_lat: (B, W, H, r);
+    q_rope: (B, W, H, dr); c_pool: (P, bs, r); kr_pool: (P, bs, dr). Returns
+    the attention-weighted latent (B, W, H, r) — the caller applies W_uv/W_o.
+    """
+    B, W, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    if not use_kernel:
+        return paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables,
+                                lengths, scale=scale)
+    # all H heads share the single latent "kv head": rows = h*W + w
+    ql = q_lat.transpose(0, 2, 1, 3).reshape(B, 1, H * W, r)
+    qr = q_rope.transpose(0, 2, 1, 3).reshape(B, 1, H * W, dr)
+    out = paged_latent_kernel(ql, qr, c_pool[:, :, None, :],
+                              kr_pool[:, :, None, :], tables, lengths,
+                              W=W, scale=scale,
+                              interpret=resolve_interpret(interpret))
+    return out.reshape(B, H, W, r).transpose(0, 2, 1, 3)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the paged flash-decode kernel.
+
+Each ref gathers the dense per-sequence view through the block table (the
+very copy the kernel exists to avoid) and runs the plain-softmax decode
+math — the correctness anchor for the property sweeps, shared with
+``decode_attention_ref`` semantics: query w attends keys <= lengths + w.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_view(pool, tables):
+    """pool: (P, bs, ...) physical blocks; tables: (B, nb). Returns the dense
+    (B, nb*bs, ...) per-sequence view (exactly what ``gather_paged`` builds
+    per attention leaf)."""
+    g = pool[tables]                                     # (B, nb, bs, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths, window: int = 0):
+    """q: (B, W, H, d); k_pool/v_pool: (P, bs, KV, d); tables: (B, nb);
+    lengths: (B,). Returns (B, W, H, d)."""
+    B, W, H, d = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    k = gather_view(k_pool, tables)                      # (B, S, KV, d)
+    v = gather_view(v_pool, tables)
+    S = k.shape[1]
+    qg = q.reshape(B, W, KV, G, d)
+    s = jnp.einsum("bwkgd,bskd->bkgws", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    qp = lengths[:, None, None, None, None] + jnp.arange(W)[None, None, None,
+                                                            :, None]
+    kp = jnp.arange(S)[None, None, None, None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > (qp - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgws,bskd->bwkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, W, H, d).astype(q.dtype)
+
+
+def paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
+                     scale: float):
+    """q_lat: (B, W, H, r); q_rope: (B, W, H, dr); c_pool: (P, bs, r);
+    kr_pool: (P, bs, dr). Returns the latent context (B, W, H, r)."""
+    B, W, H, r = q_lat.shape
+    c = gather_view(c_pool, tables)                      # (B, S, r)
+    kr = gather_view(kr_pool, tables)                    # (B, S, dr)
+    S = c.shape[1]
+    s = (jnp.einsum("bwhr,bsr->bhws", q_lat.astype(jnp.float32),
+                    c.astype(jnp.float32))
+         + jnp.einsum("bwhd,bsd->bhws", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    qp = lengths[:, None, None, None] + jnp.arange(W)[None, None, :, None]
+    kp = jnp.arange(S)[None, None, None, :]
+    s = jnp.where(kp <= qp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhws,bsr->bwhr", p, c.astype(jnp.float32))
+    return out.astype(q_lat.dtype)

@@ -1,9 +1,9 @@
 """Jit'd public WKV op: (B, T, H, hd) layout adapter."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.rwkv_wkv.kernel import rwkv_wkv_kernel
 from repro.kernels.rwkv_wkv.ref import rwkv_wkv_ref
 
@@ -17,10 +17,8 @@ def rwkv_wkv(r, k, v, w, u, use_kernel: bool = True, chunk: int = 64,
     rf, kf, vf, wf = map(flat, (r, k, v, w))
     uf = jnp.tile(u, (B, 1))
     if use_kernel:
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
         yf = rwkv_wkv_kernel(rf, kf, vf, wf, uf, chunk=chunk,
-                             interpret=interpret)
+                             interpret=resolve_interpret(interpret))
     else:
         yf = rwkv_wkv_ref(rf, kf, vf, wf, uf)
     return yf.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

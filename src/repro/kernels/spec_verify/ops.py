@@ -5,9 +5,7 @@ the jnp reference; shapes beyond 2D are flattened to rows.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
+from repro.kernels import resolve_interpret
 from repro.kernels.spec_verify.kernel import spec_verify_kernel
 from repro.kernels.spec_verify.ref import spec_verify_ref
 
@@ -23,9 +21,7 @@ def spec_verify(logits, eps, use_kernel: bool = True,
     if not use_kernel:
         out = spec_verify_ref(lg, ep)
     else:
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
         out = spec_verify_kernel(lg, ep, block_rows=block_rows,
                                  block_vocab=block_vocab,
-                                 interpret=interpret)
+                                 interpret=resolve_interpret(interpret))
     return out.reshape(shape)

@@ -19,7 +19,7 @@ prefix (see frontends.py and DESIGN.md carve-out).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -186,8 +186,21 @@ def _layer_cache_init(spec: LayerSpec, cfg: ModelConfig, batch, max_len,
     return c
 
 
+class PagedView(NamedTuple):
+    """Block-table addressing for a paged decode step: attention cache leaves
+    are the shared physical pools and each of the R view rows reads/writes
+    through ``tables``; ``rows`` selects the batch slots whose (un-paged)
+    recurrent states ride along. ``use_kernel`` picks the Pallas paged
+    flash-decode kernel over the gather-view CPU-exact fallback."""
+    tables: Any                        # (R, nb) physical block ids
+    rows: Any                          # (R,) batch slots
+    use_kernel: bool = False
+    interpret: Optional[bool] = None
+
+
 def _layer_window(p, spec: LayerSpec, cfg: ModelConfig, h, cache, cache_len,
-                  state_mode: str = "per_position", accept=None):
+                  state_mode: str = "per_position", accept=None,
+                  paged: Optional[PagedView] = None):
     """Returns (h, new_cache).
 
     state_mode:
@@ -198,17 +211,32 @@ def _layer_window(p, spec: LayerSpec, cfg: ModelConfig, h, cache, cache_len,
         two-pass low-memory decode (§Perf C4).
       * "advance" — recurrent mixers return ONLY the state after ``accept``
         (B,) tokens (freeze-masked scan; second pass of C4).
+
+    With ``paged``, attention/local/mla cache entries are physical block
+    pools addressed through ``paged.tables`` (recurrent mixers are identical
+    in both modes — their per-slot states are never paged).
     """
     mixer, ffn = spec
     new_cache = {}
     u = RMSNorm.apply(p["norm1"], h)
     if mixer in ("attn", "local"):
         window = cfg.sliding_window if mixer == "local" else 0
-        y, new_cache["mixer"] = GQAttention.window(
-            p["mixer"], u, cfg, cache["mixer"], cache_len, window=window)
+        if paged is not None:
+            y, new_cache["mixer"] = GQAttention.window_paged(
+                p["mixer"], u, cfg, cache["mixer"], paged.tables, cache_len,
+                window=window, use_kernel=paged.use_kernel,
+                interpret=paged.interpret)
+        else:
+            y, new_cache["mixer"] = GQAttention.window(
+                p["mixer"], u, cfg, cache["mixer"], cache_len, window=window)
     elif mixer == "mla":
-        y, new_cache["mixer"] = MLAttention.window(
-            p["mixer"], u, cfg, cache["mixer"], cache_len)
+        if paged is not None:
+            y, new_cache["mixer"] = MLAttention.window_paged(
+                p["mixer"], u, cfg, cache["mixer"], paged.tables, cache_len,
+                use_kernel=paged.use_kernel, interpret=paged.interpret)
+        else:
+            y, new_cache["mixer"] = MLAttention.window(
+                p["mixer"], u, cfg, cache["mixer"], cache_len)
     elif mixer == "mamba":
         y, st = Mamba.window(p["mixer"], u, cfg, cache["mixer"])
         if state_mode == "per_position":
@@ -366,17 +394,20 @@ class TransformerLM:
     # -- verify-window decode -------------------------------------------------
     @staticmethod
     def decode_window(params, cfg: ModelConfig, tokens, cache, cache_len,
-                      state_mode: str = "per_position", accept=None):
+                      state_mode: str = "per_position", accept=None,
+                      paged: Optional[PagedView] = None):
         """tokens: (B, W) candidates; cache_len: (B,). Returns
         (logits (B, W, V), h, new_cache). See ``_layer_window`` for
-        ``state_mode`` (per-position states vs the two-pass C4 modes)."""
+        ``state_mode`` (per-position states vs the two-pass C4 modes).
+        ``paged`` switches attention leaves to block-pool addressing — use
+        ``decode_window_paged`` which also routes the recurrent rows."""
         h = TransformerLM._embed(params, cfg, tokens, None)
         new_cache = {"prefix": [], "suffix": []}
 
         for p, spec, c in zip(params["prefix"], cfg.layer_prefix,
                               cache["prefix"]):
             h, nc = _layer_window(p, spec, cfg, h, c, cache_len,
-                                  state_mode, accept)
+                                  state_mode, accept, paged)
             new_cache["prefix"].append(nc)
 
         if cfg.n_blocks:
@@ -386,7 +417,7 @@ class TransformerLM:
                 for i, spec in enumerate(cfg.layer_block):
                     h, nc = _layer_window(block_p[i], spec, cfg, h,
                                           block_c[i], cache_len,
-                                          state_mode, accept)
+                                          state_mode, accept, paged)
                     ncs.append(nc)
                 return h, ncs
 
@@ -397,12 +428,50 @@ class TransformerLM:
         for p, spec, c in zip(params["suffix"], cfg.layer_suffix,
                               cache["suffix"]):
             h, nc = _layer_window(p, spec, cfg, h, c, cache_len,
-                                  state_mode, accept)
+                                  state_mode, accept, paged)
             new_cache["suffix"].append(nc)
 
         h = RMSNorm.apply(params["final_norm"], h)
         logits = TransformerLM._head(params, cfg, h)
         return logits, h, new_cache
+
+    @staticmethod
+    def decode_window_paged(params, cfg: ModelConfig, tokens, paged_cache,
+                            view: PagedView, cache_len,
+                            state_mode: str = "per_position", accept=None):
+        """Verify-window decode straight over the physical block pools — the
+        paged-attention hot path. No dense attention K/V view is built:
+        attention leaves stay (P, bs, ...) and each layer writes its window
+        K/V into physical blocks and attends through ``view.tables``
+        (Pallas kernel or gather-view fallback per ``view.use_kernel``).
+        Recurrent state leaves (un-paged, (B, ...) slot-indexed) are routed
+        to the ``view.rows`` being decoded. Returns (logits, h, new_cache)
+        where new_cache holds the updated pools for attention leaves and
+        per-position states for recurrent leaves — feed it through
+        ``select_states`` then ``adopt_states_paged``."""
+        cache = TransformerLM._map_paged(
+            cfg, (paged_cache,),
+            lambda stacked, leaf: leaf,
+            lambda stacked, leaf: (leaf[:, view.rows] if stacked
+                                   else leaf[view.rows]))
+        return TransformerLM.decode_window(params, cfg, tokens, cache,
+                                           cache_len, state_mode, accept,
+                                           paged=view)
+
+    @staticmethod
+    def adopt_states_paged(cfg: ModelConfig, paged_cache, sel, rows):
+        """Merge a paged decode's outputs back into the pool pytree:
+        attention pool leaves were already updated functionally by the
+        per-layer window writes (take them from ``sel``); recurrent leaves
+        adopt the selected per-row states at ``rows``."""
+        def rec(stacked, pleaf, sleaf):
+            if stacked:
+                return pleaf.at[:, rows].set(sleaf)
+            return pleaf.at[rows].set(sleaf)
+
+        return TransformerLM._map_paged(
+            cfg, (paged_cache, sel),
+            lambda stacked, pleaf, sleaf: sleaf, rec)
 
     # -- paged (block-table) cache access ------------------------------------
     #

@@ -1,6 +1,6 @@
 """Paged KV-cache serving runtime with adaptive speculation and telemetry.
 
-See DESIGN.md §6-8 and ``repro.serving.engine.ServingEngine`` for the
+See DESIGN.md §6-9 and ``repro.serving.engine.ServingEngine`` for the
 architecture; ``repro.engine.ContinuousBatcher`` remains as a thin
 compatibility alias over this subsystem.
 """

@@ -7,10 +7,14 @@ sequence by its own accept length, and finished sequences free their slot and
 blocks immediately. What's new over the dense batcher:
 
 * **Paged KV cache** — attention K/V lives in fixed-size blocks of a shared
-  physical pool (``TransformerLM.init_paged_cache``); per-sequence block
-  tables are gathered into dense views for ``decode_window`` and only the
-  window-touched blocks are scattered back. Admission allocates blocks
-  instead of zeroing a whole cache row.
+  physical pool (``TransformerLM.init_paged_cache``); verify rounds and
+  prefill decode *through the block tables* (``decode_window_paged`` /
+  DESIGN.md §9): each layer writes its window K/V into physical blocks and
+  attends via the paged flash-decode Pallas kernel (TPU) or the gather-view
+  exact fallback (CPU). No dense attention K/V view of the whole cache is
+  built on the round hot path — ``paged_attention=False`` restores the
+  legacy gather/scatter round-trip (kept as the benchmark baseline).
+  Admission allocates blocks instead of zeroing a whole cache row.
 * **Prefix cache** — full prompt blocks are content-hashed (chained keys);
   admissions sharing a prompt prefix point their tables at the cached blocks
   and skip recomputing them (attention-only models; recurrent stacks carry
@@ -39,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.spec_decode import GenState, make_eps_fn, verify_round
-from repro.models.transformer import TransformerLM
+from repro.kernels import resolve_interpret
+from repro.models.transformer import PagedView, TransformerLM
 from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import BlockManager
@@ -58,7 +63,9 @@ class ServingEngine:
                  adaptive: bool = True, window_init: int = 0,
                  prefix_cache: bool = True, prefill_chunk: int = 64,
                  use_forecast_heads: bool = False,
-                 use_verify_kernel: bool = False):
+                 use_verify_kernel: bool = False,
+                 paged_attention: bool = True,
+                 use_attention_kernel: Optional[bool] = None):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         self.cfg = cfg
@@ -72,6 +79,14 @@ class ServingEngine:
                                    and "forecast" in params
                                    and cfg.forecast_horizon > 0)
         self.use_verify_kernel = use_verify_kernel
+        # paged_attention: decode through block tables (no dense K/V view on
+        # the round hot path). The Pallas kernel is the compiled TPU fast
+        # path; elsewhere the default is the gather-view fallback, which is
+        # bit-exact vs the dense engine (resolve_interpret's dispatch).
+        self.paged_attention = paged_attention
+        if use_attention_kernel is None:
+            use_attention_kernel = not resolve_interpret(None)
+        self.use_attention_kernel = use_attention_kernel
         self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
             eps_key if eps_key is not None else jax.random.PRNGKey(0),
             cfg.vocab)
@@ -126,24 +141,38 @@ class ServingEngine:
 
     # -- jitted steps -------------------------------------------------------
     def _round_fn(self, W: int):
+        """One verify round. Paged mode decodes through the block tables —
+        window K/V lands straight in its physical blocks and attention
+        streams the pool (per-round HBM traffic independent of pool size).
+        Legacy mode is the dense round-trip: gather the whole view, decode,
+        scatter the window back (O(B*S*d) both ways around the round)."""
         if W not in self._round_fns:
             cfg, B = self.cfg, self.B
 
             def fn(params, paged, tables, tokens, n, cand, seq_ids, target):
                 rows = jnp.arange(B)
-                view = TransformerLM.gather_paged(cfg, paged, tables, rows)
-                st = GenState(tokens, n, cand[:, :W], view,
+                if self.paged_attention:
+                    cache = paged
+                    pv = PagedView(tables, rows, self.use_attention_kernel)
+                else:
+                    cache = TransformerLM.gather_paged(cfg, paged, tables,
+                                                       rows)
+                    pv = None
+                st = GenState(tokens, n, cand[:, :W], cache,
                               jnp.zeros((), jnp.int32),
                               jnp.zeros((B,), jnp.int32),
                               jnp.zeros((B,), jnp.int32), seq_ids)
                 st2 = verify_round(
                     params, cfg, self.eps_fn, st, target,
                     use_forecast_heads=self.use_forecast_heads,
-                    use_verify_kernel=self.use_verify_kernel)
-                active = n < target
-                paged2 = TransformerLM.scatter_paged(
-                    cfg, paged, st2.cache, tables, rows,
-                    jnp.maximum(n - 1, 0), W, active)
+                    use_verify_kernel=self.use_verify_kernel, paged=pv)
+                if self.paged_attention:
+                    paged2 = st2.cache
+                else:
+                    active = n < target
+                    paged2 = TransformerLM.scatter_paged(
+                        cfg, paged, st2.cache, tables, rows,
+                        jnp.maximum(n - 1, 0), W, active)
                 cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
                 return paged2, st2.tokens, st2.n, cand2, st2.n - n
 
@@ -155,6 +184,15 @@ class ServingEngine:
             cfg = self.cfg
 
             def fn(params, paged, table_row, row, chunk, start):
+                if self.paged_attention:
+                    view = PagedView(table_row, row,
+                                     self.use_attention_kernel)
+                    _, _, nc = TransformerLM.decode_window_paged(
+                        params, cfg, chunk, paged, view, start)
+                    sel = TransformerLM.select_states(
+                        cfg, nc, jnp.full((1,), C, jnp.int32))
+                    return TransformerLM.adopt_states_paged(
+                        cfg, paged, sel, row)
                 view = TransformerLM.gather_paged(cfg, paged, table_row, row)
                 _, _, nc = TransformerLM.decode_window(
                     params, cfg, chunk, view, start)

@@ -7,8 +7,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.spec_verify.ops import spec_verify
+from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import (gather_view,
+                                              paged_attention_ref)
+from repro.kernels.spec_verify.ops import spec_verify
 
 
 @settings(deadline=None, max_examples=15)
@@ -37,4 +41,43 @@ def test_flash_attention_property(seed, S, d, window):
     got = flash_attention(q, k, v, window=window, block_q=16, block_k=16)
     want = flash_attention(q, k, v, window=window, use_kernel=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64, 128]),
+       st.sampled_from([1, 4, 16]), st.integers(2, 4),
+       st.integers(0, 2), st.sampled_from([0, 24]))
+def test_paged_attention_property(seed, bs, W, nb, shared, window):
+    """paged kernel == paged ref == dense decode_attention over the gathered
+    view, across block sizes, ragged per-sequence lengths (partially filled
+    tail blocks), window sizes, and tables with shared prefix blocks."""
+    B, H, KV, d = 2, 4, 2, 16
+    shared = min(shared, nb - 1)
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    P = 1 + shared + B * (nb - shared)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k_pool = jax.random.normal(kk, (P, bs, KV, d))
+    v_pool = jax.random.normal(kv, (P, bs, KV, d))
+    ids = np.arange(1, P)
+    tables = np.zeros((B, nb), np.int32)
+    tables[:, :shared] = ids[:shared]
+    nxt = shared
+    for b in range(B):
+        tables[b, shared:] = ids[nxt:nxt + nb - shared]
+        nxt += nb - shared
+    tables = jnp.asarray(tables)
+    lengths = jax.random.randint(kl, (B,), 1, nb * bs - W + 1)
+
+    got = paged_attention(q, k_pool, v_pool, tables, lengths, window=window,
+                          interpret=True)
+    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                               window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    dense = decode_attention(q, gather_view(k_pool, tables),
+                             gather_view(v_pool, tables), lengths,
+                             window=window, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
                                rtol=3e-5, atol=3e-5)

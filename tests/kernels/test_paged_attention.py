@@ -1,0 +1,211 @@
+"""Paged flash-decode kernel vs its oracle, the dense decode kernel, and the
+dense decode reference (interpret mode).
+
+The load-bearing invariants:
+* paged kernel == paged ref (gather view + plain softmax) across block
+  sizes, ragged lengths with partially filled tail blocks, and W in
+  {1, 4, 16};
+* with matching tile sizes the paged kernel is BITWISE identical to the
+  dense ``decode_attention_kernel`` run over the gathered view — the same
+  online-softmax op sequence, only the addressing differs;
+* block tables with shared prefix blocks (prefix-cache hits) read the same
+  physical memory from both sequences;
+* table entries past the allocation point (sink block 0) never contribute.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_latent_attention)
+from repro.kernels.paged_attention.ref import (gather_view,
+                                              paged_attention_ref,
+                                              paged_latent_ref)
+from repro.models.attention import write_window_paged
+
+
+def _pool_and_tables(key, P, bs, nb, KV, d, B, dtype=jnp.float32,
+                     shared_prefix=0):
+    """Random pools plus per-sequence tables over distinct physical blocks;
+    the first ``shared_prefix`` logical blocks alias the same physical
+    blocks across all sequences (prefix-cache shape). Remaining table slots
+    past each row's allocation stay 0 (the sink block)."""
+    kk, kv = jax.random.split(key)
+    k_pool = jax.random.normal(kk, (P, bs, KV, d)).astype(dtype)
+    v_pool = jax.random.normal(kv, (P, bs, KV, d)).astype(dtype)
+    ids = np.arange(1, P)                     # block 0 reserved sink
+    tables = np.zeros((B, nb), np.int32)
+    tables[:, :shared_prefix] = ids[:shared_prefix]
+    nxt = shared_prefix
+    for b in range(B):
+        own = nb - shared_prefix
+        tables[b, shared_prefix:] = ids[nxt:nxt + own]
+        nxt += own
+    return k_pool, v_pool, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("bs", [16, 64, 128])
+@pytest.mark.parametrize("W", [1, 4, 16])
+def test_paged_kernel_matches_ref_and_dense(bs, W):
+    B, H, KV, d, nb = 2, 4, 2, 32, 3
+    P = 1 + B * nb
+    key = jax.random.PRNGKey(bs * 31 + W)
+    kq, kp, kl = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    # ragged: partially filled tail blocks, room left for the W window keys
+    lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
+
+    got = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # vs the dense op over the gathered view (different tiling -> allclose)
+    kd, vd = gather_view(k_pool, tables), gather_view(v_pool, tables)
+    dense = decode_attention(q, kd, vd, lengths, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_bitwise_vs_dense_kernel():
+    """Same tile size -> identical online-softmax op sequence: the paged
+    kernel must reproduce the dense flash-decode kernel bit-for-bit."""
+    B, W, H, KV, d, bs, nb = 2, 8, 4, 2, 32, 32, 4
+    P = 1 + B * nb
+    key = jax.random.PRNGKey(7)
+    kq, kp, kl = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
+
+    paged = paged_attention(q, k_pool, v_pool, tables, lengths,
+                            interpret=True)
+    G = H // KV
+    kd = jnp.repeat(gather_view(k_pool, tables), G, axis=2)
+    vd = jnp.repeat(gather_view(v_pool, tables), G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, W, d)
+    kf = kd.transpose(0, 2, 1, 3).reshape(B * H, nb * bs, d)
+    vf = vd.transpose(0, 2, 1, 3).reshape(B * H, nb * bs, d)
+    dense = decode_attention_kernel(qf, kf, vf, jnp.repeat(lengths, H),
+                                    block_k=bs, interpret=True)
+    dense = dense.reshape(B, H, W, d).transpose(0, 2, 1, 3)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_paged_kernel_sliding_window(window):
+    B, W, H, KV, d, bs, nb = 2, 4, 4, 1, 32, 16, 4
+    P = 1 + B * nb
+    key = jax.random.PRNGKey(window + 1)
+    kq, kp = jax.random.split(key)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    lengths = jnp.asarray([37, 11])
+    got = paged_attention(q, k_pool, v_pool, tables, lengths, window=window,
+                          interpret=True)
+    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                               window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_shared_prefix_blocks_read_identically():
+    """Two sequences whose tables alias the same physical prefix blocks and
+    have equal lengths must produce identical outputs for identical queries
+    — the prefix-cache sharing contract at the kernel level."""
+    B, W, H, KV, d, bs, nb = 2, 4, 2, 2, 16, 8, 3
+    P = 1 + 2 + B * 1                         # 2 shared + 1 private each
+    key = jax.random.PRNGKey(3)
+    kq, kp = jax.random.split(key)
+    q1 = jax.random.normal(kq, (1, W, H, d))
+    q = jnp.concatenate([q1, q1], axis=0)
+    k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B,
+                                              shared_prefix=2)
+    assert (np.asarray(tables[0, :2]) == np.asarray(tables[1, :2])).all()
+    assert tables[0, 2] != tables[1, 2]
+    # q_pos tops out at lengths + W - 1 = 15: every attended key lives in
+    # the shared prefix blocks
+    lengths = jnp.asarray([2 * bs - W, 2 * bs - W])
+    out = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+
+def test_sink_tail_blocks_never_contribute():
+    """Table entries past the allocation point alias sink block 0: poisoning
+    the sink must not change the output (causal masking kills the tail)."""
+    B, W, H, KV, d, bs, nb = 1, 4, 2, 1, 16, 8, 4
+    P = 1 + nb
+    key = jax.random.PRNGKey(11)
+    kq, kp = jax.random.split(key)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k_pool, v_pool, _ = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    tables = jnp.asarray([[1, 2, 0, 0]], jnp.int32)   # 2 real blocks + sink
+    lengths = jnp.asarray([2 * bs - W], jnp.int32)
+    base = paged_attention(q, k_pool, v_pool, tables, lengths,
+                           interpret=True)
+    poisoned_k = k_pool.at[0].set(1e9)
+    poisoned_v = v_pool.at[0].set(-1e9)
+    got = paged_attention(q, poisoned_k, poisoned_v, tables, lengths,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+@pytest.mark.parametrize("W", [1, 4])
+def test_paged_latent_kernel_matches_ref(W):
+    B, H, r, dr, bs, nb = 2, 4, 24, 16, 16, 3
+    P = 1 + B * nb
+    key = jax.random.PRNGKey(W)
+    k1, k2, k3, k4, kl = jax.random.split(key, 5)
+    q_lat = jax.random.normal(k1, (B, W, H, r))
+    q_rope = jax.random.normal(k2, (B, W, H, dr))
+    c_pool = jax.random.normal(k3, (P, bs, r))
+    kr_pool = jax.random.normal(k4, (P, bs, dr))
+    ids = np.arange(1, P).reshape(B, nb)
+    tables = jnp.asarray(ids, jnp.int32)
+    lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
+    scale = 1.0 / np.sqrt(r + dr)
+    got = paged_latent_attention(q_lat, q_rope, c_pool, kr_pool, tables,
+                                 lengths, scale, interpret=True)
+    want = paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths,
+                            scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_write_window_paged_targets_physical_slots():
+    """Window rows land at table-resolved physical offsets; rows whose table
+    is all-zero (cleared slots) land in the sink block."""
+    P, bs, KV, d = 5, 4, 1, 8
+    B, W, nb = 2, 3, 3
+    pool = jnp.zeros((P, bs, KV, d))
+    new = jnp.ones((B, W, KV, d)) * jnp.arange(1, B * W + 1).reshape(
+        B, W, 1, 1)
+    tables = jnp.asarray([[2, 3, 4], [0, 0, 0]], jnp.int32)
+    cache_len = jnp.asarray([3, 0], jnp.int32)   # row 0 straddles blocks
+    out = np.asarray(write_window_paged(pool, new, tables, cache_len))
+    # row 0: positions 3,4,5 -> block 2 slot 3, block 3 slots 0,1
+    assert out[2, 3, 0, 0] == 1 and out[3, 0, 0, 0] == 2
+    assert out[3, 1, 0, 0] == 3
+    # row 1 (cleared): positions 0..2 -> sink block 0
+    assert (out[0, :3, 0, 0] == [4, 5, 6]).all()
+    # untouched slots stay zero
+    assert out[4].sum() == 0 and out[2, :3].sum() == 0
+
+
+def test_dense_decode_kernel_ragged_tail_no_pad():
+    """Satellite: S not divisible by block_k must be masked in-kernel (the
+    old path jnp.pad'ed a full cache copy); oracle equality at a ragged S."""
+    B, W, H, KV, d, S = 2, 4, 2, 1, 32, 150
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, W, H, d))
+    k = jax.random.normal(kk, (B, S, KV, d))
+    v = jax.random.normal(kv, (B, S, KV, d))
+    lengths = jax.random.randint(kl, (B,), 1, S - W)
+    got = decode_attention(q, k, v, lengths, block_k=64, interpret=True)
+    want = decode_attention(q, k, v, lengths, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,77 @@
+"""``decode_window_paged`` vs the dense gather->decode->view path, at the
+model level, across mixer families: pure GQA (qwen), sliding-window local
+(gemma3), MLA latent (deepseek), and a recurrent hybrid (jamba — recurrent
+states ride un-paged next to paged attention leaves).
+
+The gather-view fallback must be BITWISE identical to gathering the dense
+view and running ``decode_window`` (it is literally the same op sequence on
+the same values); the Pallas kernel path re-orders the softmax reduction so
+it gets a tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import PagedView, TransformerLM
+
+ARCHS = ["qwen3-1.7b", "gemma3-1b", "deepseek-v3-671b",
+         "jamba-1.5-large-398b"]
+
+
+def _randomized_paged(cfg, batch, num_blocks, block_size, key):
+    """A paged cache whose every leaf is random — simulates arbitrary prior
+    rounds; both paths read the same physical values."""
+    paged = TransformerLM.init_paged_cache(cfg, batch, num_blocks,
+                                           block_size)
+    leaves, treedef = jax.tree.flatten(paged)
+    keys = jax.random.split(key, len(leaves))
+    leaves = [0.1 * jax.random.normal(k, l.shape, l.dtype)
+              for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_window_paged_matches_dense_view(arch):
+    cfg = get_config(arch, reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    B, W, bs, nb = 2, 4, 4, 6
+    num_blocks = 1 + B * nb
+    paged = _randomized_paged(cfg, B, num_blocks, bs,
+                              jax.random.PRNGKey(1))
+    tables = jnp.asarray(np.arange(1, num_blocks).reshape(B, nb), jnp.int32)
+    rows = jnp.arange(B)
+    cache_len = jnp.asarray([3, 7], jnp.int32)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, W), 0, cfg.vocab)
+
+    view = TransformerLM.gather_paged(cfg, paged, tables, rows)
+    logits_d, _, _ = TransformerLM.decode_window(params, cfg, tokens, view,
+                                                 cache_len)
+    logits_p, _, _ = TransformerLM.decode_window_paged(
+        params, cfg, tokens, paged, PagedView(tables, rows,
+                                              use_kernel=False), cache_len)
+    np.testing.assert_array_equal(np.asarray(logits_p), np.asarray(logits_d))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_window_paged_kernel_close_to_fallback(arch):
+    cfg = get_config(arch, reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    B, W, bs, nb = 2, 4, 4, 6
+    num_blocks = 1 + B * nb
+    paged = _randomized_paged(cfg, B, num_blocks, bs,
+                              jax.random.PRNGKey(1))
+    tables = jnp.asarray(np.arange(1, num_blocks).reshape(B, nb), jnp.int32)
+    rows = jnp.arange(B)
+    cache_len = jnp.asarray([3, 7], jnp.int32)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, W), 0, cfg.vocab)
+
+    logits_f, _, _ = TransformerLM.decode_window_paged(
+        params, cfg, tokens, paged, PagedView(tables, rows,
+                                              use_kernel=False), cache_len)
+    logits_k, _, _ = TransformerLM.decode_window_paged(
+        params, cfg, tokens, paged,
+        PagedView(tables, rows, use_kernel=True, interpret=True), cache_len)
+    np.testing.assert_allclose(np.asarray(logits_k), np.asarray(logits_f),
+                               rtol=2e-4, atol=2e-4)
