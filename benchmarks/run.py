@@ -50,6 +50,19 @@ def _csv_rows_table(rows):
                             f"paged_MB={r['paged_bytes']/1e6:.2f};"
                             f"dense_MB={r['dense_bytes']/1e6:.2f};"
                             f"traffic_ratio={r['traffic_ratio']}"))
+            elif r.get("scenario") == "donation":
+                out.append((f"serving/donation/cap{r['capacity']}", "0",
+                            f"aliased_MB={r['donated_alias_bytes']/1e6:.2f};"
+                            f"pool_MB={r['pool_bytes']/1e6:.2f};"
+                            f"donated_MB={r['donated_live_bytes']/1e6:.2f};"
+                            f"copied_MB={r['copied_live_bytes']/1e6:.2f};"
+                            f"backend={r['backend']}"))
+            elif r.get("scenario") == "mesh_serving":
+                out.append((f"serving/mesh/data{r['data']}",
+                            f"{r['mesh_wall_us_per_round']}",
+                            f"single_wall_us={r['single_wall_us_per_round']};"
+                            f"bit_exact={r['bit_exact']};"
+                            f"backend={r['backend']}"))
             elif "scenario" in r:
                 us = r["time_s"] * 1e6 / max(1, r["verify_rounds"])
                 out.append((f"serving/{r['scenario']}", f"{us:.0f}",
@@ -98,17 +111,23 @@ def _write_bench_serving(rows) -> None:
 
 def serving_only() -> None:
     """Training-free serving baseline for CI: the paged-vs-dense capacity
-    sweep plus one mixed-traffic run (prefix hit rate, latency percentiles)
-    on untrained weights — no acceptance bar asserted for the latter."""
+    sweep, the donation live-bytes measurement, the mesh-serving equality
+    row (when the host exposes >= 2 devices — the CI mesh job forces 8),
+    plus one mixed-traffic run (prefix hit rate, latency percentiles) on
+    untrained weights — no acceptance bar asserted for the latter."""
     import jax
 
-    from benchmarks.serving_bench import mixed_traffic, paged_vs_dense
+    from benchmarks.serving_bench import (donation_round_bytes,
+                                          mesh_serving, mixed_traffic,
+                                          paged_vs_dense)
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
 
     cfg = get_config("qwen3-1.7b", reduced=True)
     params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
     rows = paged_vs_dense(cfg, params)
+    rows.extend(donation_round_bytes(cfg, params))
+    rows.extend(mesh_serving(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))
     print("name,us_per_call,derived")
     for row in _csv_rows_table(rows):

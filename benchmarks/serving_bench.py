@@ -26,7 +26,7 @@ from repro.data.synthetic import repetitive_tokens, synthetic_tokens
 from repro.engine import ContinuousBatcher, PredictiveSampler, Request
 from repro.models.losses import lm_loss
 from repro.models.transformer import TransformerLM
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, ServingTopology
 
 
 def train_tiny_lm(cfg, steps=300, seed=0, gen=synthetic_tokens):
@@ -139,6 +139,12 @@ def run(fast: bool = True):
 
     # tentpole: block-table decode vs the dense gather/scatter round-trip
     rows.extend(paged_vs_dense(cfg, params_rep))
+
+    # round-buffer donation: per-round live bytes with vs without
+    rows.extend(donation_round_bytes(cfg, params_rep))
+
+    # mesh serving (needs >= 2 devices; skipped on a single-device host)
+    rows.extend(mesh_serving(cfg, params_rep))
     return rows
 
 
@@ -230,6 +236,116 @@ def paged_vs_dense(cfg, params=None, capacities=(128, 512, 2048),
     # the paged traffic model must be flat in capacity; dense linear
     assert rows[-1]["paged_bytes"] == rows[0]["paged_bytes"]
     assert rows[-1]["dense_bytes"] > rows[0]["dense_bytes"]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Round-buffer donation: per-round live bytes (satellite, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _round_memory(eng, W: int = 8) -> dict:
+    """XLA memory analysis of the compiled verify round: live bytes
+    (arguments + outputs + temps - donation aliasing) and the aliased
+    bytes the donation actually established."""
+    fn = eng._round_fn(W)
+    args = (eng.params, eng.paged, eng._tables_device(), eng.tokens, eng.n,
+            eng.cand, eng.seq_ids, eng._target_device())
+    ma = fn.lower(*args).compile().memory_analysis()
+    if ma is None:                       # backend without memory analysis
+        return {"live_bytes": -1, "alias_bytes": -1}
+    live = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {"live_bytes": live, "alias_bytes": int(ma.alias_size_in_bytes)}
+
+
+def donation_round_bytes(cfg, params=None, batch: int = 2,
+                         max_len: int = 1024, seed: int = 13):
+    """Satellite measurement: donated vs copied round buffers.
+
+    The donation contract is the assert: the round must alias at least the
+    whole physical pool in place (``alias_bytes >= pool_bytes``) — without
+    ``donate_argnums`` the old pool (dead on return) is a second full copy
+    held across every round (``copied_live_bytes``). How much of the saving
+    the backend realizes as peak-memory drop is backend-dependent: the CPU
+    backend materializes the window scatter into a temp either way (the
+    ``backend`` field records what an artifact measured); TPU updates the
+    aliased pool in place."""
+    if params is None:
+        params = TransformerLM.init(jax.random.PRNGKey(seed), cfg)
+    row = {"table": "serving", "scenario": "donation", "capacity": max_len,
+           "batch": batch, "backend": jax.default_backend()}
+    for donate in (True, False):
+        eng = ServingEngine(cfg, params, batch=batch, window_max=8,
+                            max_len=max_len, block_size=16,
+                            eps_key=jax.random.PRNGKey(3), adaptive=False,
+                            prefix_cache=False, donate=donate)
+        mem = _round_memory(eng)
+        key = "donated" if donate else "copied"
+        row[f"{key}_live_bytes"] = mem["live_bytes"]
+        row[f"{key}_alias_bytes"] = mem["alias_bytes"]
+        if donate:
+            row["pool_bytes"] = int(sum(
+                x.nbytes for x in jax.tree.leaves(eng.paged)))
+    row["saved_bytes"] = row["copied_live_bytes"] - row["donated_live_bytes"]
+    if row["donated_alias_bytes"] >= 0:
+        # the whole pool (+ per-slot state) must be donated in place; the
+        # un-donated round must not alias anything
+        assert row["donated_alias_bytes"] >= row["pool_bytes"], row
+        assert row["copied_alias_bytes"] == 0, row
+    return [row]
+
+
+# ---------------------------------------------------------------------------
+# Mesh serving (DESIGN.md §10): sharded pools, routed admission
+# ---------------------------------------------------------------------------
+
+def mesh_serving(cfg, params, batch: int = 4, new_tokens: int = 12,
+                 seed: int = 17):
+    """Single-device vs data-sharded engine on identical traffic: asserts
+    bitwise token equality (the topology exactness contract) and reports
+    per-round wall time for each data size the host's devices allow."""
+    import jax as _jax
+
+    from repro.launch.mesh import make_host_mesh
+
+    n_dev = len(_jax.devices())
+    data_sizes = [d for d in (2, 4) if d <= n_dev and batch % d == 0]
+    if not data_sizes:
+        return []
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 10)))
+               for _ in range(2 * batch)]
+
+    def drain(eng):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, new_tokens=new_tokens))
+        t0 = time.time()
+        done = eng.run()
+        dt = time.time() - t0
+        return {r.uid: r.result for r in done}, dt, eng
+
+    kw = dict(batch=batch, window_max=8, max_len=128, block_size=16,
+              eps_key=jax.random.PRNGKey(3), adaptive=False,
+              prefix_cache=False)
+    ref, dt_single, eng_s = drain(ServingEngine(cfg, params, **kw))
+    rows = []
+    for d in data_sizes:
+        topo = ServingTopology(make_host_mesh(d, 1))
+        got, dt, eng_m = drain(ServingEngine(cfg, params, topology=topo,
+                                             **kw))
+        for uid, toks in ref.items():
+            assert (got[uid] == toks).all(), \
+                f"mesh serving diverged from single device (uid {uid})"
+        rows.append({
+            "table": "serving", "scenario": "mesh_serving", "data": d,
+            "batch": batch, "backend": jax.default_backend(),
+            "bit_exact": True,
+            "rounds": eng_m.metrics.rounds,
+            "single_wall_us_per_round": round(
+                dt_single * 1e6 / max(1, eng_s.metrics.rounds)),
+            "mesh_wall_us_per_round": round(
+                dt * 1e6 / max(1, eng_m.metrics.rounds)),
+        })
     return rows
 
 

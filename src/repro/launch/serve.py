@@ -4,7 +4,12 @@
 
 Drives ``repro.serving.ServingEngine`` (paged KV blocks, prefix cache,
 adaptive speculation window, telemetry). ``--no-adaptive`` pins the window;
-``--no-prefix-cache`` disables block sharing.
+``--no-prefix-cache`` disables block sharing; ``--mesh data[,model]`` runs
+the engine on a device mesh (``ServingTopology``: per-data-shard slot
+ranges + block sub-pools, shard_map round step; params replicated over
+data and — when model > 1 — tensor-sharded via
+``serving_param_shardings``); ``--no-donate`` disables round-buffer
+donation (A/B for the copy-per-round cost).
 
 Also exports ``make_serve_step`` — the W-token verify step the multi-pod
 dry-run lowers for the decode shapes (decode_32k / long_500k).
@@ -22,7 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.reparam import reparam_argmax
 from repro.models.transformer import TransformerLM
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, ServingTopology
 
 
 def make_serve_step(cfg, window: int = 8, low_memory: bool = False):
@@ -56,6 +61,40 @@ def make_serve_step(cfg, window: int = 8, low_memory: bool = False):
     return serve_step
 
 
+def make_serving_topology(mesh_arg: str):
+    """``--mesh data[,model]`` -> ``ServingTopology`` over a host mesh.
+
+    Requires ``data * model`` visible devices (force with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU)."""
+    from repro.launch.mesh import make_host_mesh
+
+    try:
+        parts = [int(p) for p in mesh_arg.split(",")]
+    except ValueError:
+        parts = []
+    if not 1 <= len(parts) <= 2:
+        raise SystemExit(f"--mesh wants DATA or DATA,MODEL, got {mesh_arg!r}")
+    data, model = (parts + [1])[:2]
+    n = len(jax.devices())
+    if data * model > n:
+        raise SystemExit(
+            f"--mesh {mesh_arg} needs {data * model} devices, have {n} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=...)")
+    return ServingTopology(make_host_mesh(data, model))
+
+
+def place_params(params, topo: ServingTopology):
+    """Replicate params over data; tensor-shard over model when present."""
+    if topo.mesh is None:
+        return params
+    from repro.sharding.rules import replicated, serving_param_shardings
+
+    if all(topo.mesh.shape[a] == 1 for a in topo.auto_axes):
+        return jax.device_put(params, replicated(topo.mesh))
+    shapes = jax.eval_shape(lambda: params)
+    return jax.device_put(params, serving_param_shardings(shapes, topo.mesh))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -71,16 +110,27 @@ def main(argv=None):
     ap.add_argument("--no-adaptive", action="store_true",
                     help="pin W instead of adapting it to acceptance")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="DATA[,MODEL]",
+                    help="run on a device mesh, e.g. --mesh 2 or --mesh 4,2")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable round-buffer donation (keeps the old "
+                         "copy-per-round behaviour; for A/B measurement)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    topo = ServingTopology() if args.mesh is None \
+        else make_serving_topology(args.mesh)
+    params = place_params(params, topo)
     engine = ServingEngine(cfg, params, batch=args.batch,
                            window_max=args.window, max_len=args.max_len,
                            eps_key=jax.random.PRNGKey(1),
                            block_size=args.block_size,
                            adaptive=not args.no_adaptive,
-                           prefix_cache=not args.no_prefix_cache)
+                           prefix_cache=not args.no_prefix_cache,
+                           topology=topo, donate=not args.no_donate)
+    if topo.mesh is not None:
+        print(f"serving on {topo}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(

@@ -537,6 +537,22 @@ class TransformerLM:
                                         lambda stacked, leaf: leaf)
 
     @staticmethod
+    def paged_partition_specs(cfg: ModelConfig, paged, data_axis="data"):
+        """PartitionSpec pytree for a mesh-sharded paged cache: every leaf's
+        pool dim (attention: physical blocks) or slot dim (recurrent states:
+        batch) is sharded over ``data_axis``; scanned segments keep their
+        leading layer axis unsharded. These are the shard_map in/out specs
+        of the mesh serving round (DESIGN.md §10) — each data shard owns a
+        contiguous sub-pool and its tables hold shard-local block ids, so
+        paged indirection never crosses shards."""
+        from jax.sharding import PartitionSpec as P
+
+        def spec(stacked, leaf):
+            return P(None, data_axis) if stacked else P(data_axis)
+
+        return TransformerLM._map_paged(cfg, (paged,), spec, spec)
+
+    @staticmethod
     def gather_paged(cfg: ModelConfig, paged, tables, rows):
         """Materialize a dense cache view for ``decode_window``.
 

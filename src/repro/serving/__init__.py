@@ -1,15 +1,19 @@
 """Paged KV-cache serving runtime with adaptive speculation and telemetry.
 
-See DESIGN.md §6-9 and ``repro.serving.engine.ServingEngine`` for the
+See DESIGN.md §6-10 and ``repro.serving.engine.ServingEngine`` for the
 architecture; ``repro.engine.ContinuousBatcher`` remains as a thin
-compatibility alias over this subsystem.
+compatibility alias over this subsystem. ``ServingTopology`` maps an engine
+onto a device mesh (per-data-shard slot ranges + block sub-pools, shard_map
+round step); ``ShardedBlockPool`` routes admissions by pool pressure.
 """
 from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
 from repro.serving.adaptive import AdaptiveWindowController
-from repro.serving.blocks import BlockManager, chain_hashes
+from repro.serving.blocks import BlockManager, ShardedBlockPool, chain_hashes
 from repro.serving.engine import ServingEngine
 from repro.serving.metrics import EngineMetrics, percentile
+from repro.serving.topology import ServingTopology
 
 __all__ = ["AdmissionQueue", "Request", "prefill_chunks",
-           "AdaptiveWindowController", "BlockManager", "chain_hashes",
-           "ServingEngine", "EngineMetrics", "percentile"]
+           "AdaptiveWindowController", "BlockManager", "ShardedBlockPool",
+           "chain_hashes", "ServingEngine", "EngineMetrics", "percentile",
+           "ServingTopology"]

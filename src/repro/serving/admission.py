@@ -1,10 +1,14 @@
-"""Request admission: priority/FCFS queueing for the serving engine.
+"""Request admission: priority/deadline/FCFS queueing for the serving engine.
 
-The queue orders by ``(priority, arrival_seq)`` — lower priority value first,
-FIFO within a class — and admits a request only when the engine has both a
+The queue orders by ``(priority, deadline, arrival_seq)`` — lower priority
+value first; within a class, earliest absolute deadline first (EDF;
+requests without a deadline sort last and fall back to FIFO via the arrival
+sequence number) — and admits a request only when the engine has both a
 free batch slot and enough physical blocks to cover its prompt plus its full
 generation target (admission control, not mid-flight preemption: a request
-admitted here can always run to completion).
+admitted here can always run to completion). ``Request.deadline`` is a
+latency SLO in seconds from submission; the engine counts blown SLOs in
+``EngineMetrics.deadline_miss_count``.
 
 Prefill itself is *row-local and chunked* (DESIGN.md §6): the admitted row's
 blocks are gathered into a batch-1 cache view and the un-cached tail of the
@@ -16,6 +20,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -28,7 +33,8 @@ class Request:
     uid: int
     prompt: np.ndarray           # (L_p,) int
     new_tokens: int
-    priority: int = 0            # lower = sooner (FCFS within a class)
+    priority: int = 0            # lower = sooner (EDF/FCFS within a class)
+    deadline: Optional[float] = None   # latency SLO seconds from submit
     noise_seed: Optional[int] = None   # noise-stream id; defaults to uid
     result: Optional[np.ndarray] = None
     calls_used: int = 0          # verify rounds this request participated in
@@ -50,6 +56,17 @@ class Request:
     def queue_wait(self) -> float:
         return self.admit_time - self.submit_time
 
+    @property
+    def deadline_time(self) -> float:
+        """Absolute SLO expiry (monotonic clock); +inf without a deadline."""
+        if self.deadline is None:
+            return math.inf
+        return self.submit_time + self.deadline
+
+    @property
+    def missed_deadline(self) -> bool:
+        return self.deadline is not None and self.finish_time > self.deadline_time
+
 
 def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
     """Greedy power-of-two cover of ``length`` positions (largest first).
@@ -67,7 +84,7 @@ def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
 
 
 class AdmissionQueue:
-    """Priority + FCFS admission queue with simple occupancy accounting."""
+    """Priority + earliest-deadline + FCFS admission queue."""
 
     def __init__(self):
         self._heap: list = []
@@ -75,14 +92,14 @@ class AdmissionQueue:
 
     def push(self, req: Request):
         req.submit_time = time.monotonic()
-        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+        heapq.heappush(self._heap, (req.priority, req.deadline_time,
+                                    next(self._seq), req))
 
     def pop(self) -> Request:
-        _, _, req = heapq.heappop(self._heap)
-        return req
+        return heapq.heappop(self._heap)[-1]
 
     def peek(self) -> Optional[Request]:
-        return self._heap[0][2] if self._heap else None
+        return self._heap[0][-1] if self._heap else None
 
     def __len__(self) -> int:
         return len(self._heap)

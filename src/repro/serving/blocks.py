@@ -159,3 +159,63 @@ class BlockManager:
     def release_all(self, blocks):
         for b in blocks:
             self.release(b)
+
+
+class ShardedBlockPool:
+    """Per-data-shard ``BlockManager``s with pool-pressure routing on top
+    (DESIGN.md §10).
+
+    Each shard owns an independent sub-pool of ``blocks_per_shard`` physical
+    blocks. Ids are *shard-local* (global pool id = shard * blocks_per_shard
+    + local id) and each sub-pool keeps its own reserved sink block (local
+    id 0) and its own prefix cache — block sharing never crosses shards,
+    which is what keeps the mesh round's table indirection shard-local.
+    ``num_shards=1`` is the single-device engine's pool, bit-for-bit the old
+    bare ``BlockManager`` behaviour.
+    """
+
+    def __init__(self, num_shards: int, blocks_per_shard: int,
+                 block_size: int):
+        assert num_shards >= 1
+        self.num_shards = num_shards
+        self.blocks_per_shard = blocks_per_shard
+        self.block_size = block_size
+        self.shards = [BlockManager(blocks_per_shard, block_size)
+                       for _ in range(num_shards)]
+
+    def manager(self, shard: int) -> BlockManager:
+        return self.shards[shard]
+
+    # -- aggregate capacity ------------------------------------------------
+    def available(self, shard: Optional[int] = None) -> int:
+        if shard is not None:
+            return self.shards[shard].available()
+        return sum(m.available() for m in self.shards)
+
+    def blocks_in_use(self) -> int:
+        return sum(m.blocks_in_use() for m in self.shards)
+
+    # -- admission routing -------------------------------------------------
+    @staticmethod
+    def route(need: int, headroom_by_shard: dict) -> Optional[int]:
+        """Pool-pressure routing: among candidate shards (caller filters to
+        those with a free batch slot), pick the one with the most headroom
+        (free blocks minus outstanding reservations) that still covers the
+        request's worst-case ``need``; lowest shard id breaks ties. Returns
+        None when no shard can take the request."""
+        best = None
+        for s in sorted(headroom_by_shard):
+            head = headroom_by_shard[s]
+            if head >= need and (best is None or head > best[1]):
+                best = (s, head)
+        return None if best is None else best[0]
+
+    def stats_export(self) -> dict:
+        """Counters summed across shards; hit rate recomputed globally."""
+        out: dict = {}
+        for m in self.shards:
+            for k, v in m.stats.export().items():
+                out[k] = out.get(k, 0) + v
+        total = out.get("prefix_hits", 0) + out.get("prefix_misses", 0)
+        out["prefix_hit_rate"] = (out["prefix_hits"] / total) if total else 0.0
+        return out

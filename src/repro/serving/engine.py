@@ -1,10 +1,10 @@
-"""`ServingEngine`: paged predictive-sampling serving runtime (DESIGN.md §6-8).
+"""`ServingEngine`: paged predictive-sampling serving runtime (DESIGN.md §6-10).
 
 Subsumes the seed ``ContinuousBatcher`` (kept as a thin alias in
-``repro.engine.scheduler``): requests are admitted from a priority/FCFS queue
-into free slots of a fixed-width batch, every verify round advances each
-sequence by its own accept length, and finished sequences free their slot and
-blocks immediately. What's new over the dense batcher:
+``repro.engine.scheduler``): requests are admitted from a priority/deadline
+queue into free slots of a fixed-width batch, every verify round advances
+each sequence by its own accept length, and finished sequences free their
+slot and blocks immediately. What's new over the dense batcher:
 
 * **Paged KV cache** — attention K/V lives in fixed-size blocks of a shared
   physical pool (``TransformerLM.init_paged_cache``); verify rounds and
@@ -15,22 +15,36 @@ blocks immediately. What's new over the dense batcher:
   built on the round hot path — ``paged_attention=False`` restores the
   legacy gather/scatter round-trip (kept as the benchmark baseline).
   Admission allocates blocks instead of zeroing a whole cache row.
+* **Mesh sharding** — a ``ServingTopology`` splits the batch slots and the
+  physical pool into per-data-shard halves; the verify round runs under
+  shard_map manual over "data", so each shard decodes its rows against its
+  own sub-pool through *shard-local* block tables (zero collectives on the
+  round hot path; DESIGN.md §10). Admission routes requests to the shard
+  with the most block headroom. Tokens are bit-identical to the
+  single-device engine (placement-independent noise streams).
 * **Prefix cache** — full prompt blocks are content-hashed (chained keys);
   admissions sharing a prompt prefix point their tables at the cached blocks
   and skip recomputing them (attention-only models; recurrent stacks carry
   un-paged per-slot state, so they always prefill — see ``_has_recurrent``).
+  Under a mesh the cache is per-shard (blocks never cross shards).
 * **Row-local chunked prefill** — an admitted row prefills through batch-1
   windows over its own blocks; nothing scales with the batch width.
 * **Adaptive speculation** — the verify window W is retuned per round from
   the observed accept-length EWMA (``AdaptiveWindowController``), bounded to
   powers of two in ``[1, w_max]`` so at most ``log2(w_max)+1`` round shapes
   compile.
-* **Telemetry** — per-request latency/accept/ARM-call counters and engine
-  gauges exported as plain dicts (``EngineMetrics``).
+* **Donated round buffers** — the physical pool and per-slot device state
+  are dead the moment a round returns their successors, so the jitted round
+  and prefill steps donate them (``donate_argnums``): XLA updates the pool
+  in place instead of holding two full copies live per round
+  (``donate=False`` restores the copying behaviour for A/B measurement).
+* **Telemetry** — per-request latency/accept/ARM-call counters, deadline
+  (SLO) misses, and engine gauges exported as plain dicts (``EngineMetrics``).
 
 Exactness: every path emits tokens bit-identical to a per-request
 ``PredictiveSampler.generate`` run with the same eps key and noise-stream id
-(``Request.seq_id``) — asserted in tests/serving/test_engine.py.
+(``Request.seq_id``) — asserted in tests/serving/test_engine.py and, for the
+mesh paths, tests/serving/test_mesh_engine.py.
 """
 from __future__ import annotations
 
@@ -47,8 +61,9 @@ from repro.kernels import resolve_interpret
 from repro.models.transformer import PagedView, TransformerLM
 from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
 from repro.serving.adaptive import AdaptiveWindowController
-from repro.serving.blocks import BlockManager
+from repro.serving.blocks import ShardedBlockPool
 from repro.serving.metrics import EngineMetrics
+from repro.serving.topology import ServingTopology
 
 
 def _has_recurrent(cfg) -> bool:
@@ -65,7 +80,9 @@ class ServingEngine:
                  use_forecast_heads: bool = False,
                  use_verify_kernel: bool = False,
                  paged_attention: bool = True,
-                 use_attention_kernel: Optional[bool] = None):
+                 use_attention_kernel: Optional[bool] = None,
+                 topology: Optional[ServingTopology] = None,
+                 donate: bool = True):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         self.cfg = cfg
@@ -87,18 +104,32 @@ class ServingEngine:
         if use_attention_kernel is None:
             use_attention_kernel = not resolve_interpret(None)
         self.use_attention_kernel = use_attention_kernel
+        # donate the pool + per-slot state into the jitted round/prefill
+        # steps (their previous values are dead once the step returns)
+        self.donate = donate
         self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
             eps_key if eps_key is not None else jax.random.PRNGKey(0),
             cfg.vocab)
 
+        # ---- topology (slot ranges + block sub-pools per data shard) -----
+        self.topo = topology if topology is not None else ServingTopology()
+        D = self.topo.data_size
+        self.B_local = self.topo.slots_per_shard(batch)
+
         # ---- paged cache ------------------------------------------------
         self.nb = -(-(max_len + window_max) // block_size)  # table width
         if num_blocks is None:
-            # full occupancy + slack so unreferenced prefix blocks survive
-            num_blocks = 1 + batch * self.nb + 2 * self.nb
-        self.blocks = BlockManager(num_blocks, block_size)
-        self.paged = TransformerLM.init_paged_cache(
-            cfg, batch, num_blocks, block_size, dtype=cfg.param_dtype)
+            # per shard: full occupancy + slack so unreferenced prefix
+            # blocks survive
+            num_blocks = 1 + self.B_local * self.nb + 2 * self.nb
+        # ``num_blocks`` is PER DATA SHARD; the device pool holds D of them
+        self.pool = ShardedBlockPool(D, num_blocks, block_size)
+        self.paged = self.topo.put_paged(cfg, TransformerLM.init_paged_cache(
+            cfg, batch, D * num_blocks, block_size, dtype=cfg.param_dtype))
+        self._paged_specs = TransformerLM.paged_partition_specs(
+            cfg, self.paged, data_axis=self.topo.data_axis)
+        # block tables hold SHARD-LOCAL ids (each shard's sink is local 0);
+        # host-side code converts to global pool ids via the shard offset
         self.tables = np.zeros((batch, self.nb), np.int32)
         self.owned: list[list[int]] = [[] for _ in range(batch)]
         # prefix-cache hits need the post-prefix recurrent state too, which
@@ -117,11 +148,19 @@ class ServingEngine:
         # completion guarantee: lazy growth may never exhaust the pool)
         self.reserved = np.zeros(batch, np.int64)
 
-        # ---- per-slot device state -------------------------------------
-        self.tokens = jnp.zeros((batch, max_len), jnp.int32)
-        self.n = jnp.ones((batch,), jnp.int32)          # cleared-row sentinel
-        self.cand = jnp.zeros((batch, window_max), jnp.int32)
-        self.seq_ids = jnp.zeros((batch,), jnp.int32)
+        # ---- per-slot device state (slot dim sharded over "data") -------
+        self.tokens = self.topo.put_batch(jnp.zeros((batch, max_len),
+                                                    jnp.int32))
+        self.n = self.topo.put_batch(jnp.ones((batch,), jnp.int32))
+        # ^ cleared-row sentinel n=1
+        self.cand = self.topo.put_batch(jnp.zeros((batch, window_max),
+                                                  jnp.int32))
+        self.seq_ids = self.topo.put_batch(jnp.zeros((batch,), jnp.int32))
+        # cached device copies of host-owned admission state; invalidated
+        # only when the host actually mutates them (admission, slot clear,
+        # table growth) instead of re-uploading every round
+        self._tables_dev = None
+        self._target_dev = None
 
         self._round_fns: dict[int, callable] = {}
         self._prefill_fns: dict[int, callable] = {}
@@ -145,12 +184,19 @@ class ServingEngine:
         window K/V lands straight in its physical blocks and attention
         streams the pool (per-round HBM traffic independent of pool size).
         Legacy mode is the dense round-trip: gather the whole view, decode,
-        scatter the window back (O(B*S*d) both ways around the round)."""
+        scatter the window back (O(B*S*d) both ways around the round).
+
+        Under a mesh topology the body runs shard_map-manual over "data":
+        each shard sees its local rows, its local tables, and its local
+        block sub-pool — the indirection never crosses shards. The old pool
+        and per-slot state are donated (dead after the round), so XLA
+        updates the pool in place instead of copying it every round."""
         if W not in self._round_fns:
-            cfg, B = self.cfg, self.B
+            cfg = self.cfg
 
             def fn(params, paged, tables, tokens, n, cand, seq_ids, target):
-                rows = jnp.arange(B)
+                R = tokens.shape[0]          # rows on this shard (B/D)
+                rows = jnp.arange(R)
                 if self.paged_attention:
                     cache = paged
                     pv = PagedView(tables, rows, self.use_attention_kernel)
@@ -160,8 +206,8 @@ class ServingEngine:
                     pv = None
                 st = GenState(tokens, n, cand[:, :W], cache,
                               jnp.zeros((), jnp.int32),
-                              jnp.zeros((B,), jnp.int32),
-                              jnp.zeros((B,), jnp.int32), seq_ids)
+                              jnp.zeros((R,), jnp.int32),
+                              jnp.zeros((R,), jnp.int32), seq_ids)
                 st2 = verify_round(
                     params, cfg, self.eps_fn, st, target,
                     use_forecast_heads=self.use_forecast_heads,
@@ -176,10 +222,20 @@ class ServingEngine:
                 cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
                 return paged2, st2.tokens, st2.n, cand2, st2.n - n
 
-            self._round_fns[W] = jax.jit(fn)
+            wrapped = self.topo.wrap_round(fn, self._paged_specs,
+                                           n_batch_in=6, n_batch_out=4)
+            # donate pool + tokens/n/cand (dead after the round); tables,
+            # seq_ids and target are cached host-owned uploads — kept alive
+            donate = (1, 3, 4, 5) if self.donate else ()
+            self._round_fns[W] = jax.jit(wrapped, donate_argnums=donate)
         return self._round_fns[W]
 
     def _prefill_fn(self, C: int):
+        """Row-local chunked prefill. Runs as a plain (GSPMD) jit even under
+        a mesh — a batch-1 write into one shard's sub-pool is admission-path
+        work, so cross-shard traffic here is acceptable; ``table_row``
+        carries GLOBAL pool ids (local id + shard offset). The old pool is
+        donated, exactly like the round step."""
         if C not in self._prefill_fns:
             cfg = self.cfg
 
@@ -202,27 +258,47 @@ class ServingEngine:
                     cfg, paged, sel, table_row, row, start, C,
                     jnp.ones((1,), bool))
 
-            self._prefill_fns[C] = jax.jit(fn)
+            kw = {}
+            if self.topo.mesh is not None:
+                from repro.sharding.rules import paged_cache_shardings
+                kw["out_shardings"] = paged_cache_shardings(
+                    cfg, self.paged, self.topo.mesh,
+                    data_axis=self.topo.data_axis)
+            donate = (1,) if self.donate else ()
+            self._prefill_fns[C] = jax.jit(fn, donate_argnums=donate, **kw)
         return self._prefill_fns[C]
 
     # -- slot / block plumbing ---------------------------------------------
+    def _mgr(self, b: int):
+        """The BlockManager of the data shard owning batch slot ``b``."""
+        return self.pool.manager(self.topo.shard_of_slot(b, self.B))
+
+    def _table_offset(self, b: int) -> int:
+        """Global pool id of slot ``b``'s shard-local block 0."""
+        return self.topo.block_offset(self.topo.shard_of_slot(b, self.B),
+                                      self.pool.blocks_per_shard)
+
     def _ensure_capacity(self, b: int, upto_pos: int):
         """Grow slot ``b``'s block table to cover positions [0, upto_pos)."""
         need = -(-upto_pos // self.block_size)
         assert need <= self.nb, (need, self.nb)
+        mgr = self._mgr(b)
         while len(self.owned[b]) < need:
-            blk = self.blocks.alloc(1)[0]
+            blk = mgr.alloc(1)[0]
             self.tables[b, len(self.owned[b])] = blk
             self.owned[b].append(blk)
+            self._tables_dev = None
 
     def _clear_row(self, b: int):
         """Reset a released slot so its (inactive) lane reads no stale or
         garbage cache positions: n=1, cache_len=0 -> only its own window."""
-        self.blocks.release_all(self.owned[b])
+        self._mgr(b).release_all(self.owned[b])
         self.owned[b] = []
         self.tables[b] = 0
         self.target[b] = 0
         self.reserved[b] = 0
+        self._tables_dev = None
+        self._target_dev = None
         self.tokens = self.tokens.at[b].set(0)
         self.n = self.n.at[b].set(1)
         self.cand = self.cand.at[b].set(0)
@@ -234,38 +310,67 @@ class ServingEngine:
         self.paged = TransformerLM._map_paged(
             self.cfg, (self.paged,), lambda stacked, leaf: leaf, rec)
 
+    def _tables_device(self):
+        if self._tables_dev is None:
+            self._tables_dev = self.topo.put_batch(self.tables)
+        return self._tables_dev
+
+    def _target_device(self):
+        if self._target_dev is None:
+            self._target_dev = self.topo.put_batch(
+                self.target.astype(np.int32))
+        return self._target_dev
+
     # -- admission -----------------------------------------------------------
     def _worst_case_blocks(self, req: Request) -> int:
         # every prompt+generation block a fresh allocation, window at W_max
         return -(-(len(req.prompt) + req.new_tokens + self.W_max)
                  // self.block_size)
 
-    def _outstanding_reservations(self) -> int:
-        """Blocks already promised to in-flight slots but not yet allocated
-        (their tables grow lazily as n advances)."""
+    def _outstanding_reservations(self, shard: int) -> int:
+        """Blocks already promised to the shard's in-flight slots but not
+        yet allocated (their tables grow lazily as n advances)."""
         return int(sum(max(0, int(self.reserved[b]) - len(self.owned[b]))
-                       for b in range(self.B) if self.slots[b] is not None))
+                       for b in self.topo.slot_range(shard, self.B)
+                       if self.slots[b] is not None))
 
-    def _can_admit(self, req: Request) -> bool:
-        return (self.blocks.available() - self._outstanding_reservations()
-                >= self._worst_case_blocks(req))
+    def _free_slot_in(self, shard: int) -> Optional[int]:
+        for b in self.topo.slot_range(shard, self.B):
+            if self.slots[b] is None:
+                return b
+        return None
+
+    def _route(self, req: Request) -> Optional[int]:
+        """Pool-pressure admission routing: the free slot on the shard with
+        the most block headroom that still covers the request's worst case
+        (single shard: the lowest free slot, iff the pool fits it)."""
+        headroom = {}
+        for s in range(self.topo.data_size):
+            if self._free_slot_in(s) is not None:
+                headroom[s] = (self.pool.available(s)
+                               - self._outstanding_reservations(s))
+        shard = self.pool.route(self._worst_case_blocks(req), headroom)
+        return None if shard is None else self._free_slot_in(shard)
 
     def _admit(self, req: Request, b: int):
         req.admit_time = time.monotonic()
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
+        mgr = self._mgr(b)
 
         # prefix-cache: reuse full blocks strictly below position L_p - 1
         # (the verify window rewrites position n-1 = L_p-1 onward, so those
-        # blocks stay read-only and shareable)
+        # blocks stay read-only and shareable). Per-shard cache: hits can
+        # only come from the sub-pool this slot decodes through.
         hits, keys = [], []
         nb_full = (L_p - 1) // self.block_size
         if self.prefix_enabled and nb_full:
-            hits, keys = self.blocks.lookup_prefix(prompt, nb_full)
+            hits, keys = mgr.lookup_prefix(prompt, nb_full)
         req.prefix_hit_blocks = len(hits)
         self.owned[b] = list(hits)
         self.tables[b] = 0
         self.tables[b, :len(hits)] = hits
+        self._tables_dev = None
         self._ensure_capacity(b, L_p)
 
         # per-slot state
@@ -277,9 +382,10 @@ class ServingEngine:
         if _has_recurrent(self.cfg):
             self._reset_recurrent_row(b)
 
-        # chunked row-local prefill of the un-cached prompt tail
+        # chunked row-local prefill of the un-cached prompt tail (global
+        # pool ids: local table + the slot's shard offset)
         start = len(hits) * self.block_size
-        table_row = jnp.asarray(self.tables[b:b + 1])
+        table_row = jnp.asarray(self.tables[b:b + 1] + self._table_offset(b))
         row = jnp.asarray([b], jnp.int32)
         for C in prefill_chunks(L_p - 1 - start, self.prefill_chunk):
             chunk = jnp.asarray(prompt[None, start:start + C], jnp.int32)
@@ -293,22 +399,23 @@ class ServingEngine:
         # publish this prompt's freshly computed full blocks
         if self.prefix_enabled:
             for j in range(len(hits), nb_full):
-                self.blocks.register(self.owned[b][j], keys[j])
+                mgr.register(self.owned[b][j], keys[j])
 
         self.slots[b] = req
         self.target[b] = L_p + req.new_tokens
+        self._target_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits, run one verify round, harvest finished requests.
-        Returns True while there is (or may be) work left."""
-        for b in range(self.B):
-            if self.slots[b] is None and self.queue:
-                nxt = self.queue.peek()
-                if not self._can_admit(nxt):
-                    break
-                self._admit(self.queue.pop(), b)
+        """Admit what fits (routing by pool pressure), run one verify round,
+        harvest finished requests. Returns True while there is (or may be)
+        work left."""
+        while self.queue:
+            b = self._route(self.queue.peek())
+            if b is None:
+                break
+            self._admit(self.queue.pop(), b)
 
         if not any(s is not None for s in self.slots):
             if self.queue:
@@ -318,15 +425,15 @@ class ServingEngine:
             return False
 
         W = self.controller.window
-        target_dev = jnp.asarray(self.target, jnp.int32)
         for b in range(self.B):
             if self.slots[b] is not None:
                 self._ensure_capacity(b, int(self.target[b]) + W)
         n_before = np.asarray(self.n)
         (self.paged, self.tokens, self.n, self.cand, a_dev) = \
             self._round_fn(W)(self.params, self.paged,
-                              jnp.asarray(self.tables), self.tokens,
-                              self.n, self.cand, self.seq_ids, target_dev)
+                              self._tables_device(), self.tokens,
+                              self.n, self.cand, self.seq_ids,
+                              self._target_device())
         a = np.asarray(a_dev)
         n_host = np.asarray(self.n)
 
@@ -363,7 +470,10 @@ class ServingEngine:
 
     # -- telemetry -----------------------------------------------------------
     def export_metrics(self) -> dict:
-        out = self.metrics.export(self.blocks.stats.export())
-        out["blocks_in_use"] = self.blocks.blocks_in_use()
-        out["blocks_available"] = self.blocks.available()
+        out = self.metrics.export(self.pool.stats_export())
+        out["blocks_in_use"] = self.pool.blocks_in_use()
+        out["blocks_available"] = self.pool.available()
+        if self.topo.data_size > 1:
+            out["blocks_available_by_shard"] = [
+                self.pool.available(s) for s in range(self.topo.data_size)]
         return out

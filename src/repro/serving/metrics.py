@@ -33,6 +33,8 @@ class EngineMetrics:
     request_queue_waits: list = field(default_factory=list)
     request_calls: list = field(default_factory=list)         # rounds/request
     request_new_tokens: list = field(default_factory=list)
+    deadline_miss_count: int = 0         # finished past their latency SLO
+    deadline_requests: int = 0           # finished requests that carried one
 
     def observe_round(self, window: int, active: int, batch: int,
                       accepted: int):
@@ -48,6 +50,10 @@ class EngineMetrics:
         self.request_queue_waits.append(req.queue_wait)
         self.request_calls.append(req.calls_used)
         self.request_new_tokens.append(req.new_tokens)
+        if getattr(req, "deadline", None) is not None:
+            self.deadline_requests += 1
+            if req.missed_deadline:
+                self.deadline_miss_count += 1
 
     def export(self, block_stats: dict | None = None) -> dict:
         calls = np.asarray(self.request_calls, np.float64)
@@ -76,6 +82,8 @@ class EngineMetrics:
             "latency_p95_s": percentile(self.request_latencies, 95),
             "queue_wait_p50_s": percentile(self.request_queue_waits, 50),
             "queue_wait_p95_s": percentile(self.request_queue_waits, 95),
+            "deadline_miss_count": self.deadline_miss_count,
+            "deadline_requests": self.deadline_requests,
         }
         if block_stats:
             out.update(block_stats)

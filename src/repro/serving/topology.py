@@ -1,0 +1,134 @@
+"""Serving topology: the mesh-placement layer of the serving runtime
+(DESIGN.md §10).
+
+``ServingTopology`` describes how one ``ServingEngine`` maps onto a device
+mesh and owns every placement decision the engine makes:
+
+* **Slot partition** — the ``batch`` slots are split into ``data_size``
+  contiguous ranges; shard ``s`` owns slots ``[s*B_local, (s+1)*B_local)``.
+* **Block sub-pools** — the physical block pool is per-data-shard: shard
+  ``s`` owns global blocks ``[s*P_local, (s+1)*P_local)`` and its block
+  tables store *shard-local* ids. Each sub-pool has its own reserved sink
+  block (local id 0), so masked scatter lanes never cross shards.
+* **Round wrapping** — the verify round / jitted step runs under
+  ``shard_map`` manual over the ``data`` axis: every shard decodes its own
+  rows against its own sub-pool with its own local tables. Block-table
+  indirection is shard-local *by construction* — no gather ever sees a
+  remote block id, so the round hot path lowers with zero cross-shard
+  collectives (asserted via HLO inspection in
+  tests/serving/test_mesh_engine.py). Other mesh axes (``model``, ``pod``)
+  stay *auto*: GSPMD places tensor-sharded params there (only standard TP
+  reductions can appear, never table-indexed traffic).
+* **Exactness** — per-request noise streams (``Request.seq_id``) are
+  placement-independent and the round body is row-local, so a mesh engine
+  emits tokens bit-identical to the single-device engine and to solo
+  ``PredictiveSampler.generate``.
+
+``ServingTopology()`` (no mesh) is the single-device degenerate case: one
+shard, plain ``jax.jit``, no placement — the engine always goes through
+this layer, so there is exactly one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import shard_map
+
+
+class ServingTopology:
+    """Mesh + axis naming + partition math for a mesh-sharded engine.
+
+    ``mesh=None`` = single device (one shard). ``data_axis`` rows/pools are
+    manually sharded; every other mesh axis is left to GSPMD (``auto``) so
+    ``param_shardings``-style tensor parallelism over ``model`` composes.
+    """
+
+    def __init__(self, mesh=None, data_axis: str = "data"):
+        if mesh is not None:
+            assert data_axis in mesh.axis_names, (data_axis, mesh.axis_names)
+        self.mesh = mesh
+        self.data_axis = data_axis
+
+    @property
+    def data_size(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.shape[self.data_axis])
+
+    @property
+    def auto_axes(self) -> frozenset:
+        """Mesh axes left to GSPMD (tensor-parallel params live there).
+        Size-1 axes are excluded: they are trivially manual, and a jax whose
+        shard_map lacks ``auto`` support can still serve data-parallel."""
+        if self.mesh is None:
+            return frozenset()
+        return frozenset(a for a in self.mesh.axis_names
+                         if a != self.data_axis and self.mesh.shape[a] > 1)
+
+    def __repr__(self):
+        if self.mesh is None:
+            return "ServingTopology(single-device)"
+        return (f"ServingTopology(mesh={dict(self.mesh.shape)}, "
+                f"data_axis={self.data_axis!r})")
+
+    # -- slot / block partition math (host-side bookkeeping) ---------------
+    def slots_per_shard(self, batch: int) -> int:
+        assert batch % self.data_size == 0, \
+            f"batch {batch} not divisible by data shards {self.data_size}"
+        return batch // self.data_size
+
+    def shard_of_slot(self, b: int, batch: int) -> int:
+        return b // self.slots_per_shard(batch)
+
+    def slot_range(self, shard: int, batch: int) -> range:
+        per = self.slots_per_shard(batch)
+        return range(shard * per, (shard + 1) * per)
+
+    def block_offset(self, shard: int, blocks_per_shard: int) -> int:
+        """Global pool id of a shard's local block 0 (its reserved sink)."""
+        return shard * blocks_per_shard
+
+    # -- device placement ---------------------------------------------------
+    def batch_spec(self) -> P:
+        return P(self.data_axis)
+
+    def batch_sharding(self) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.batch_spec())
+
+    def put_batch(self, x):
+        """Device array with the batch (slot) dim sharded over ``data``."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(x, self.batch_sharding())
+
+    def put_paged(self, cfg, paged):
+        """Place a paged-cache pytree: pool/state leading dims over ``data``
+        (see ``sharding.rules.paged_cache_shardings``)."""
+        if self.mesh is None:
+            return paged
+        from repro.sharding.rules import paged_cache_shardings
+        sh = paged_cache_shardings(cfg, paged, self.mesh,
+                                   data_axis=self.data_axis)
+        return jax.tree.map(jax.device_put, paged, sh,
+                            is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    # -- program wrapping ---------------------------------------------------
+    def wrap_round(self, fn, paged_specs, n_batch_in: int, n_batch_out: int):
+        """Map the round step over the data axis: shards see local rows,
+        local tables, and their local block sub-pool. ``fn`` signature is
+        ``(params, paged, *batch_args) -> (paged, *batch_outs)``;
+        ``paged_specs`` is the PartitionSpec pytree for the paged cache
+        (``TransformerLM.paged_partition_specs``). Identity without a mesh.
+        """
+        if self.mesh is None:
+            return fn
+        d = self.batch_spec()
+        return shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(P(), paged_specs) + (d,) * n_batch_in,
+            out_specs=(paged_specs,) + (d,) * n_batch_out,
+            check_vma=False, auto=self.auto_axes)

@@ -27,24 +27,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-try:
-    from jax import shard_map as _shard_map
-except ImportError:                      # jax < 0.6 keeps it in experimental
-    from jax.experimental.shard_map import shard_map as _shard_map
-import inspect
-
-# the replication-check kwarg was renamed check_rep -> check_vma
-_CHECK_KW = ("check_vma"
-             if "check_vma" in inspect.signature(_shard_map).parameters
-             else "check_rep")
-
-
-def shard_map(f, **kwargs):
-    if "check_vma" in kwargs:
-        kwargs[_CHECK_KW] = kwargs.pop("check_vma")
-    return _shard_map(f, **kwargs)
 
 from repro.models.moe import MoE, _mlp_apply
+from repro.sharding.api import shard_map
 
 
 def _dp_axes(mesh):

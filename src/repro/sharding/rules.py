@@ -182,6 +182,76 @@ def cache_shardings(cache_shape, mesh: Mesh, batch: int):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def paged_cache_shardings(cfg, paged, mesh: Mesh, data_axis: str = "data"):
+    """NamedShardings for the serving engine's paged cache pytree: each
+    leaf's pool dim (attention blocks) or slot dim (recurrent states) over
+    ``data_axis`` — the placement that matches the mesh round's shard_map
+    specs (``TransformerLM.paged_partition_specs``), so the jitted round
+    never reshards the pool. The ``model`` axis is deliberately left off the
+    pool: KV heads stay shard-local and tensor parallelism enters only via
+    the (auto-sharded) params."""
+    from repro.models.transformer import TransformerLM
+
+    specs = TransformerLM.paged_partition_specs(cfg, paged,
+                                                data_axis=data_axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def decode_activation_rules(mesh: Mesh) -> Rules:
+    """Activation rules for the serving/decode path: verify-window rows over
+    data parallelism, heads/vocab over "model" (the GSPMD lowering used by
+    ``make_serve_step`` dry-runs; the mesh ``ServingEngine`` is manual over
+    "data" instead and never consults activation rules on its hot path)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return Rules({
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "vocab": "model",
+        "experts": "model",
+        "heads": "model",
+    })
+
+
+def _strip_axes(spec: P, drop: tuple) -> P:
+    """Remove the given mesh axes from every component of a PartitionSpec."""
+    out = []
+    for comp in spec:
+        if comp is None:
+            out.append(None)
+            continue
+        axes = (comp,) if isinstance(comp, str) else tuple(comp)
+        kept = tuple(a for a in axes if a not in drop)
+        out.append(None if not kept else
+                   (kept[0] if len(kept) == 1 else kept))
+    return P(*out)
+
+
+def serving_param_shardings(params_shape, mesh: Mesh):
+    """``param_shardings`` minus the FSDP/data axes: the mesh serving round
+    is *manual* over "data" (every data shard needs the full params — an
+    FSDP-sharded leaf would force an all-gather into the round hot path), so
+    only tensor parallelism over "model" survives; everything else is
+    replicated."""
+    drop = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+
+    def names_of(path):
+        out = []
+        for k in path:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return out
+
+    specs = [NamedSharding(mesh, _strip_axes(_leaf_spec(names_of(p), l, mesh),
+                                             drop))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
 def batch_sharding(mesh: Mesh, no_tp: bool = False):
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     if no_tp:

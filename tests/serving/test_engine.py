@@ -267,6 +267,69 @@ def test_paged_kernel_engine_emits_same_tokens(qwen):
         np.testing.assert_array_equal(req.result, by_uid[req.uid].result)
 
 
+def test_round_buffers_are_donated(qwen):
+    """Satellite regression: the jitted round donates the physical pool and
+    per-slot state — after a round the previous pool buffer must be GONE
+    (no second full-pool copy retained); ``donate=False`` restores the
+    copying behaviour."""
+    cfg, params = qwen
+    kw = dict(batch=2, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False)
+    for donate in (True, False):
+        eng = ServingEngine(cfg, params, donate=donate, **kw)
+        eng.submit(Request(uid=0, prompt=np.arange(1, 5), new_tokens=16))
+        eng.step()                       # admission + first round
+        pool_leaf = jax.tree.leaves(eng.paged)[0]
+        tok_leaf = eng.tokens
+        eng.step()                       # next round consumes (donates) them
+        assert pool_leaf.is_deleted() == donate
+        assert tok_leaf.is_deleted() == donate
+        assert not jax.tree.leaves(eng.paged)[0].is_deleted()
+
+
+def test_table_upload_cached_until_invalidated(qwen):
+    """Satellite: the device copy of the block tables is cached between
+    rounds — re-uploaded only when admission/slot-clear/table growth
+    actually mutates the host tables."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=4, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 5), new_tokens=24))
+    eng.step()                  # admit + grow table to target+W
+    dev = eng._tables_dev
+    assert dev is not None
+    eng.step()                  # steady state: no growth, no new upload
+    assert eng._tables_dev is dev
+    eng.run()                   # finishing the request clears its row...
+    assert eng._tables_dev is None or eng._tables_dev is not dev
+
+
+def test_deadline_edf_order_and_miss_metrics(qwen):
+    """Satellite (latency SLO): within a priority class the queue serves
+    earliest-deadline-first (deadline-free requests last); finished
+    requests past their SLO are counted in deadline_miss_count and
+    queue-wait percentiles are exported."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=48,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(11)
+    no_slo = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 3),
+                     new_tokens=4)
+    tight = Request(uid=1, prompt=rng.integers(0, cfg.vocab, 3),
+                    new_tokens=4, deadline=1e-4)      # unmeetable on CPU
+    loose = Request(uid=2, prompt=rng.integers(0, cfg.vocab, 3),
+                    new_tokens=4, deadline=1e6)
+    for r in (no_slo, tight, loose):
+        eng.submit(r)
+    done = eng.run()
+    assert [r.uid for r in done] == [1, 2, 0]         # EDF, SLO-free last
+    m = eng.export_metrics()
+    assert m["deadline_requests"] == 2
+    assert m["deadline_miss_count"] == 1              # only the 100us SLO
+    assert m["queue_wait_p95_s"] >= m["queue_wait_p50_s"] >= 0.0
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+
 def test_continuous_batcher_alias_is_serving_engine(qwen):
     """The seed API survives: ContinuousBatcher(sampler, batch) drains a
     queue through the paged engine, and its results are bit-exact too."""

@@ -70,6 +70,66 @@ def test_rules_spec_dedups_axes():
                                                     "model", None)
 
 
+def test_paged_partition_specs_shard_pool_and_slot_dims():
+    """Serving (§10): every paged-cache leaf's pool dim (attention blocks)
+    or slot dim (recurrent states) goes over "data"; scanned segments keep
+    the leading layer axis unsharded."""
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+
+    for arch in ("qwen3-1.7b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch, reduced=True)
+        paged = jax.eval_shape(
+            lambda c=cfg: TransformerLM.init_paged_cache(c, 4, 32, 4))
+        specs = TransformerLM.paged_partition_specs(cfg, paged)
+        flat_p = jax.tree.leaves(paged)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s) > 0
+        for leaf, spec in zip(flat_p, flat_s):
+            assert spec in (P("data"), P(None, "data"))
+            # stacked (scanned) leaves shard dim 1, others dim 0
+            dim = 0 if spec == P("data") else 1
+            assert leaf.shape[dim] in (32, 4)   # pool blocks or batch slots
+
+
+def test_serving_param_shardings_strip_data_axes():
+    """Serving params must be data-replicated (manual-over-data round);
+    only "model" tensor parallelism survives from the training specs."""
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+    from repro.sharding.rules import _strip_axes, serving_param_shardings
+
+    assert _strip_axes(P(("model", "data"), None, "data"), ("data",)) == \
+        P("model", None, None)
+    assert _strip_axes(P("data"), ("data", "pod")) == P(None)
+
+    cfg = get_config("qwen3-1.7b")
+    params = jax.eval_shape(
+        lambda: TransformerLM.init(jax.random.PRNGKey(0), cfg))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = serving_param_shardings(params, mesh)
+    n_model = 0
+    for s in jax.tree.leaves(shardings):
+        for comp in s.spec:
+            axes = () if comp is None else (
+                (comp,) if isinstance(comp, str) else tuple(comp))
+            assert "data" not in axes and "pod" not in axes, s.spec
+            n_model += "model" in axes
+    assert n_model > 0          # TP specs survive the strip
+
+
+def test_decode_activation_rules_route_batch_to_dp():
+    from repro.sharding.rules import decode_activation_rules
+
+    r = decode_activation_rules(FakeMesh({"data": 16, "model": 16}))
+    assert r.spec(("batch", "seq", "embed")) == P("data", None, None)
+    assert r.spec(("batch", "seq", "vocab")) == P("data", None, "model")
+    r2 = decode_activation_rules(FakeMesh({"pod": 2, "data": 16,
+                                           "model": 16}))
+    assert r2.spec(("batch", None, "heads")) == P(("pod", "data"), None,
+                                                  "model")
+
+
 def test_cache_specs_prefer_batch_dp():
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
