@@ -50,6 +50,23 @@ def _csv_rows_table(rows):
                             f"paged_MB={r['paged_bytes']/1e6:.2f};"
                             f"dense_MB={r['dense_bytes']/1e6:.2f};"
                             f"traffic_ratio={r['traffic_ratio']}"))
+            elif r.get("scenario") == "round_loop":
+                out.append((f"serving/round_loop/b{r['batch']}",
+                            f"{r['device_wall_us_per_token']}",
+                            f"host_wall_us={r['host_wall_us_per_token']};"
+                            f"disp_per_tok={r['device_dispatches_per_token']}"
+                            f"(host={r['host_dispatches_per_token']});"
+                            f"syncs_per_tok={r['device_syncs_per_token']}"
+                            f"(host={r['host_syncs_per_token']});"
+                            f"backend={r['backend']}"))
+            elif r.get("scenario") == "fused_writeback":
+                out.append(("serving/fused_writeback", "0",
+                            f"pool_scatters={r['paged_pool_scatter_eqns']}"
+                            f"(dense={r['dense_pool_scatter_eqns']},"
+                            f"ref={r['reference_scatter_eqns_per_leaf']});"
+                            f"pallas_calls={r['paged_pallas_calls']};"
+                            f"dispatch_per_loop="
+                            f"{r['paged_dispatches_per_loop']}"))
             elif r.get("scenario") == "donation":
                 out.append((f"serving/donation/cap{r['capacity']}", "0",
                             f"aliased_MB={r['donated_alias_bytes']/1e6:.2f};"
@@ -118,14 +135,17 @@ def serving_only() -> None:
     import jax
 
     from benchmarks.serving_bench import (donation_round_bytes,
-                                          mesh_serving, mixed_traffic,
-                                          paged_vs_dense)
+                                          fused_writeback, mesh_serving,
+                                          mixed_traffic, paged_vs_dense,
+                                          round_loop)
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
 
     cfg = get_config("qwen3-1.7b", reduced=True)
     params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
     rows = paged_vs_dense(cfg, params)
+    rows.extend(round_loop(cfg, params))
+    rows.extend(fused_writeback(cfg, params))
     rows.extend(donation_round_bytes(cfg, params))
     rows.extend(mesh_serving(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))

@@ -140,6 +140,11 @@ def run(fast: bool = True):
     # tentpole: block-table decode vs the dense gather/scatter round-trip
     rows.extend(paged_vs_dense(cfg, params_rep))
 
+    # device-resident rounds: dispatches / host syncs per token vs the
+    # host-driven baseline, and the single-dispatch fused-round gate
+    rows.extend(round_loop(cfg, params_rep))
+    rows.extend(fused_writeback(cfg, params_rep))
+
     # round-buffer donation: per-round live bytes with vs without
     rows.extend(donation_round_bytes(cfg, params_rep))
 
@@ -244,10 +249,10 @@ def paged_vs_dense(cfg, params=None, capacities=(128, 512, 2048),
 # ---------------------------------------------------------------------------
 
 def _round_memory(eng, W: int = 8) -> dict:
-    """XLA memory analysis of the compiled verify round: live bytes
+    """XLA memory analysis of the compiled verify round loop: live bytes
     (arguments + outputs + temps - donation aliasing) and the aliased
     bytes the donation actually established."""
-    fn = eng._round_fn(W)
+    fn = eng._round_loop_fn(W, eng.rounds_per_sync)
     args = (eng.params, eng.paged, eng._tables_device(), eng.tokens, eng.n,
             eng.cand, eng.seq_ids, eng._target_device())
     ma = fn.lower(*args).compile().memory_analysis()
@@ -292,6 +297,123 @@ def donation_round_bytes(cfg, params=None, batch: int = 2,
         # un-donated round must not alias anything
         assert row["donated_alias_bytes"] >= row["pool_bytes"], row
         assert row["copied_alias_bytes"] == 0, row
+    return [row]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident verify rounds (DESIGN.md §11): dispatches & host syncs
+# ---------------------------------------------------------------------------
+
+def round_loop(cfg, params=None, batches=(1, 8, 32), new_tokens: int = 6,
+               rounds_per_sync: int = 4, seed: int = 21):
+    """Host-driven (``rounds_per_sync=1``) vs device-resident
+    (``rounds_per_sync=4``) verify rounds on identical traffic at several
+    batch widths: device dispatches per generated token, host syncs per
+    token (and per round), and wall-clock per token. The device-resident
+    loop must be strictly below the host-driven baseline on both dispatch
+    and sync counts — the PR 3 baseline is exactly the ``host`` column
+    (one dispatch + one ``n`` pull per round). Tokens are asserted
+    bit-identical between the two drive modes."""
+    if params is None:
+        params = TransformerLM.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for B in batches:
+        prompts = rng.integers(0, cfg.vocab, size=(2 * B, 4))
+        row = {"table": "serving", "scenario": "round_loop", "batch": B,
+               "new_tokens_per_req": new_tokens,
+               "backend": jax.default_backend()}
+        toks = {}
+        for mode, k in (("host", 1), ("device", rounds_per_sync)):
+            eng = ServingEngine(cfg, params, batch=B, window_max=4,
+                                max_len=32, block_size=8,
+                                eps_key=jax.random.PRNGKey(3),
+                                adaptive=False, prefix_cache=False,
+                                rounds_per_sync=k)
+
+            def drain(offset):
+                for i in range(B):
+                    eng.submit(Request(uid=offset + i,
+                                       prompt=prompts[offset + i],
+                                       new_tokens=new_tokens))
+                t0 = time.time()
+                done = eng.run()
+                return time.time() - t0, done
+
+            drain(0)                             # compile + warm cache
+            m0 = eng.export_metrics()
+            dt, done = drain(B)
+            m = eng.export_metrics()
+            gen = B * new_tokens
+            dispatches = m["device_dispatches"] - m0["device_dispatches"]
+            syncs = m["host_syncs"] - m0["host_syncs"]
+            nrounds = m["rounds"] - m0["rounds"]
+            row[f"{mode}_dispatches_per_token"] = round(dispatches / gen, 3)
+            row[f"{mode}_syncs_per_token"] = round(syncs / gen, 3)
+            row[f"{mode}_syncs_per_round"] = round(syncs / max(1, nrounds),
+                                                   3)
+            row[f"{mode}_wall_us_per_token"] = round(dt * 1e6 / gen)
+            row[f"{mode}_rounds"] = nrounds
+            toks[mode] = {r.uid: r.result for r in done if r.uid >= B}
+        for uid, t in toks["host"].items():
+            assert (toks["device"][uid] == t).all(), \
+                f"device-resident loop diverged from host-driven (uid {uid})"
+        # the device-resident loop must beat the PR 3 (host-driven) baseline
+        assert (row["device_dispatches_per_token"]
+                < row["host_dispatches_per_token"]), row
+        assert row["device_syncs_per_token"] < row["host_syncs_per_token"], \
+            row
+        assert row["device_syncs_per_round"] < 1.0 <= \
+            row["host_syncs_per_round"], row
+        rows.append(row)
+    return rows
+
+
+def fused_writeback(cfg, params=None, seed: int = 23):
+    """Single-dispatch round gate (DESIGN.md §11): the verify round's jaxpr
+    must contain ZERO pool-ranked scatter eqns — every physical-pool write
+    (window K/V, MLA latents, the legacy dense round's span writeback) now
+    happens inside a pallas_call as an input/output-aliased epilogue — and
+    the whole k-round loop is ONE device program. The ``reference_scatter``
+    column shows what the eliminated standalone ``write_window_paged``
+    costs per layer: one pool-ranked scatter per K/V leaf per round.
+    Dispatch counts here seed the §9 ``round_bytes_model`` calibration
+    against measured per-dispatch latency on real hardware."""
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention.ref import write_window_paged
+    from repro.launch.hlo_analysis import count_jaxpr_primitives
+
+    if params is None:
+        params = TransformerLM.init(jax.random.PRNGKey(seed), cfg)
+    row = {"table": "serving", "scenario": "fused_writeback",
+           "backend": jax.default_backend()}
+    for mode in ("paged", "dense"):
+        eng = ServingEngine(cfg, params, batch=2, window_max=4, max_len=32,
+                            block_size=4, eps_key=jax.random.PRNGKey(3),
+                            adaptive=False, prefix_cache=False,
+                            paged_attention=(mode == "paged"))
+        fn = eng._round_loop_fn(4, eng.rounds_per_sync)
+        args = (eng.params, eng.paged, eng._tables_device(), eng.tokens,
+                eng.n, eng.cand, eng.seq_ids, eng._target_device())
+        jaxpr = fn.trace(*args).jaxpr
+        c = count_jaxpr_primitives(jaxpr, ("scatter", "pallas_call"),
+                                   min_rank=0)
+        pool_scatters = count_jaxpr_primitives(
+            jaxpr, ("scatter",), min_rank=3)["scatter"]
+        row[f"{mode}_pool_scatter_eqns"] = pool_scatters
+        row[f"{mode}_pallas_calls"] = c["pallas_call"]
+        row[f"{mode}_dispatches_per_loop"] = 1    # one compiled program
+    # what one eliminated pre-kernel scatter looks like, per K/V leaf
+    ref = jax.jit(write_window_paged).trace(
+        jnp.zeros((9, 4, 2, 8)), jnp.zeros((2, 4, 2, 8)),
+        jnp.zeros((2, 2), jnp.int32), jnp.zeros((2,), jnp.int32)).jaxpr
+    row["reference_scatter_eqns_per_leaf"] = count_jaxpr_primitives(
+        ref, ("scatter",), min_rank=3)["scatter"]
+    assert row["paged_pool_scatter_eqns"] == 0, row
+    assert row["dense_pool_scatter_eqns"] == 0, row
+    assert row["paged_pallas_calls"] >= 1, row
+    assert row["reference_scatter_eqns_per_leaf"] == 1, row
     return [row]
 
 

@@ -119,10 +119,11 @@ class PredictiveSampler:
 
     # ------------------------------------------------------------------
     def _round_impl(self, state: GenState, target_len) -> GenState:
-        return verify_round(self.params, self.cfg, self.eps_fn, state,
-                            target_len,
-                            use_forecast_heads=self.use_forecast_heads,
-                            use_verify_kernel=self.use_verify_kernel)
+        state, _stats = verify_round(
+            self.params, self.cfg, self.eps_fn, state, target_len,
+            use_forecast_heads=self.use_forecast_heads,
+            use_verify_kernel=self.use_verify_kernel)
+        return state
 
     # ------------------------------------------------------------------
     def generate(self, prompts, new_tokens: int, seq_ids=None):
@@ -156,7 +157,7 @@ class PredictiveSampler:
 def verify_round(params, cfg, eps_fn, state: GenState, target_len,
                  use_forecast_heads: bool = False,
                  use_verify_kernel: bool = False,
-                 paged: Optional[PagedView] = None) -> GenState:
+                 paged: Optional[PagedView] = None):
     """One verify round over ``state``. W is taken from
     ``state.cand.shape[1]`` so callers may vary the window round-to-round
     (adaptive speculation): candidates only gate acceptance, never token
@@ -164,7 +165,13 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
 
     ``state.cache`` is a dense cache view, or — with ``paged`` — the paged
     block-pool pytree, decoded in place through the block tables (no dense
-    attention K/V view is ever materialized; DESIGN.md §9)."""
+    attention K/V view is ever materialized; DESIGN.md §9).
+
+    Returns ``(new_state, row_stats)`` where ``row_stats`` is the packed
+    (B, 3) int32 per-row stats vector ``[accepted, done, new_length]`` —
+    everything a driving loop needs to decide continuation and everything a
+    host needs per sync, without pulling ``n``/``cand``/``tokens`` (the
+    device-resident round loop ABI, DESIGN.md §11)."""
     B, W = state.cand.shape
     max_len = state.tokens.shape[1]
     active = state.n < target_len
@@ -255,10 +262,13 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     n_new = jnp.where(active, n_new, state.n)
     tokens = jnp.where(active[:, None], tokens, state.tokens)
 
-    return GenState(
+    new_state = GenState(
         tokens, n_new, cand, cache,
         state.rounds + jnp.any(active).astype(jnp.int32),
         state.per_seq_calls + active.astype(jnp.int32),
         state.accept_hist + a,
         state.seq_ids,
     )
+    row_stats = jnp.stack(
+        [a, (n_new >= target_len).astype(jnp.int32), n_new], axis=1)
+    return new_state, row_stats

@@ -1,11 +1,15 @@
-"""Pallas TPU kernel: paged flash-decode — attend through block tables.
+"""Pallas TPU kernels: paged flash-decode with a fused window-writeback
+epilogue — attend through block tables AND commit the window K/V, in one
+dispatch.
 
 The serving runtime stores attention K/V in fixed-size blocks of a shared
 physical pool (``TransformerLM.init_paged_cache``); each sequence owns a
-block table mapping logical block ``j`` to a physical pool id. The dense
-engine round used to materialize a contiguous per-sequence K/V view
-(``gather_paged``), attend, and scatter the window back — an O(B*S*d) HBM
-round-trip wrapping a bandwidth-bound op. This kernel attends *in place*:
+block table mapping logical block ``j`` to a physical pool id. PR 2 made the
+verify round attend *through* the tables; it still paid a standalone O(B*W)
+``write_window_paged`` scatter before each pallas_call to land the W fresh
+window keys/values in their blocks. This kernel fuses that write into the
+kernel itself, so one pallas_call per layer both reads the pool and commits
+the window (DESIGN.md §11):
 
 grid = (B, KV, nb): per (sequence, kv-head), logical KV blocks stream
 sequentially. The per-sequence block table and valid lengths ride in SMEM via
@@ -15,6 +19,28 @@ view ever exists. Online-softmax state for all G*W rows (G grouped query
 heads x W window queries) lives in VMEM scratch, exactly like the dense
 ``decode_attention`` kernel.
 
+Fused writeback (the epilogue):
+
+* The W fresh K/V rows arrive as small ``(B, W, ...)`` inputs instead of
+  being pre-scattered into the pool. Each tile is **merged** on the fly:
+  slot ``t`` of block ``j`` takes ``new[j*bs + t - length]`` when its
+  logical position falls in ``[length, length + W)`` and the pool value
+  otherwise (a W-way unrolled select — bitwise equal to the gather the
+  scatter used to do). Attention runs over the merged tile.
+* The pools are **outputs input/output-aliased with the pool inputs**: the
+  out BlockSpec index_map routes window-straddling tiles to their physical
+  block (``table[b, j]``) and every other tile to the reserved sink block 0,
+  so per-round pool *writes* stay O(B*W) — only the straddle blocks (and
+  cheap sink dumps) are flushed, and every unvisited block keeps its
+  contents through the aliasing. Interpret mode initializes aliased outputs
+  from the input arrays, so CPU CI sees identical semantics.
+* Each (b, h) visits each logical block once, window blocks are
+  sequence-private (shared prefix blocks always sit strictly below the
+  window span) and different kv heads touch disjoint tile slices, so the
+  only physical block written by more than one grid step is the sink —
+  whose contents are garbage by design. That makes the in-place aliasing
+  race-free on TPU.
+
 Masking handles the two paged-specific hazards:
 
 * **Tail blocks** — table entries past a sequence's allocation point at the
@@ -22,13 +48,18 @@ Masking handles the two paged-specific hazards:
   ``length + W - 1`` so the causal mask ``k_pos <= q_pos`` zeroes them (the
   pool is always initialized/written memory — no NaN risk, unlike the dense
   kernel's out-of-bounds tail tiles).
-* **Window keys** — the W fresh keys are written into their physical blocks
-  *before* the kernel runs (``write_window_paged``), so query w sees keys
-  ``<= length + w`` through the same table indirection as the prefix.
+* **Window keys** — merged from the ``new`` operands as above; query w sees
+  keys ``<= length + w`` through the same table indirection as the prefix.
 
 ``latent=True`` is the MLA variant: scores are the sum of two inner products
 (absorbed-latent query vs the c_kv pool, rope query vs the shared rope-key
-pool) and the value *is* the c_kv tile — one pool read serves both matmuls.
+pool) and the value *is* the merged c_kv tile — one pool read serves both
+matmuls; both latent pools get the fused writeback.
+
+``paged_write_kernel`` is the writeback epilogue alone — grid (B, T) over
+just the blocks a W-wide span can straddle — used by the CPU-exact gather
+fallback and the legacy dense round's ``scatter_paged`` so every pool write
+path shares the same aliased, in-place commit.
 """
 from __future__ import annotations
 
@@ -42,12 +73,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1.0e30
 
 
+def _merge_window(tile, new_rows, off, valid, W: int):
+    """Select window rows into a pool tile: slot t takes ``new_rows[off[t]]``
+    where ``0 <= off[t] < W`` (and ``valid``), else keeps ``tile[t]``.
+    Unrolled W-way select — bitwise equal to the reference scatter, and
+    lowers to plain vector selects on TPU (no dynamic gather)."""
+    shaped = off.reshape((off.shape[0],) + (1,) * (tile.ndim - 1))
+    merged = tile
+    for w in range(W):
+        take = (shaped == w) & valid
+        merged = jnp.where(take, new_rows[w][None], merged)
+    return merged
+
+
 def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
                   window: int, W: int, latent: bool):
     if latent:
-        q1_ref, q2_ref, k1_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        (q1_ref, q2_ref, k1_ref, k2_ref, n1_ref, n2_ref,
+         o_ref, ok1_ref, ok2_ref, m_ref, l_ref, acc_ref) = refs
     else:
-        q1_ref, k1_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        (q1_ref, k1_ref, v_ref, n1_ref, n2_ref,
+         o_ref, ok1_ref, ok2_ref, m_ref, l_ref, acc_ref) = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -59,6 +105,32 @@ def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
         acc_ref[...] = jnp.zeros_like(acc_ref[...])
 
     base = len_ref[b]                                     # valid cache length
+
+    # ---- fused window-writeback epilogue -------------------------------
+    # Merge the W fresh rows into this tile at their in-block offsets and
+    # write the merged tile to the aliased pool outputs. The out index_map
+    # routes non-straddling tiles to the sink, so only the O(W) window
+    # blocks are really committed; writing unconditionally keeps the out
+    # VMEM buffer coherent with whatever block the emission targets.
+    off = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0] \
+        - base                                            # (bs,)
+    k_tile = k1_ref[0, :, 0, :]                           # (bs, dk) raw dtype
+    kn = n1_ref[0, :, 0, :]                               # (W, dk)
+    k_merged = _merge_window(k_tile, kn, off, True, W)
+    ok1_ref[0, :, 0, :] = k_merged
+    if latent:
+        k2_tile = k2_ref[0, :, 0, :]
+        k2n = n2_ref[0, :, 0, :]
+        k2_merged = _merge_window(k2_tile, k2n, off, True, W)
+        ok2_ref[0, :, 0, :] = k2_merged
+        v_merged = k_merged                               # c_kv doubles as V
+    else:
+        v_tile = v_ref[0, :, 0, :]
+        vn = n2_ref[0, :, 0, :]
+        v_merged = _merge_window(v_tile, vn, off, True, W)
+        ok2_ref[0, :, 0, :] = v_merged
+        k2_merged = None
+
     # skip fully-masked tiles outright: tail tiles past the last query
     # position (sink-aliased table entries) and, under a sliding window,
     # tiles wholly below the earliest visible key. A skipped tile's update
@@ -71,12 +143,12 @@ def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
     @pl.when(visible)
     def _tile():
         q = q1_ref[0, 0].astype(jnp.float32)              # (R, dk) R = G*W
-        k = k1_ref[0, :, 0, :].astype(jnp.float32)        # (bs, dk)
+        k = k_merged.astype(jnp.float32)                  # (bs, dk)
         R = q.shape[0]
         s = (q @ k.T) * scale                             # (R, bs)
         if latent:
             q2 = q2_ref[0, 0].astype(jnp.float32)         # (R, dr)
-            k2 = k2_ref[0, :, 0, :].astype(jnp.float32)   # (bs, dr)
+            k2 = k2_merged.astype(jnp.float32)            # (bs, dr)
             s += (q2 @ k2.T) * scale
 
         # row r serves window query w = r % W (G heads share a kv head)
@@ -93,7 +165,7 @@ def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
         p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1)
-        v = k if latent else v_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_merged.astype(jnp.float32)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
         m_ref[...] = m_new
 
@@ -104,16 +176,28 @@ def _paged_kernel(tbl_ref, len_ref, *refs, bs: int, scale: float,
                        ).astype(o_ref.dtype)
 
 
+def _pool_out_map(bs: int, W: int):
+    """Out index_map for an aliased pool output: window-straddling tiles go
+    to their physical block, everything else to the reserved sink 0 (whose
+    contents are garbage by design) — pool writes stay O(B*W) per round."""
+    def index_map(b, h, j, tbl, ln):
+        base = ln[b]
+        straddle = (j * bs <= base + W - 1) & ((j + 1) * bs > base)
+        return (jnp.where(straddle, tbl[b, j], 0), 0, h, 0)
+    return index_map
+
+
 @functools.partial(jax.jit, static_argnames=("W", "window", "scale",
                                              "interpret"))
-def paged_decode_kernel(q, k_pool, v_pool, tables, lengths, *, W: int,
-                        window: int = 0, scale: float | None = None,
+def paged_decode_kernel(q, k_pool, v_pool, k_new, v_new, tables, lengths, *,
+                        W: int, window: int = 0, scale: float | None = None,
                         interpret: bool = True):
     """q: (B, KV, G*W, d) grouped window queries (row = g*W + w); k_pool,
-    v_pool: (P, bs, KV, d) physical block pools (window keys already written
-    at positions lengths..lengths+W-1 through the tables); tables: (B, nb)
-    physical block ids; lengths: (B,) valid prefix lengths. Query w attends
-    keys < lengths + w + 1. Returns (B, KV, G*W, dv)."""
+    v_pool: (P, bs, KV, d) physical block pools (window positions stale —
+    the kernel commits them); k_new, v_new: (B, W, KV, d) fresh window rows;
+    tables: (B, nb) physical block ids; lengths: (B,) valid prefix lengths.
+    Query w attends keys < lengths + w + 1. Returns (out (B, KV, G*W, dv),
+    k_pool, v_pool) with the pools updated in place (aliased)."""
     B, KV, R, dk = q.shape
     P, bs = k_pool.shape[:2]
     nb = tables.shape[1]
@@ -121,6 +205,7 @@ def paged_decode_kernel(q, k_pool, v_pool, tables, lengths, *, W: int,
     if scale is None:
         scale = 1.0 / dk ** 0.5
 
+    pool_map = _pool_out_map(bs, W)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, nb),
@@ -130,9 +215,15 @@ def paged_decode_kernel(q, k_pool, v_pool, tables, lengths, *, W: int,
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, dv),
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, W, 1, dk), lambda b, h, j, tbl, ln: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, dv), lambda b, h, j, tbl, ln: (b, 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, R, dv),
-                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, R, dv),
+                         lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk), pool_map),
+            pl.BlockSpec((1, bs, 1, dv), pool_map),
+        ],
         scratch_shapes=[
             pltpu.VMEM((R,), jnp.float32),
             pltpu.VMEM((R,), jnp.float32),
@@ -143,23 +234,32 @@ def paged_decode_kernel(q, k_pool, v_pool, tables, lengths, *, W: int,
         functools.partial(_paged_kernel, bs=bs, scale=scale, window=window,
                           W=W, latent=False),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, R, dv), q.dtype),
+        out_shape=[jax.ShapeDtypeStruct((B, KV, R, dv), q.dtype),
+                   jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)],
+        # flat operands: (tables, lengths, q, k_pool, v_pool, k_new, v_new)
+        input_output_aliases={3: 1, 4: 2},
         interpret=interpret,
-    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool,
+      k_new, v_new)
 
 
 @functools.partial(jax.jit, static_argnames=("W", "scale", "interpret"))
-def paged_latent_kernel(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
-                        W: int, scale: float, interpret: bool = True):
+def paged_latent_kernel(q_lat, q_rope, c_pool, kr_pool, c_new, kr_new,
+                        tables, lengths, *, W: int, scale: float,
+                        interpret: bool = True):
     """MLA absorbed-latent variant: q_lat: (B, 1, H*W, r); q_rope:
-    (B, 1, H*W, dr); c_pool: (P, bs, 1, r); kr_pool: (P, bs, 1, dr). Scores
-    sum both inner products; the output is the attention-weighted *latent*
-    (B, 1, H*W, r) — the shared c_kv tile doubles as the value."""
+    (B, 1, H*W, dr); c_pool: (P, bs, 1, r); kr_pool: (P, bs, 1, dr); c_new,
+    kr_new: (B, W, 1, r/dr) fresh window latents. Scores sum both inner
+    products; the output is the attention-weighted *latent* (B, 1, H*W, r) —
+    the merged c_kv tile doubles as the value. Returns (out, c_pool,
+    kr_pool) with both latent pools committed in place (aliased)."""
     B, _, R, r = q_lat.shape
     P, bs = c_pool.shape[:2]
     dr = q_rope.shape[-1]
     nb = tables.shape[1]
 
+    pool_map = _pool_out_map(bs, W)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, 1, nb),
@@ -170,9 +270,14 @@ def paged_latent_kernel(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, dr),
                          lambda b, h, j, tbl, ln: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, W, 1, r), lambda b, h, j, tbl, ln: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, dr), lambda b, h, j, tbl, ln: (b, 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, R, r),
-                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, R, r), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, r), pool_map),
+            pl.BlockSpec((1, bs, 1, dr), pool_map),
+        ],
         scratch_shapes=[
             pltpu.VMEM((R,), jnp.float32),
             pltpu.VMEM((R,), jnp.float32),
@@ -183,7 +288,75 @@ def paged_latent_kernel(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
         functools.partial(_paged_kernel, bs=bs, scale=scale, window=0,
                           W=W, latent=True),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, 1, R, r), q_lat.dtype),
+        out_shape=[jax.ShapeDtypeStruct((B, 1, R, r), q_lat.dtype),
+                   jax.ShapeDtypeStruct(c_pool.shape, c_pool.dtype),
+                   jax.ShapeDtypeStruct(kr_pool.shape, kr_pool.dtype)],
+        # flat operands: (tbl, len, q_lat, q_rope, c_pool, kr_pool, c_new,
+        #                 kr_new)
+        input_output_aliases={4: 1, 5: 2},
         interpret=interpret,
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q_lat, q_rope, c_pool, kr_pool)
+      q_lat, q_rope, c_pool, kr_pool, c_new, kr_new)
+
+
+# ---------------------------------------------------------------------------
+# Standalone aliased writeback: the epilogue without the attention
+# ---------------------------------------------------------------------------
+
+def _write_kernel_body(tbl_ref, st_ref, act_ref, pool_ref, new_ref, out_ref,
+                       *, bs: int, W: int, nb: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    start = st_ref[b]
+    blk = start // bs + t
+    last = (start + W - 1) // bs
+    valid = (blk < nb) & (blk <= last) & (act_ref[b] > 0)
+    off = blk * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0] \
+        - start
+    out_ref[0] = _merge_window(pool_ref[0], new_ref[0], off, valid, W)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_write_kernel(pool, new, tables, start, active, *,
+                       interpret: bool = True):
+    """Aliased window writeback: commit ``new (B, W, ...)`` into the pool
+    ``(P, bs, ...)`` at per-sequence offsets ``start (B,)`` resolved through
+    ``tables (B, nb)``. grid = (B, T) visits only the T blocks a W-wide span
+    can straddle; the pool is input/output-aliased so unvisited blocks keep
+    their contents and the commit happens in place (no full-pool temp on the
+    donated buffer). Rows with ``active == 0`` (and out-of-table slots) are
+    routed to the reserved sink block 0 where the write degenerates to a
+    value-preserving self-copy."""
+    P, bs = pool.shape[:2]
+    B, W = new.shape[:2]
+    nb = tables.shape[1]
+    T = (W + bs - 2) // bs + 1          # max blocks a W-wide span straddles
+    trail = pool.shape[2:]
+    nd = len(trail)
+
+    def pool_map(b, t, tbl, st, act):
+        blk = st[b] // bs + t
+        last = (st[b] + W - 1) // bs
+        valid = (blk < nb) & (blk <= last) & (act[b] > 0)
+        phys = jnp.where(valid, tbl[b, jnp.clip(blk, 0, nb - 1)], 0)
+        return (phys,) + (0,) * (nd + 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, bs) + trail, pool_map),
+            pl.BlockSpec((1, W) + trail,
+                         lambda b, t, tbl, st, act: (b,) + (0,) * (nd + 1)),
+        ],
+        out_specs=pl.BlockSpec((1, bs) + trail, pool_map),
+    )
+    return pl.pallas_call(
+        functools.partial(_write_kernel_body, bs=bs, W=W, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        # flat operands: (tables, start, active, pool, new)
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(tables.astype(jnp.int32), start.astype(jnp.int32),
+      active.astype(jnp.int32), pool, new)

@@ -1,9 +1,17 @@
-"""Pure-jnp oracles for the paged flash-decode kernel.
+"""Pure-jnp oracles for the paged flash-decode kernel and its fused
+window-writeback epilogue.
 
-Each ref gathers the dense per-sequence view through the block table (the
-very copy the kernel exists to avoid) and runs the plain-softmax decode
-math — the correctness anchor for the property sweeps, shared with
+Each attention ref gathers the dense per-sequence view through the block
+table (the very copy the kernel exists to avoid) and runs the plain-softmax
+decode math — the correctness anchor for the property sweeps, shared with
 ``decode_attention_ref`` semantics: query w attends keys <= lengths + w.
+
+``write_window_paged`` is the *separate scatter* the fused epilogue
+replaces: the standalone O(B*W) ``.at[].set`` at table-resolved offsets.
+It survives here as the bitwise reference the fused kernel (and the aliased
+``paged_write_kernel``) must reproduce exactly — asserted by the hypothesis
+sweeps in tests/kernels and tests/models. The ``*_fused_ref`` helpers
+compose it with the attention refs to oracle the full fused op.
 """
 from __future__ import annotations
 
@@ -19,8 +27,36 @@ def gather_view(pool, tables):
     return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
 
 
+def write_window_paged(pool, new, tables, cache_len, active=None):
+    """Reference window writeback: W new entries into the *physical block
+    pool* at per-sequence offsets resolved through the block table — the
+    standalone scatter the fused kernel epilogue replaces, touching O(B*W)
+    rows instead of a dense cache.
+
+    pool: (P, bs, ...); new: (B, W, ...); tables: (B, nb); cache_len: (B,).
+    Positions past a row's table (cleared slots: table all-zero), and every
+    position of rows with ``active == False``, land in the reserved sink
+    block 0, whose contents are garbage by design.
+    """
+    P, bs = pool.shape[:2]
+    B, W = new.shape[:2]
+    nb = tables.shape[1]
+    pos = cache_len[:, None] + jnp.arange(W)[None, :]        # (B, W)
+    blk = pos // bs
+    phys = jnp.take_along_axis(tables, jnp.clip(blk, 0, nb - 1), axis=1)
+    ok = (blk >= 0) & (blk < nb)
+    if active is not None:
+        ok &= active[:, None]
+    phys = jnp.where(ok, phys, 0)
+    flat_idx = (phys * bs + pos % bs).reshape(-1)            # (B*W,)
+    flat = pool.reshape((P * bs,) + pool.shape[2:])
+    flat = flat.at[flat_idx].set(new.reshape((B * W,) + new.shape[2:]))
+    return flat.reshape(pool.shape)
+
+
 def paged_attention_ref(q, k_pool, v_pool, tables, lengths, window: int = 0):
-    """q: (B, W, H, d); k_pool/v_pool: (P, bs, KV, d); tables: (B, nb);
+    """Attend-only oracle over pools whose window keys are already written.
+    q: (B, W, H, d); k_pool/v_pool: (P, bs, KV, d); tables: (B, nb);
     lengths: (B,). Returns (B, W, H, d)."""
     B, W, H, d = q.shape
     KV = k_pool.shape[2]
@@ -43,10 +79,22 @@ def paged_attention_ref(q, k_pool, v_pool, tables, lengths, window: int = 0):
     return out.reshape(B, W, H, d).astype(q.dtype)
 
 
+def paged_attention_fused_ref(q, k_pool, v_pool, k_new, v_new, tables,
+                              lengths, window: int = 0):
+    """Fused-op oracle: commit the window rows with the reference scatter,
+    then attend — returns (out, k_pool, v_pool) like the fused kernel."""
+    k_pool = write_window_paged(k_pool, k_new, tables, lengths)
+    v_pool = write_window_paged(v_pool, v_new, tables, lengths)
+    out = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                              window=window)
+    return out, k_pool, v_pool
+
+
 def paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
                      scale: float):
-    """q_lat: (B, W, H, r); q_rope: (B, W, H, dr); c_pool: (P, bs, r);
-    kr_pool: (P, bs, dr). Returns the latent context (B, W, H, r)."""
+    """Attend-only MLA oracle. q_lat: (B, W, H, r); q_rope: (B, W, H, dr);
+    c_pool: (P, bs, r); kr_pool: (P, bs, dr). Returns the latent context
+    (B, W, H, r)."""
     B, W, H, r = q_lat.shape
     c = gather_view(c_pool, tables)                      # (B, S, r)
     kr = gather_view(kr_pool, tables)                    # (B, S, dr)
@@ -61,3 +109,14 @@ def paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths, *,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhws,bsr->bwhr", p, c.astype(jnp.float32))
     return out.astype(q_lat.dtype)
+
+
+def paged_latent_fused_ref(q_lat, q_rope, c_pool, kr_pool, c_new, kr_new,
+                           tables, lengths, *, scale: float):
+    """Fused MLA oracle: reference scatter on both latent pools, then
+    attend — returns (out, c_pool, kr_pool) like the fused kernel."""
+    c_pool = write_window_paged(c_pool, c_new, tables, lengths)
+    kr_pool = write_window_paged(kr_pool, kr_new, tables, lengths)
+    out = paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths,
+                           scale=scale)
+    return out, c_pool, kr_pool

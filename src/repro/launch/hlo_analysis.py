@@ -42,3 +42,49 @@ def parse_collective_bytes(hlo_text: str):
     return totals
 
 
+
+
+def count_jaxpr_primitives(closed_jaxpr, names, min_rank: int = 0):
+    """Count primitive occurrences (by name) in a ClosedJaxpr, recursing
+    into sub-jaxprs (scan/while/pjit/pallas bodies). ``min_rank`` filters to
+    equations whose first output has at least that many dims — e.g.
+    ``count_jaxpr_primitives(jaxpr, ("scatter",), min_rank=3)`` counts
+    pool-shaped scatters (the standalone window-writeback the fused kernel
+    epilogue eliminates) while ignoring small per-row bookkeeping updates.
+
+    The fused-round acceptance gate (DESIGN.md §11): a verify round's jaxpr
+    must contain ZERO pool-ranked scatter eqns — every physical-pool write
+    happens inside a pallas_call as an aliased epilogue."""
+    counts = {n: 0 for n in names}
+
+    def visit(jaxpr):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            if prim in counts:
+                outs = eqn.outvars
+                rank = max((len(getattr(v.aval, "shape", ()))
+                            for v in outs), default=0)
+                if rank >= min_rank:
+                    counts[prim] += 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    visit(sub)
+    _visit_closed(closed_jaxpr, visit)
+    return counts
+
+
+def _sub_jaxprs(value):
+    """Yield any jaxprs nested inside an eqn param value."""
+    import jax.extend.core as jex_core  # deferred: no import side effects
+
+    vals = value if isinstance(value, (list, tuple)) else [value]
+    for v in vals:
+        if isinstance(v, jex_core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jex_core.Jaxpr):
+            yield v
+
+
+def _visit_closed(closed_jaxpr, visit):
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    visit(jaxpr)

@@ -115,6 +115,9 @@ def main(argv=None):
     ap.add_argument("--no-donate", action="store_true",
                     help="disable round-buffer donation (keeps the old "
                          "copy-per-round behaviour; for A/B measurement)")
+    ap.add_argument("--rounds-per-sync", type=int, default=4,
+                    help="device-resident verify rounds per host sync "
+                         "(lax.while_loop trip bound; 1 = host-driven)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -128,7 +131,8 @@ def main(argv=None):
                            block_size=args.block_size,
                            adaptive=not args.no_adaptive,
                            prefix_cache=not args.no_prefix_cache,
-                           topology=topo, donate=not args.no_donate)
+                           topology=topo, donate=not args.no_donate,
+                           rounds_per_sync=args.rounds_per_sync)
     if topo.mesh is not None:
         print(f"serving on {topo}")
     rng = np.random.default_rng(0)

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention.ops import (paged_attention,
-                                               paged_latent_attention)
+                                               paged_latent_attention,
+                                               paged_window_write)
 from repro.kernels.paged_attention.ref import gather_view
 from repro.nn.core import Dense, RMSNorm
 from repro.nn.rope import apply_rope
@@ -52,28 +53,6 @@ def write_window(buf, new, cache_len):
     vals = jnp.take_along_axis(new, idx, axis=1)             # (B, S, ...)
     mask = in_win.reshape(in_win.shape + (1,) * (buf.ndim - 2))
     return jnp.where(mask, vals, buf)
-
-
-def write_window_paged(pool, new, tables, cache_len):
-    """Write W new entries into the *physical block pool* at per-sequence
-    offsets resolved through the block table — the paged counterpart of
-    ``write_window``, touching O(B*W) rows instead of a dense cache.
-
-    pool: (P, bs, ...); new: (B, W, ...); tables: (B, nb); cache_len: (B,).
-    Positions past a row's table (cleared slots: table all-zero) land in the
-    reserved sink block 0, whose contents are garbage by design.
-    """
-    P, bs = pool.shape[:2]
-    B, W = new.shape[:2]
-    nb = tables.shape[1]
-    pos = cache_len[:, None] + jnp.arange(W)[None, :]        # (B, W)
-    blk = pos // bs
-    phys = jnp.take_along_axis(tables, jnp.clip(blk, 0, nb - 1), axis=1)
-    phys = jnp.where((blk >= 0) & (blk < nb), phys, 0)
-    flat_idx = (phys * bs + pos % bs).reshape(-1)            # (B*W,)
-    flat = pool.reshape((P * bs,) + pool.shape[2:])
-    flat = flat.at[flat_idx].set(new.reshape((B * W,) + new.shape[2:]))
-    return flat.reshape(pool.shape)
 
 
 def _causal_mask(q_pos, k_pos, window: int = 0):
@@ -219,21 +198,26 @@ class GQAttention:
                      interpret: Optional[bool] = None):
         """Paged counterpart of ``window``: the cache is the physical block
         pool ``{"k","v"}: (P, bs, KV, hd)`` plus per-sequence ``tables
-        (B, nb)`` — no dense per-sequence view is gathered or scattered.
-        Window K/V is written straight into its physical blocks, then the
-        queries attend through the table (Pallas flash-decode kernel on TPU;
-        the CPU fallback gathers the view and reuses ``_sdpa`` so it is
-        bit-identical to the dense engine path)."""
+        (B, nb)`` — no dense per-sequence view is gathered or scattered, and
+        no standalone window scatter runs before the kernel: the fused
+        Pallas kernel commits the W fresh K/V rows into their physical
+        blocks as an aliased epilogue while the queries attend through the
+        table (one dispatch). The CPU fallback commits through the same
+        aliased ``paged_window_write`` kernel, then gathers the view and
+        reuses ``_sdpa`` so it is bit-identical to the dense engine path."""
         B, W, _ = x.shape
         pos = cache_len[:, None] + jnp.arange(W)[None, :]  # (B, W)
         q, k_new, v_new = GQAttention._qkv(p, x, cfg, pos)
 
-        pk = write_window_paged(pool["k"], k_new, tables, cache_len)
-        pv = write_window_paged(pool["v"], v_new, tables, cache_len)
         if use_kernel:
-            out = paged_attention(q, pk, pv, tables, cache_len,
-                                  window=window, interpret=interpret)
+            out, pk, pv = paged_attention(q, pool["k"], pool["v"], k_new,
+                                          v_new, tables, cache_len,
+                                          window=window, interpret=interpret)
         else:
+            pk = paged_window_write(pool["k"], k_new, tables, cache_len,
+                                    interpret=interpret)
+            pv = paged_window_write(pool["v"], v_new, tables, cache_len,
+                                    interpret=interpret)
             k, v = gather_view(pk, tables), gather_view(pv, tables)
             k_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), (B, k.shape[1]))
             mask = _causal_mask(pos, k_pos, window)
@@ -370,29 +354,35 @@ class MLAttention:
         """Paged MLA decode: the latent cache ``{"c_kv": (P, bs, r),
         "k_rope": (P, bs, dr)}`` is written and read through the block
         tables. The kernel path absorbs W_uk into the query and streams the
-        latent pool once (the c_kv tile is both key and value); the CPU
-        fallback gathers the view and reuses ``_attend_absorbed`` bit-for-bit
-        with the dense engine path."""
+        latent pool once (the merged c_kv tile is both key and value) while
+        committing both latent pools as the fused aliased epilogue — no
+        standalone scatter before the pallas_call; the CPU fallback commits
+        through the same aliased ``paged_window_write`` kernel, then gathers
+        the view and reuses ``_attend_absorbed`` bit-for-bit with the dense
+        engine path."""
         B, W, _ = x.shape
         pos = cache_len[:, None] + jnp.arange(W)[None, :]
         q_nope, q_rope = MLAttention._q(p, x, cfg, pos)
         c_new, kr_new = MLAttention._latent(p, x, cfg, pos)
 
-        pc = write_window_paged(pool["c_kv"], c_new, tables, cache_len)
-        pkr = write_window_paged(pool["k_rope"], kr_new, tables, cache_len)
         if use_kernel:
             H, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
-            r = pc.shape[-1]
+            r = pool["c_kv"].shape[-1]
             wk_b = p["wk_b"]["w"].reshape(r, H, dn)
             wv_b = p["wv_b"]["w"].reshape(r, H, dv)
             q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
-            ctx = paged_latent_attention(
-                q_lat, q_rope, pc, pkr, tables, cache_len,
+            ctx, pc, pkr = paged_latent_attention(
+                q_lat, q_rope, pool["c_kv"], pool["k_rope"], c_new, kr_new,
+                tables, cache_len,
                 scale=1.0 / math.sqrt(dn + cfg.qk_rope_dim),
                 interpret=interpret)
             out = jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b)
             y = Dense.apply(p["wo"], out.reshape(B, W, -1))
         else:
+            pc = paged_window_write(pool["c_kv"], c_new, tables, cache_len,
+                                    interpret=interpret)
+            pkr = paged_window_write(pool["k_rope"], kr_new, tables,
+                                     cache_len, interpret=interpret)
             c_kv, k_rope = gather_view(pc, tables), gather_view(pkr, tables)
             S = c_kv.shape[1]
             k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))

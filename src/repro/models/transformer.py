@@ -440,10 +440,12 @@ class TransformerLM:
                             view: PagedView, cache_len,
                             state_mode: str = "per_position", accept=None):
         """Verify-window decode straight over the physical block pools — the
-        paged-attention hot path. No dense attention K/V view is built:
-        attention leaves stay (P, bs, ...) and each layer writes its window
-        K/V into physical blocks and attends through ``view.tables``
-        (Pallas kernel or gather-view fallback per ``view.use_kernel``).
+        paged-attention hot path. No dense attention K/V view is built and
+        no standalone window scatter runs before the kernel: attention
+        leaves stay (P, bs, ...) and each layer's single fused pallas_call
+        attends through ``view.tables`` while committing its window K/V into
+        the physical blocks as an aliased epilogue (gather-view fallback
+        with the aliased ``paged_window_write`` per ``view.use_kernel``).
         Recurrent state leaves (un-paged, (B, ...) slot-indexed) are routed
         to the ``view.rows`` being decoded. Returns (logits, h, new_cache)
         where new_cache holds the updated pools for attention leaves and
@@ -579,34 +581,35 @@ class TransformerLM:
     def scatter_paged(cfg: ModelConfig, paged, dense_new, tables, rows,
                       start, width: int, active):
         """Write a dense view's ``[start, start + width)`` positions back into
-        the physical pool. Only blocks intersecting the written span are
-        touched; lanes of inactive rows (and slots past the span) are routed
-        to the reserved sink block 0. Recurrent state leaves are adopted
+        the physical pool through the same aliased ``paged_window_write``
+        kernel the fused round uses, so donation semantics are uniform: only
+        blocks intersecting the written span are touched, the commit happens
+        in place on the donated pool (no full-pool scatter temp), and lanes
+        of inactive rows (and slots past the span) are routed to the
+        reserved sink block 0. Recurrent state leaves are adopted
         unconditionally for every view row (mirrors the dense engine, where
         an inactive row's re-run reproduces its snapshot bit-for-bit)."""
-        R, nb = tables.shape
+        from repro.kernels.paged_attention.ops import paged_window_write
+
+        act = active.astype(jnp.int32)
+
+        def span(dleaf):
+            # dense view values at [start, start + width): (R, width, ...)
+            S = dleaf.shape[1]
+            idx = jnp.clip(start[:, None] + jnp.arange(width)[None, :],
+                           0, S - 1)
+            idx = idx.reshape(idx.shape + (1,) * (dleaf.ndim - 2))
+            return jnp.take_along_axis(dleaf, idx, axis=1)
 
         def attn(stacked, pleaf, dleaf):
-            bs = pleaf.shape[2] if stacked else pleaf.shape[1]
-            # max physical blocks a width-wide span can straddle
-            T = (width + bs - 2) // bs + 1
-            slots = start[:, None] // bs + jnp.arange(T)[None, :]   # (R, T)
-            last = (start + width - 1) // bs
-            valid = ((slots <= last[:, None]) & (slots < nb)
-                     & active[:, None])
-            slots_c = jnp.clip(slots, 0, nb - 1)
-            phys = tables[jnp.arange(R)[:, None], slots_c]
-            phys = jnp.where(valid, phys, 0)
             if stacked:
-                L = dleaf.shape[0]
-                dv = dleaf.reshape((L, R, nb, bs) + dleaf.shape[3:])
-                vals = dv[:, jnp.arange(R)[:, None], slots_c]
-                return pleaf.at[:, phys.reshape(-1)].set(
-                    vals.reshape((L, R * T, bs) + vals.shape[4:]))
-            dv = dleaf.reshape((R, nb, bs) + dleaf.shape[2:])
-            vals = dv[jnp.arange(R)[:, None], slots_c]      # (R, T, bs, ...)
-            return pleaf.at[phys.reshape(-1)].set(
-                vals.reshape((R * T, bs) + vals.shape[3:]))
+                def body(_, pd):
+                    p_l, d_l = pd
+                    return None, paged_window_write(p_l, span(d_l), tables,
+                                                    start, act)
+                _, out = jax.lax.scan(body, None, (pleaf, dleaf))
+                return out
+            return paged_window_write(pleaf, span(dleaf), tables, start, act)
 
         def rec(stacked, pleaf, dleaf):
             if stacked:

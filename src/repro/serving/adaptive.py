@@ -63,13 +63,26 @@ class AdaptiveWindowController:
         return self._ewma
 
     def observe(self, accepts) -> int:
-        """Feed this round's accept lengths (active rows only); returns the
+        """Feed one round's accept lengths (active rows only); returns the
         window to use next round."""
         accepts = np.asarray(accepts, np.float64)
+        return self.observe_aggregate(float(accepts.sum()),
+                                      int(accepts.size))
+
+    def observe_aggregate(self, accepted_total: float,
+                          active_row_rounds: int) -> int:
+        """Feed a device-resident loop's aggregated stats: total tokens
+        accepted over the loop and the number of (row, round) pairs that
+        were active. The EWMA advances once per host sync with the loop-mean
+        accept length (the loop runs at fixed W, so per-round feedback could
+        not have retuned mid-loop anyway — the retune boundary IS the sync);
+        hysteresis ``patience`` therefore counts host syncs. Returns the
+        window to use for the next loop."""
         self.history.append(self._w)
-        if not self.enabled or accepts.size == 0:
+        if not self.enabled or active_row_rounds <= 0:
             return self._w
-        self._ewma += self.alpha * (float(accepts.mean()) - self._ewma)
+        mean = float(accepted_total) / float(active_row_rounds)
+        self._ewma += self.alpha * (mean - self._ewma)
         want = int(np.clip(round(self.headroom * self._ewma), 1, self.w_max))
         # quantize to the pow2 grid (plus w_max itself as the top rung),
         # rounding up: the next rung above a pow2 is its double, capped at

@@ -29,10 +29,18 @@ slot and blocks immediately. What's new over the dense batcher:
   Under a mesh the cache is per-shard (blocks never cross shards).
 * **Row-local chunked prefill** — an admitted row prefills through batch-1
   windows over its own blocks; nothing scales with the batch width.
-* **Adaptive speculation** — the verify window W is retuned per round from
-  the observed accept-length EWMA (``AdaptiveWindowController``), bounded to
-  powers of two in ``[1, w_max]`` so at most ``log2(w_max)+1`` round shapes
-  compile.
+* **Device-resident verify rounds** — a verify round is a SINGLE device
+  dispatch (the fused paged kernel commits window K/V as an aliased
+  epilogue — no standalone scatter before the pallas_call), and up to
+  ``rounds_per_sync`` rounds run inside one ``lax.while_loop`` dispatch
+  between host syncs: the host pulls one packed (B, 4) stats array per
+  loop instead of ``n``/``cand`` every round (DESIGN.md §11). Under a mesh
+  each shard's loop stops on its own rows — no cross-shard collective.
+* **Adaptive speculation** — the verify window W is retuned per host sync
+  from the observed accept-length EWMA (``AdaptiveWindowController``),
+  bounded to powers of two in ``[1, w_max]`` so at most ``log2(w_max)+1``
+  round shapes compile; the loop runs at fixed W, so the sync IS the
+  retune boundary.
 * **Donated round buffers** — the physical pool and per-slot device state
   are dead the moment a round returns their successors, so the jitted round
   and prefill steps donate them (``donate_argnums``): XLA updates the pool
@@ -82,9 +90,10 @@ class ServingEngine:
                  paged_attention: bool = True,
                  use_attention_kernel: Optional[bool] = None,
                  topology: Optional[ServingTopology] = None,
-                 donate: bool = True):
+                 donate: bool = True, rounds_per_sync: int = 4):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
+        assert rounds_per_sync >= 1, rounds_per_sync
         self.cfg = cfg
         self.params = params
         self.B = batch
@@ -107,6 +116,9 @@ class ServingEngine:
         # donate the pool + per-slot state into the jitted round/prefill
         # steps (their previous values are dead once the step returns)
         self.donate = donate
+        # device-resident rounds: up to this many verify rounds run inside
+        # one dispatch (lax.while_loop) between host syncs; 1 = host-driven
+        self.rounds_per_sync = rounds_per_sync
         self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
             eps_key if eps_key is not None else jax.random.PRNGKey(0),
             cfg.vocab)
@@ -162,7 +174,7 @@ class ServingEngine:
         self._tables_dev = None
         self._target_dev = None
 
-        self._round_fns: dict[int, callable] = {}
+        self._round_fns: dict[tuple[int, int], callable] = {}
         self._prefill_fns: dict[int, callable] = {}
 
     # -- seed-API compatibility -------------------------------------------
@@ -179,56 +191,94 @@ class ServingEngine:
         self.queue.push(req)
 
     # -- jitted steps -------------------------------------------------------
-    def _round_fn(self, W: int):
-        """One verify round. Paged mode decodes through the block tables —
-        window K/V lands straight in its physical blocks and attention
-        streams the pool (per-round HBM traffic independent of pool size).
+    def _round_loop_fn(self, W: int, k: int):
+        """Up to ``k`` verify rounds in ONE device dispatch. The round body
+        decodes through the block tables — the fused paged kernel commits
+        the window K/V into its physical blocks as an aliased epilogue while
+        attention streams the pool (one pallas_call per layer, no standalone
+        window scatter; per-round HBM traffic independent of pool size).
         Legacy mode is the dense round-trip: gather the whole view, decode,
-        scatter the window back (O(B*S*d) both ways around the round).
+        write the window span back through the same aliased writeback.
 
-        Under a mesh topology the body runs shard_map-manual over "data":
-        each shard sees its local rows, its local tables, and its local
-        block sub-pool — the indirection never crosses shards. The old pool
-        and per-slot state are donated (dead after the round), so XLA
-        updates the pool in place instead of copying it every round."""
-        if W not in self._round_fns:
+        A ``lax.while_loop`` re-runs the body until every local row is done
+        or ``k`` rounds have run (the window-retune boundary): the host
+        syncs one small packed stats array per *loop*, not per round —
+        (R, 4) int32 ``[accepted, rounds_active, new_length, loop_rounds]``
+        (DESIGN.md §11). Inactive rows are no-ops inside the loop, so extra
+        rounds never change tokens.
+
+        Under a mesh topology the whole loop runs shard_map-manual over
+        "data": each shard sees its local rows, its local tables, and its
+        local block sub-pool, and — crucially — its while_loop stops on its
+        OWN rows, so the stop condition needs no cross-shard collective
+        (shards may run different trip counts; the compiled HLO stays
+        collective-free). The old pool and per-slot state are donated (dead
+        after the loop), so XLA updates the pool in place round over round
+        instead of copying it."""
+        if (W, k) not in self._round_fns:
             cfg = self.cfg
 
             def fn(params, paged, tables, tokens, n, cand, seq_ids, target):
                 R = tokens.shape[0]          # rows on this shard (B/D)
                 rows = jnp.arange(R)
-                if self.paged_attention:
-                    cache = paged
-                    pv = PagedView(tables, rows, self.use_attention_kernel)
-                else:
-                    cache = TransformerLM.gather_paged(cfg, paged, tables,
-                                                       rows)
-                    pv = None
-                st = GenState(tokens, n, cand[:, :W], cache,
-                              jnp.zeros((), jnp.int32),
-                              jnp.zeros((R,), jnp.int32),
-                              jnp.zeros((R,), jnp.int32), seq_ids)
-                st2 = verify_round(
-                    params, cfg, self.eps_fn, st, target,
-                    use_forecast_heads=self.use_forecast_heads,
-                    use_verify_kernel=self.use_verify_kernel, paged=pv)
-                if self.paged_attention:
-                    paged2 = st2.cache
-                else:
-                    active = n < target
-                    paged2 = TransformerLM.scatter_paged(
-                        cfg, paged, st2.cache, tables, rows,
-                        jnp.maximum(n - 1, 0), W, active)
-                cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
-                return paged2, st2.tokens, st2.n, cand2, st2.n - n
+
+                def one_round(paged, tokens, n, cand):
+                    if self.paged_attention:
+                        cache = paged
+                        pv = PagedView(tables, rows,
+                                       self.use_attention_kernel)
+                    else:
+                        cache = TransformerLM.gather_paged(cfg, paged,
+                                                           tables, rows)
+                        pv = None
+                    st = GenState(tokens, n, cand[:, :W], cache,
+                                  jnp.zeros((), jnp.int32),
+                                  jnp.zeros((R,), jnp.int32),
+                                  jnp.zeros((R,), jnp.int32), seq_ids)
+                    st2, rstats = verify_round(
+                        params, cfg, self.eps_fn, st, target,
+                        use_forecast_heads=self.use_forecast_heads,
+                        use_verify_kernel=self.use_verify_kernel, paged=pv)
+                    if self.paged_attention:
+                        paged2 = st2.cache
+                    else:
+                        active = n < target
+                        paged2 = TransformerLM.scatter_paged(
+                            cfg, paged, st2.cache, tables, rows,
+                            jnp.maximum(n - 1, 0), W, active)
+                    cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
+                    return paged2, st2.tokens, st2.n, cand2, rstats
+
+                def cond(carry):
+                    _, _, n_c, _, _, _, r = carry
+                    return (r < k) & jnp.any(n_c < target)
+
+                def body(carry):
+                    paged_c, tokens_c, n_c, cand_c, acc, act_rounds, r = \
+                        carry
+                    active = (n_c < target).astype(jnp.int32)
+                    paged_c, tokens_c, n_c, cand_c, rstats = one_round(
+                        paged_c, tokens_c, n_c, cand_c)
+                    # consume the §11 per-round stats ABI: col 0 = accepted
+                    return (paged_c, tokens_c, n_c, cand_c,
+                            acc + rstats[:, 0], act_rounds + active, r + 1)
+
+                init = (paged, tokens, n, cand, jnp.zeros((R,), jnp.int32),
+                        jnp.zeros((R,), jnp.int32), jnp.zeros((), jnp.int32))
+                (paged2, tokens2, n2, cand2, acc, act_rounds, r) = \
+                    jax.lax.while_loop(cond, body, init)
+                stats = jnp.stack(
+                    [acc, act_rounds, n2,
+                     jnp.broadcast_to(r, (R,))], axis=1)
+                return paged2, tokens2, n2, cand2, stats
 
             wrapped = self.topo.wrap_round(fn, self._paged_specs,
                                            n_batch_in=6, n_batch_out=4)
-            # donate pool + tokens/n/cand (dead after the round); tables,
+            # donate pool + tokens/n/cand (dead after the loop); tables,
             # seq_ids and target are cached host-owned uploads — kept alive
             donate = (1, 3, 4, 5) if self.donate else ()
-            self._round_fns[W] = jax.jit(wrapped, donate_argnums=donate)
-        return self._round_fns[W]
+            self._round_fns[(W, k)] = jax.jit(wrapped, donate_argnums=donate)
+        return self._round_fns[(W, k)]
 
     def _prefill_fn(self, C: int):
         """Row-local chunked prefill. Runs as a plain (GSPMD) jit even under
@@ -408,9 +458,14 @@ class ServingEngine:
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits (routing by pool pressure), run one verify round,
-        harvest finished requests. Returns True while there is (or may be)
-        work left."""
+        """Admit what fits (routing by pool pressure), run one device
+        dispatch of up to ``rounds_per_sync`` verify rounds, harvest
+        finished requests. The host touches exactly ONE small packed stats
+        array per step — no ``n``/``cand`` pulls per round. While admission
+        backlog is queued the loop yields every round (``k = 1``) so freed
+        slots refill promptly; with no backlog it stays device-resident for
+        the full ``rounds_per_sync``. Returns True while there is (or may
+        be) work left."""
         while self.queue:
             b = self._route(self.queue.peek())
             if b is None:
@@ -425,31 +480,33 @@ class ServingEngine:
             return False
 
         W = self.controller.window
+        k = 1 if self.queue else self.rounds_per_sync
         for b in range(self.B):
             if self.slots[b] is not None:
                 self._ensure_capacity(b, int(self.target[b]) + W)
-        n_before = np.asarray(self.n)
-        (self.paged, self.tokens, self.n, self.cand, a_dev) = \
-            self._round_fn(W)(self.params, self.paged,
-                              self._tables_device(), self.tokens,
-                              self.n, self.cand, self.seq_ids,
-                              self._target_device())
-        a = np.asarray(a_dev)
-        n_host = np.asarray(self.n)
+        (self.paged, self.tokens, self.n, self.cand, stats_dev) = \
+            self._round_loop_fn(W, k)(self.params, self.paged,
+                                      self._tables_device(), self.tokens,
+                                      self.n, self.cand, self.seq_ids,
+                                      self._target_device())
+        # THE host sync: one (B, 4) int32 pull per loop
+        stats = np.asarray(stats_dev)
+        accepted, rounds_active, n_host = stats[:, 0], stats[:, 1], stats[:, 2]
+        rounds_exec = int(stats[:, 3].max())   # critical path across shards
 
-        active_rows = [b for b in range(self.B)
-                       if self.slots[b] is not None
-                       and n_before[b] < self.target[b]]
-        for b in active_rows:
-            self.slots[b].calls_used += 1
-        self.metrics.observe_round(W, len(active_rows), self.B,
-                                   int(a[active_rows].sum())
-                                   if active_rows else 0)
-        self.controller.observe(a[active_rows])
+        slot_rows = [b for b in range(self.B) if self.slots[b] is not None]
+        for b in slot_rows:
+            self.slots[b].calls_used += int(rounds_active[b])
+        act_row_rounds = int(rounds_active[slot_rows].sum()) \
+            if slot_rows else 0
+        acc_total = int(accepted[slot_rows].sum()) if slot_rows else 0
+        self.metrics.observe_loop(W, rounds_exec, act_row_rounds, self.B,
+                                  acc_total)
+        self.controller.observe_aggregate(acc_total, act_row_rounds)
 
-        for b in range(self.B):
+        for b in slot_rows:
             req = self.slots[b]
-            if req is not None and n_host[b] >= self.target[b]:
+            if n_host[b] >= self.target[b]:
                 req.result = np.asarray(self.tokens[b, :n_host[b]])
                 req.finish_time = time.monotonic()
                 self.metrics.observe_finish(req)

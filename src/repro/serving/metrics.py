@@ -24,10 +24,12 @@ def percentile(values, p: float) -> float:
 class EngineMetrics:
     rounds: int = 0                      # batch-level verify rounds (ARM calls)
     prefill_calls: int = 0               # row-local prefill chunk passes
+    host_syncs: int = 0                  # stats-array pulls (one per loop)
+    device_dispatches: int = 0           # round-loop program launches
     tokens_generated: int = 0
-    tokens_accepted_hist: list = field(default_factory=list)  # per-round sums
-    occupancy_hist: list = field(default_factory=list)        # active/B per round
-    window_hist: list = field(default_factory=list)           # W per round
+    tokens_accepted_hist: list = field(default_factory=list)  # per-loop sums
+    occupancy_hist: list = field(default_factory=list)  # row-rounds/(rounds*B)
+    window_hist: list = field(default_factory=list)           # W per loop
     requests_finished: int = 0
     request_latencies: list = field(default_factory=list)
     request_queue_waits: list = field(default_factory=list)
@@ -36,13 +38,25 @@ class EngineMetrics:
     deadline_miss_count: int = 0         # finished past their latency SLO
     deadline_requests: int = 0           # finished requests that carried one
 
-    def observe_round(self, window: int, active: int, batch: int,
-                      accepted: int):
-        self.rounds += 1
+    def observe_loop(self, window: int, rounds: int, active_row_rounds: int,
+                     batch: int, accepted: int):
+        """One device-resident round loop (one dispatch, one host sync)
+        covering ``rounds`` verify rounds; ``active_row_rounds`` counts
+        (row, round) pairs in which the row was active."""
+        self.rounds += int(rounds)
+        self.host_syncs += 1
+        self.device_dispatches += 1
         self.window_hist.append(int(window))
-        self.occupancy_hist.append(active / batch if batch else 0.0)
+        denom = max(1, int(rounds)) * batch
+        self.occupancy_hist.append(active_row_rounds / denom if batch
+                                   else 0.0)
         self.tokens_accepted_hist.append(int(accepted))
         self.tokens_generated += int(accepted)
+
+    def observe_round(self, window: int, active: int, batch: int,
+                      accepted: int):
+        """Host-driven compatibility shim: a single round = a loop of 1."""
+        self.observe_loop(window, 1, active, batch, accepted)
 
     def observe_finish(self, req):
         self.requests_finished += 1
@@ -61,11 +75,25 @@ class EngineMetrics:
         out = {
             "rounds": self.rounds,
             "prefill_calls": self.prefill_calls,
+            "host_syncs": self.host_syncs,
+            "device_dispatches": self.device_dispatches,
+            # device residency: verify rounds amortized per program launch /
+            # per host pull (1.0 = host-driven; rounds_per_sync at best)
+            "rounds_per_sync": (self.rounds / self.host_syncs
+                                if self.host_syncs else 0.0),
+            "dispatches_per_token": (
+                self.device_dispatches / self.tokens_generated
+                if self.tokens_generated else 0.0),
+            "host_syncs_per_token": (
+                self.host_syncs / self.tokens_generated
+                if self.tokens_generated else 0.0),
             "tokens_generated": self.tokens_generated,
             "requests_finished": self.requests_finished,
-            "mean_accept_per_round": (
-                float(np.mean(self.tokens_accepted_hist))
-                if self.tokens_accepted_hist else 0.0),
+            # hist entries are per-LOOP sums since the device-resident
+            # rounds; normalize by executed rounds so the value keeps its
+            # per-round meaning across rounds_per_sync settings
+            "mean_accept_per_round": (self.tokens_generated / self.rounds
+                                      if self.rounds else 0.0),
             "mean_batch_occupancy": (
                 float(np.mean(self.occupancy_hist))
                 if self.occupancy_hist else 0.0),

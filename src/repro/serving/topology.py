@@ -16,9 +16,14 @@ mesh and owns every placement decision the engine makes:
   indirection is shard-local *by construction* — no gather ever sees a
   remote block id, so the round hot path lowers with zero cross-shard
   collectives (asserted via HLO inspection in
-  tests/serving/test_mesh_engine.py). Other mesh axes (``model``, ``pod``)
-  stay *auto*: GSPMD places tensor-sharded params there (only standard TP
-  reductions can appear, never table-indexed traffic).
+  tests/serving/test_mesh_engine.py). The device-resident round *loop*
+  (DESIGN.md §11) preserves this: the whole ``lax.while_loop`` sits inside
+  the per-shard body and each shard's stop condition reads only its OWN
+  rows, so shards may run different trip counts and the stop test needs no
+  cross-shard reduction — extra rounds on an early-finishing shard are
+  token-exact no-ops. Other mesh axes (``model``, ``pod``) stay *auto*:
+  GSPMD places tensor-sharded params there (only standard TP reductions
+  can appear, never table-indexed traffic).
 * **Exactness** — per-request noise streams (``Request.seq_id``) are
   placement-independent and the round body is row-local, so a mesh engine
   emits tokens bit-identical to the single-device engine and to solo

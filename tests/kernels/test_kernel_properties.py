@@ -9,9 +9,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_window_write)
 from repro.kernels.paged_attention.ref import (gather_view,
-                                              paged_attention_ref)
+                                              paged_attention_ref,
+                                              write_window_paged)
 from repro.kernels.spec_verify.ops import spec_verify
 
 
@@ -49,9 +51,12 @@ def test_flash_attention_property(seed, S, d, window):
        st.sampled_from([1, 4, 16]), st.integers(2, 4),
        st.integers(0, 2), st.sampled_from([0, 24]))
 def test_paged_attention_property(seed, bs, W, nb, shared, window):
-    """paged kernel == paged ref == dense decode_attention over the gathered
-    view, across block sizes, ragged per-sequence lengths (partially filled
-    tail blocks), window sizes, and tables with shared prefix blocks."""
+    """fused paged kernel == (reference scatter -> paged ref) == dense
+    decode_attention over the post-write gathered view, across block sizes,
+    ragged per-sequence lengths (partially filled tail blocks), window
+    sizes, and tables with shared prefix blocks — and the fused epilogue's
+    pool commit is BITWISE the separate ``write_window_paged`` scatter
+    (excluding the reserved sink block 0, garbage by design)."""
     B, H, KV, d = 2, 4, 2, 16
     shared = min(shared, nb - 1)
     key = jax.random.PRNGKey(seed)
@@ -60,6 +65,8 @@ def test_paged_attention_property(seed, bs, W, nb, shared, window):
     q = jax.random.normal(kq, (B, W, H, d))
     k_pool = jax.random.normal(kk, (P, bs, KV, d))
     v_pool = jax.random.normal(kv, (P, bs, KV, d))
+    k_new = jax.random.normal(jax.random.fold_in(kk, 1), (B, W, KV, d))
+    v_new = jax.random.normal(jax.random.fold_in(kv, 1), (B, W, KV, d))
     ids = np.arange(1, P)
     tables = np.zeros((B, nb), np.int32)
     tables[:, :shared] = ids[:shared]
@@ -68,16 +75,27 @@ def test_paged_attention_property(seed, bs, W, nb, shared, window):
         tables[b, shared:] = ids[nxt:nxt + nb - shared]
         nxt += nb - shared
     tables = jnp.asarray(tables)
-    lengths = jax.random.randint(kl, (B,), 1, nb * bs - W + 1)
+    # window spans start at `lengths`: keep them strictly above the shared
+    # prefix blocks, the engine invariant (shareable blocks cover positions
+    # < L_p - 1 <= n - 1) that makes shared blocks read-only by construction
+    lengths = jax.random.randint(kl, (B,), max(1, shared * bs),
+                                 nb * bs - W + 1)
 
-    got = paged_attention(q, k_pool, v_pool, tables, lengths, window=window,
-                          interpret=True)
-    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
-                               window=window)
+    got, kp2, vp2 = paged_attention(q, k_pool, v_pool, k_new, v_new,
+                                    tables, lengths, window=window,
+                                    interpret=True)
+    rk = write_window_paged(k_pool, k_new, tables, lengths)
+    rv = write_window_paged(v_pool, v_new, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(kp2)[1:], np.asarray(rk)[1:])
+    np.testing.assert_array_equal(np.asarray(vp2)[1:], np.asarray(rv)[1:])
+    # the standalone aliased writeback is the same commit, bitwise
+    pw = paged_window_write(k_pool, k_new, tables, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pw)[1:], np.asarray(rk)[1:])
+    want = paged_attention_ref(q, rk, rv, tables, lengths, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5)
-    dense = decode_attention(q, gather_view(k_pool, tables),
-                             gather_view(v_pool, tables), lengths,
+    dense = decode_attention(q, gather_view(rk, tables),
+                             gather_view(rv, tables), lengths,
                              window=window, use_kernel=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
                                rtol=3e-5, atol=3e-5)

@@ -1,15 +1,21 @@
-"""Paged flash-decode kernel vs its oracle, the dense decode kernel, and the
-dense decode reference (interpret mode).
+"""Paged flash-decode kernel (fused window-writeback epilogue) vs its
+oracle, the dense decode kernel, and the dense decode reference (interpret
+mode).
 
 The load-bearing invariants:
-* paged kernel == paged ref (gather view + plain softmax) across block
-  sizes, ragged lengths with partially filled tail blocks, and W in
-  {1, 4, 16};
-* with matching tile sizes the paged kernel is BITWISE identical to the
-  dense ``decode_attention_kernel`` run over the gathered view — the same
-  online-softmax op sequence, only the addressing differs;
+* fused kernel == fused ref (reference ``write_window_paged`` scatter +
+  gather view + plain softmax) across block sizes, ragged lengths with
+  partially filled tail blocks, and W in {1, 4, 16} — on the attention
+  output AND bitwise on the committed pools (excluding the reserved sink
+  block 0, whose contents are garbage by design);
+* with matching tile sizes the fused kernel is BITWISE identical to the
+  dense ``decode_attention_kernel`` run over the post-write gathered view —
+  the same online-softmax op sequence, only the addressing (and the fused
+  commit) differs;
+* the standalone aliased writeback (``paged_window_write``) is bitwise
+  identical to the reference scatter, including inactive-row sink routing;
 * block tables with shared prefix blocks (prefix-cache hits) read the same
-  physical memory from both sequences;
+  physical memory from both sequences and the epilogue never writes them;
 * table entries past the allocation point (sink block 0) never contribute.
 """
 import jax
@@ -20,11 +26,12 @@ import pytest
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.paged_attention.ops import (paged_attention,
-                                               paged_latent_attention)
+                                               paged_latent_attention,
+                                               paged_window_write)
 from repro.kernels.paged_attention.ref import (gather_view,
                                               paged_attention_ref,
-                                              paged_latent_ref)
-from repro.models.attention import write_window_paged
+                                              paged_latent_ref,
+                                              write_window_paged)
 
 
 def _pool_and_tables(key, P, bs, nb, KV, d, B, dtype=jnp.float32,
@@ -47,45 +54,60 @@ def _pool_and_tables(key, P, bs, nb, KV, d, B, dtype=jnp.float32,
     return k_pool, v_pool, jnp.asarray(tables)
 
 
+def _window_kv(key, B, W, KV, d, dtype=jnp.float32):
+    kk, kv = jax.random.split(key)
+    return (jax.random.normal(kk, (B, W, KV, d)).astype(dtype),
+            jax.random.normal(kv, (B, W, KV, d)).astype(dtype))
+
+
 @pytest.mark.parametrize("bs", [16, 64, 128])
 @pytest.mark.parametrize("W", [1, 4, 16])
-def test_paged_kernel_matches_ref_and_dense(bs, W):
+def test_fused_kernel_matches_ref_and_dense(bs, W):
     B, H, KV, d, nb = 2, 4, 2, 32, 3
     P = 1 + B * nb
     key = jax.random.PRNGKey(bs * 31 + W)
-    kq, kp, kl = jax.random.split(key, 3)
+    kq, kp, kl, kn = jax.random.split(key, 4)
     q = jax.random.normal(kq, (B, W, H, d))
     k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    k_new, v_new = _window_kv(kn, B, W, KV, d)
     # ragged: partially filled tail blocks, room left for the W window keys
     lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
 
-    got = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
-    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths)
+    got, kp2, vp2 = paged_attention(q, k_pool, v_pool, k_new, v_new, tables,
+                                    lengths, interpret=True)
+    # the fused commit is bitwise the reference scatter (sink excluded)
+    rk = write_window_paged(k_pool, k_new, tables, lengths)
+    rv = write_window_paged(v_pool, v_new, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(kp2)[1:], np.asarray(rk)[1:])
+    np.testing.assert_array_equal(np.asarray(vp2)[1:], np.asarray(rv)[1:])
+    want = paged_attention_ref(q, rk, rv, tables, lengths)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
-    # vs the dense op over the gathered view (different tiling -> allclose)
-    kd, vd = gather_view(k_pool, tables), gather_view(v_pool, tables)
+    # vs the dense op over the post-write gathered view (allclose: tiling)
+    kd, vd = gather_view(rk, tables), gather_view(rv, tables)
     dense = decode_attention(q, kd, vd, lengths, use_kernel=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
                                rtol=2e-5, atol=2e-5)
 
 
-def test_paged_kernel_bitwise_vs_dense_kernel():
-    """Same tile size -> identical online-softmax op sequence: the paged
-    kernel must reproduce the dense flash-decode kernel bit-for-bit."""
+def test_fused_kernel_bitwise_vs_dense_kernel():
+    """Same tile size -> identical online-softmax op sequence: the fused
+    paged kernel must reproduce the dense flash-decode kernel (run over the
+    post-write gathered view) bit-for-bit."""
     B, W, H, KV, d, bs, nb = 2, 8, 4, 2, 32, 32, 4
     P = 1 + B * nb
     key = jax.random.PRNGKey(7)
-    kq, kp, kl = jax.random.split(key, 3)
+    kq, kp, kl, kn = jax.random.split(key, 4)
     q = jax.random.normal(kq, (B, W, H, d))
     k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    k_new, v_new = _window_kv(kn, B, W, KV, d)
     lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
 
-    paged = paged_attention(q, k_pool, v_pool, tables, lengths,
-                            interpret=True)
+    paged, kp2, vp2 = paged_attention(q, k_pool, v_pool, k_new, v_new,
+                                      tables, lengths, interpret=True)
     G = H // KV
-    kd = jnp.repeat(gather_view(k_pool, tables), G, axis=2)
-    vd = jnp.repeat(gather_view(v_pool, tables), G, axis=2)
+    kd = jnp.repeat(gather_view(kp2, tables), G, axis=2)
+    vd = jnp.repeat(gather_view(vp2, tables), G, axis=2)
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, W, d)
     kf = kd.transpose(0, 2, 1, 3).reshape(B * H, nb * bs, d)
     vf = vd.transpose(0, 2, 1, 3).reshape(B * H, nb * bs, d)
@@ -96,41 +118,56 @@ def test_paged_kernel_bitwise_vs_dense_kernel():
 
 
 @pytest.mark.parametrize("window", [0, 24])
-def test_paged_kernel_sliding_window(window):
+def test_fused_kernel_sliding_window(window):
     B, W, H, KV, d, bs, nb = 2, 4, 4, 1, 32, 16, 4
     P = 1 + B * nb
     key = jax.random.PRNGKey(window + 1)
-    kq, kp = jax.random.split(key)
+    kq, kp, kn = jax.random.split(key, 3)
     q = jax.random.normal(kq, (B, W, H, d))
     k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    k_new, v_new = _window_kv(kn, B, W, KV, d)
     lengths = jnp.asarray([37, 11])
-    got = paged_attention(q, k_pool, v_pool, tables, lengths, window=window,
-                          interpret=True)
-    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
-                               window=window)
+    got, kp2, vp2 = paged_attention(q, k_pool, v_pool, k_new, v_new, tables,
+                                    lengths, window=window, interpret=True)
+    rk = write_window_paged(k_pool, k_new, tables, lengths)
+    rv = write_window_paged(v_pool, v_new, tables, lengths)
+    want = paged_attention_ref(q, rk, rv, tables, lengths, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(kp2)[1:], np.asarray(rk)[1:])
 
 
-def test_shared_prefix_blocks_read_identically():
+def test_shared_prefix_blocks_read_identically_and_stay_unwritten():
     """Two sequences whose tables alias the same physical prefix blocks and
     have equal lengths must produce identical outputs for identical queries
-    — the prefix-cache sharing contract at the kernel level."""
+    — the prefix-cache sharing contract at the kernel level — and the fused
+    epilogue must never write a shared prefix block (they sit strictly
+    below the window span)."""
     B, W, H, KV, d, bs, nb = 2, 4, 2, 2, 16, 8, 3
     P = 1 + 2 + B * 1                         # 2 shared + 1 private each
     key = jax.random.PRNGKey(3)
-    kq, kp = jax.random.split(key)
+    kq, kp, kn = jax.random.split(key, 3)
     q1 = jax.random.normal(kq, (1, W, H, d))
     q = jnp.concatenate([q1, q1], axis=0)
     k_pool, v_pool, tables = _pool_and_tables(kp, P, bs, nb, KV, d, B,
                                               shared_prefix=2)
+    kn1, vn1 = _window_kv(kn, 1, W, KV, d)
+    k_new = jnp.concatenate([kn1, kn1], axis=0)
+    v_new = jnp.concatenate([vn1, vn1], axis=0)
     assert (np.asarray(tables[0, :2]) == np.asarray(tables[1, :2])).all()
     assert tables[0, 2] != tables[1, 2]
     # q_pos tops out at lengths + W - 1 = 15: every attended key lives in
-    # the shared prefix blocks
+    # the shared prefix blocks... except the window itself (merged)
     lengths = jnp.asarray([2 * bs - W, 2 * bs - W])
-    out = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+    out, kp2, vp2 = paged_attention(q, k_pool, v_pool, k_new, v_new, tables,
+                                    lengths, interpret=True)
     np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    # shared prefix blocks strictly below the window stayed untouched
+    shared = np.asarray(tables[0, :1])        # block 0 covers pos < 8 < 12
+    np.testing.assert_array_equal(np.asarray(kp2)[shared],
+                                  np.asarray(k_pool)[shared])
+    np.testing.assert_array_equal(np.asarray(vp2)[shared],
+                                  np.asarray(v_pool)[shared])
 
 
 def test_sink_tail_blocks_never_contribute():
@@ -139,45 +176,83 @@ def test_sink_tail_blocks_never_contribute():
     B, W, H, KV, d, bs, nb = 1, 4, 2, 1, 16, 8, 4
     P = 1 + nb
     key = jax.random.PRNGKey(11)
-    kq, kp = jax.random.split(key)
+    kq, kp, kn = jax.random.split(key, 3)
     q = jax.random.normal(kq, (B, W, H, d))
     k_pool, v_pool, _ = _pool_and_tables(kp, P, bs, nb, KV, d, B)
+    k_new, v_new = _window_kv(kn, B, W, KV, d)
     tables = jnp.asarray([[1, 2, 0, 0]], jnp.int32)   # 2 real blocks + sink
     lengths = jnp.asarray([2 * bs - W], jnp.int32)
-    base = paged_attention(q, k_pool, v_pool, tables, lengths,
-                           interpret=True)
+    base, _, _ = paged_attention(q, k_pool, v_pool, k_new, v_new, tables,
+                                 lengths, interpret=True)
     poisoned_k = k_pool.at[0].set(1e9)
     poisoned_v = v_pool.at[0].set(-1e9)
-    got = paged_attention(q, poisoned_k, poisoned_v, tables, lengths,
-                          interpret=True)
+    got, _, _ = paged_attention(q, poisoned_k, poisoned_v, k_new, v_new,
+                                tables, lengths, interpret=True)
     np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
 
 
 @pytest.mark.parametrize("W", [1, 4])
-def test_paged_latent_kernel_matches_ref(W):
+def test_fused_latent_kernel_matches_ref(W):
     B, H, r, dr, bs, nb = 2, 4, 24, 16, 16, 3
     P = 1 + B * nb
     key = jax.random.PRNGKey(W)
-    k1, k2, k3, k4, kl = jax.random.split(key, 5)
+    k1, k2, k3, k4, kl, kn = jax.random.split(key, 6)
     q_lat = jax.random.normal(k1, (B, W, H, r))
     q_rope = jax.random.normal(k2, (B, W, H, dr))
     c_pool = jax.random.normal(k3, (P, bs, r))
     kr_pool = jax.random.normal(k4, (P, bs, dr))
+    c_new = jax.random.normal(kn, (B, W, r))
+    kr_new = jax.random.normal(jax.random.fold_in(kn, 1), (B, W, dr))
     ids = np.arange(1, P).reshape(B, nb)
     tables = jnp.asarray(ids, jnp.int32)
     lengths = jax.random.randint(kl, (B,), 1, nb * bs - W)
     scale = 1.0 / np.sqrt(r + dr)
-    got = paged_latent_attention(q_lat, q_rope, c_pool, kr_pool, tables,
-                                 lengths, scale, interpret=True)
-    want = paged_latent_ref(q_lat, q_rope, c_pool, kr_pool, tables, lengths,
+    got, c2, kr2 = paged_latent_attention(q_lat, q_rope, c_pool, kr_pool,
+                                          c_new, kr_new, tables, lengths,
+                                          scale, interpret=True)
+    rc = write_window_paged(c_pool, c_new, tables, lengths)
+    rkr = write_window_paged(kr_pool, kr_new, tables, lengths)
+    want = paged_latent_ref(q_lat, q_rope, rc, rkr, tables, lengths,
                             scale=scale)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+    # both latent pools committed bitwise (sink excluded)
+    np.testing.assert_array_equal(np.asarray(c2)[1:], np.asarray(rc)[1:])
+    np.testing.assert_array_equal(np.asarray(kr2)[1:], np.asarray(rkr)[1:])
+
+
+def test_paged_window_write_bitwise_and_inactive_routing():
+    """The standalone aliased writeback is bitwise the reference scatter:
+    window rows land at table-resolved physical offsets; rows whose table
+    is all-zero (cleared slots) land in the sink block; inactive rows never
+    touch their real blocks."""
+    P, bs, KV, d = 7, 4, 1, 8
+    B, W, nb = 3, 3, 3
+    key = jax.random.PRNGKey(17)
+    pool = jax.random.normal(key, (P, bs, KV, d))
+    new = jax.random.normal(jax.random.fold_in(key, 1), (B, W, KV, d))
+    tables = jnp.asarray([[2, 3, 4], [5, 6, 0], [0, 0, 0]], jnp.int32)
+    cache_len = jnp.asarray([3, 0, 0], jnp.int32)   # row 0 straddles blocks
+    got = paged_window_write(pool, new, tables, cache_len, interpret=True)
+    want = write_window_paged(pool, new, tables, cache_len)
+    np.testing.assert_array_equal(np.asarray(got)[1:], np.asarray(want)[1:])
+
+    active = jnp.asarray([1, 0, 1], jnp.int32)
+    got_a = paged_window_write(pool, new, tables, cache_len, active=active,
+                               interpret=True)
+    want_a = write_window_paged(pool, new, tables, cache_len,
+                                active=jnp.asarray([True, False, True]))
+    np.testing.assert_array_equal(np.asarray(got_a)[1:],
+                                  np.asarray(want_a)[1:])
+    # the inactive row's real blocks kept their old contents
+    np.testing.assert_array_equal(np.asarray(got_a)[5:7],
+                                  np.asarray(pool)[5:7])
 
 
 def test_write_window_paged_targets_physical_slots():
-    """Window rows land at table-resolved physical offsets; rows whose table
-    is all-zero (cleared slots) land in the sink block."""
+    """Reference semantics anchor: window rows land at table-resolved
+    physical offsets; rows whose table is all-zero (cleared slots) land in
+    the sink block."""
     P, bs, KV, d = 5, 4, 1, 8
     B, W, nb = 2, 3, 3
     pool = jnp.zeros((P, bs, KV, d))

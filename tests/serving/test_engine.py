@@ -145,8 +145,11 @@ def test_adaptive_widens_into_an_accepting_stream(qwen):
     assert max(easy.metrics.window_hist) > 2     # widened into the stream
     assert all(w == 16 or (w & (w - 1)) == 0     # stayed on the pow2 grid
                for w in easy.metrics.window_hist)
-    # telemetry and controller agree on the round count
-    assert len(easy.controller.history) == easy.metrics.rounds
+    # telemetry and controller agree on the retune-boundary count: the EWMA
+    # advances once per host sync (the device loop runs at fixed W)
+    assert len(easy.controller.history) == easy.metrics.host_syncs
+    # the device-resident loop actually amortized rounds over syncs
+    assert easy.metrics.rounds > easy.metrics.host_syncs
 
 
 def test_peaked_model_beats_ancestral_call_count(qwen):
@@ -267,24 +270,76 @@ def test_paged_kernel_engine_emits_same_tokens(qwen):
         np.testing.assert_array_equal(req.result, by_uid[req.uid].result)
 
 
-def test_round_buffers_are_donated(qwen):
-    """Satellite regression: the jitted round donates the physical pool and
-    per-slot state — after a round the previous pool buffer must be GONE
-    (no second full-pool copy retained); ``donate=False`` restores the
-    copying behaviour."""
+@pytest.mark.parametrize("paged_attention", [True, False])
+def test_round_buffers_are_donated(qwen, paged_attention):
+    """Satellite regression: the jitted round loop donates the physical pool
+    and per-slot state — after a step the previous pool buffer must be GONE
+    (no second full-pool copy retained) on BOTH pool write paths: the fused
+    paged round and the legacy dense round, whose window scatter now routes
+    through the same aliased ``paged_window_write``. ``donate=False``
+    restores the copying behaviour."""
     cfg, params = qwen
     kw = dict(batch=2, window_max=4, max_len=48, eps_key=EPS_KEY,
-              block_size=4, adaptive=False)
+              block_size=4, adaptive=False,
+              paged_attention=paged_attention)
     for donate in (True, False):
         eng = ServingEngine(cfg, params, donate=donate, **kw)
         eng.submit(Request(uid=0, prompt=np.arange(1, 5), new_tokens=16))
-        eng.step()                       # admission + first round
+        eng.step()                       # admission + first round loop
         pool_leaf = jax.tree.leaves(eng.paged)[0]
         tok_leaf = eng.tokens
-        eng.step()                       # next round consumes (donates) them
+        eng.step()                       # next loop consumes (donates) them
         assert pool_leaf.is_deleted() == donate
         assert tok_leaf.is_deleted() == donate
         assert not jax.tree.leaves(eng.paged)[0].is_deleted()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma3-1b",
+                                  "deepseek-v3-671b",
+                                  "jamba-1.5-large-398b"])
+def test_device_loop_matches_host_loop_and_solo(arch):
+    """Tentpole acceptance: the device-resident round loop
+    (``rounds_per_sync=4``, >= 4 verify rounds per host sync) emits tokens
+    bit-identical to the host-driven loop (``rounds_per_sync=1``) and to
+    per-request solo ``PredictiveSampler.generate`` runs, across attn /
+    sliding-window local / MLA / recurrent-hybrid mixers — and actually
+    amortizes host syncs."""
+    cfg = get_config(arch, reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+
+    def traffic(eng):
+        rng = np.random.default_rng(13)
+        for i in range(3):
+            eng.submit(Request(uid=i,
+                               prompt=rng.integers(
+                                   0, cfg.vocab,
+                                   size=int(rng.integers(2, 7))),
+                               new_tokens=int(rng.integers(8, 12))))
+        return eng.run()
+
+    kw = dict(batch=4, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False)
+    dev = ServingEngine(cfg, params, rounds_per_sync=4, **kw)
+    host = ServingEngine(cfg, params, rounds_per_sync=1, **kw)
+    done_dev, done_host = traffic(dev), traffic(host)
+    by_uid = {r.uid: r for r in done_host}
+    for req in done_dev:
+        np.testing.assert_array_equal(
+            req.result, by_uid[req.uid].result,
+            err_msg=f"request {req.uid}: device loop diverged from "
+                    f"host-driven loop")
+    _assert_all_exact(cfg, params, done_dev, window=4, max_len=48)
+    # per-request round counts are exact regardless of loop batching
+    for req in done_dev:
+        assert req.calls_used == by_uid[req.uid].calls_used
+    # residency: all requests fit the batch, so every sync ran k=4 rounds
+    # until the last partial loop; the host loop syncs once per round
+    assert dev.metrics.host_syncs < dev.metrics.rounds
+    assert dev.metrics.rounds >= 4 * (dev.metrics.host_syncs - 1) + 1
+    assert host.metrics.host_syncs == host.metrics.rounds
+    m = dev.export_metrics()
+    assert m["rounds_per_sync"] > 1.0
+    assert m["host_syncs_per_token"] < m["rounds"] / m["tokens_generated"]
 
 
 def test_table_upload_cached_until_invalidated(qwen):

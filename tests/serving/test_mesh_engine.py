@@ -7,7 +7,11 @@ exactness contract: a ``data>=2`` engine must emit tokens bit-identical to
 the single-device engine AND to per-request solo ``PredictiveSampler``
 runs, with ZERO cross-shard collectives on the verify-round hot path
 (asserted on the compiled HLO) — block-table indirection is shard-local by
-construction.
+construction. The device-resident round loop must hold the same contract:
+each shard's ``lax.while_loop`` stops on its OWN rows (no collective in the
+stop condition), the fused round's jaxpr carries no pool-ranked scatter
+(every pool write is a pallas aliased epilogue), and a ``rounds_per_sync=4``
+mesh engine emits the same tokens as the host-driven one.
 """
 import json
 import os
@@ -70,20 +74,32 @@ MAIN_SCRIPT = textwrap.dedent("""
         if not (np.asarray(t[0, :len(p) + nt]) == ref[i]).all():
             rec["solo_equal"] = False
 
+    # device-resident loop under the mesh: rounds_per_sync=4 (default) and
+    # the host-driven rounds_per_sync=1 engine must all match the
+    # single-device reference bit-for-bit at data=2 and data=4
+    rec["loop_amortized"] = {}
     for data in (2, 4):
-        topo = ServingTopology(make_host_mesh(data, 1))
-        got = traffic(ServingEngine(cfg, params, topology=topo, **kw))
-        rec["equal"][str(data)] = all(
-            (got[uid] == ref[uid]).all() for uid in ref)
+        for rps in (4, 1):
+            topo = ServingTopology(make_host_mesh(data, 1))
+            eng_m = ServingEngine(cfg, params, topology=topo,
+                                  rounds_per_sync=rps, **kw)
+            got = traffic(eng_m)
+            rec["equal"][f"{data}x{rps}"] = all(
+                (got[uid] == ref[uid]).all() for uid in ref)
+            if rps == 4:
+                rec["loop_amortized"][str(data)] = (
+                    eng_m.metrics.rounds > eng_m.metrics.host_syncs)
 
     # pool-pressure routing: with empty equal sub-pools the first admission
-    # ties to shard 0, the second must go to the emptier shard 1
+    # ties to shard 0, the second must go to the emptier shard 1 (requests
+    # long enough that one k-round device loop cannot finish them — the
+    # routed slots must still be occupied at the sync)
     topo = ServingTopology(make_host_mesh(2, 1))
     eng = ServingEngine(cfg, params, topology=topo, **kw)
     rng = np.random.default_rng(5)
     for i in range(2):
         eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 4),
-                           new_tokens=8))
+                           new_tokens=40))
     eng.step()
     occupied = [b for b in range(4) if eng.slots[b] is not None]
     rec["routed_slots"] = occupied
@@ -91,14 +107,23 @@ MAIN_SCRIPT = textwrap.dedent("""
     rec["routing_spread"] = (occupied and occupied[0] < bl
                              and any(b >= bl for b in occupied))
 
-    # HLO of the mesh verify round: zero collectives on the hot path
+    # HLO of the mesh verify round loop: zero collectives on the hot path
+    # (each shard's while_loop stops on its own rows) and zero pool-ranked
+    # scatter eqns in the jaxpr (no standalone window-writeback before the
+    # pallas_call — the fused-epilogue acceptance gate)
+    from repro.launch.hlo_analysis import count_jaxpr_primitives
     W = eng.controller.window
-    fn = eng._round_fns[W]
+    fn = eng._round_loop_fn(W, eng.rounds_per_sync)
     args = (eng.params, eng.paged, eng._tables_device(), eng.tokens,
             eng.n, eng.cand, eng.seq_ids, eng._target_device())
     txt = fn.lower(*args).compile().as_text()
     rec["collectives"] = {k: v["count"]
                          for k, v in parse_collective_bytes(txt).items()}
+    jaxpr = fn.trace(*args).jaxpr
+    rec["pool_scatters"] = count_jaxpr_primitives(
+        jaxpr, ("scatter",), min_rank=3)["scatter"]
+    rec["pallas_calls"] = count_jaxpr_primitives(
+        jaxpr, ("pallas_call",))["pallas_call"]
     print(json.dumps(rec))
 """)
 
@@ -128,9 +153,12 @@ ARCH_SCRIPT = textwrap.dedent("""
                 new_tokens=int(rng.integers(3, 6))))
         return {r.uid: r.result for r in eng.run()}
 
-    ref = traffic(ServingEngine(cfg, params, **kw))
+    # single-device host-driven reference vs the mesh DEVICE-RESIDENT loop:
+    # equality crosses both the sharding and the drive mode
+    ref = traffic(ServingEngine(cfg, params, rounds_per_sync=1, **kw))
     topo = ServingTopology(make_host_mesh(2, 1))
-    got = traffic(ServingEngine(cfg, params, topology=topo, **kw))
+    got = traffic(ServingEngine(cfg, params, topology=topo,
+                                rounds_per_sync=4, **kw))
     equal = all((got[uid] == ref[uid]).all() for uid in ref)
     print(json.dumps({"equal": equal}))
 """)
@@ -179,14 +207,21 @@ def test_mesh_engine_tensor_parallel_params_stay_exact():
 
 
 def test_mesh_engine_bit_exact_no_collectives_routed():
-    """data=2 and data=4 engines emit the single-device (and solo-sampler)
-    token streams bit-for-bit; admissions spread over shards by pool
-    pressure; the compiled round HLO contains no collective ops."""
+    """data=2 and data=4 engines — device-resident (rounds_per_sync=4) AND
+    host-driven (=1) — emit the single-device (and solo-sampler) token
+    streams bit-for-bit; the device loop actually amortizes host syncs;
+    admissions spread over shards by pool pressure; the compiled round-loop
+    HLO contains no collective ops (per-shard local stop conditions) and
+    its jaxpr no pool-ranked scatter (fused aliased writeback only)."""
     rec = _run(MAIN_SCRIPT)
     assert rec["solo_equal"], rec
-    assert rec["equal"] == {"2": True, "4": True}, rec
+    assert rec["equal"] == {"2x4": True, "2x1": True,
+                            "4x4": True, "4x1": True}, rec
+    assert rec["loop_amortized"] == {"2": True, "4": True}, rec
     assert rec["routing_spread"], rec
     assert all(c == 0 for c in rec["collectives"].values()), rec
+    assert rec["pool_scatters"] == 0, rec
+    assert rec["pallas_calls"] >= 1, rec
 
 
 @pytest.mark.parametrize("arch", ["gemma3-1b", "deepseek-v3-671b",
@@ -194,6 +229,7 @@ def test_mesh_engine_bit_exact_no_collectives_routed():
 def test_mesh_engine_bit_exact_across_mixers(arch):
     """Sliding-window local attention, MLA latents, and a recurrent hybrid
     (un-paged per-slot states riding next to sharded pools) all hold the
-    mesh exactness contract at data=2."""
+    mesh exactness contract at data=2 — with the mesh engine running the
+    device-resident loop against a host-driven single-device reference."""
     rec = _run(ARCH_SCRIPT.replace("__ARCH__", arch))
     assert rec["equal"], rec
