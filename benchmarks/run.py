@@ -74,6 +74,23 @@ def _csv_rows_table(rows):
                             f"donated_MB={r['donated_live_bytes']/1e6:.2f};"
                             f"copied_MB={r['copied_live_bytes']/1e6:.2f};"
                             f"backend={r['backend']}"))
+            elif r.get("scenario") == "saturation":
+                out.append((f"serving/saturation/{r['mode']}",
+                            f"{r['time_s']*1e6:.0f}",
+                            f"p95={r['latency_p95_s']}s;"
+                            f"p50={r['latency_p50_s']}s;"
+                            f"misses={r['deadline_misses']}"
+                            f"(queued={r['deadline_missed_in_queue']});"
+                            f"preempts={r['preemptions']};"
+                            f"backend={r['backend']}"))
+            elif r.get("scenario") == "saturation_mesh":
+                out.append(("serving/saturation_mesh/data2", "0",
+                            f"migrations={r['migrations_on']};"
+                            f"blocks_moved={r['blocks_migrated_on']};"
+                            f"admit_same_step={r['admitted_same_step_on']}"
+                            f"(static={r['admitted_same_step_off']});"
+                            f"bit_exact={r['bit_exact']};"
+                            f"backend={r['backend']}"))
             elif r.get("scenario") == "mesh_serving":
                 out.append((f"serving/mesh/data{r['data']}",
                             f"{r['mesh_wall_us_per_round']}",
@@ -137,7 +154,8 @@ def serving_only() -> None:
     from benchmarks.serving_bench import (donation_round_bytes,
                                           fused_writeback, mesh_serving,
                                           mixed_traffic, paged_vs_dense,
-                                          round_loop)
+                                          round_loop, saturation,
+                                          saturation_mesh)
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
 
@@ -148,6 +166,8 @@ def serving_only() -> None:
     rows.extend(fused_writeback(cfg, params))
     rows.extend(donation_round_bytes(cfg, params))
     rows.extend(mesh_serving(cfg, params))
+    rows.extend(saturation(cfg, params))
+    rows.extend(saturation_mesh(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))
     print("name,us_per_call,derived")
     for row in _csv_rows_table(rows):

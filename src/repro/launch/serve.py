@@ -9,7 +9,11 @@ the engine on a device mesh (``ServingTopology``: per-data-shard slot
 ranges + block sub-pools, shard_map round step; params replicated over
 data and — when model > 1 — tensor-sharded via
 ``serving_param_shardings``); ``--no-donate`` disables round-buffer
-donation (A/B for the copy-per-round cost).
+donation (A/B for the copy-per-round cost); ``--lookahead`` /
+``--max-head-bypass`` / ``--no-preempt`` / ``--preempt-floor`` /
+``--no-rebalance`` tune the saturation-safe scheduler (DESIGN.md §12:
+lookahead admission, priority preemption with exact resume, shard
+rebalancing by sequence migration).
 
 Also exports ``make_serve_step`` — the W-token verify step the multi-pod
 dry-run lowers for the decode shapes (decode_32k / long_500k).
@@ -118,6 +122,22 @@ def main(argv=None):
     ap.add_argument("--rounds-per-sync", type=int, default=4,
                     help="device-resident verify rounds per host sync "
                          "(lax.while_loop trip bound; 1 = host-driven)")
+    ap.add_argument("--lookahead", type=int, default=8,
+                    help="admission lookahead depth: queued requests "
+                         "scanned past an unroutable head (1 = the old "
+                         "head-of-line-blocking admission)")
+    ap.add_argument("--max-head-bypass", type=int, default=16,
+                    help="aging bound: admissions allowed to jump the "
+                         "queue head before admission goes head-only")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable priority preemption (parking lower-"
+                         "priority slots for a higher-priority head)")
+    ap.add_argument("--preempt-floor", type=float, default=0.75,
+                    help="progress floor: running slots past this fraction "
+                         "of their generation target are never preempted")
+    ap.add_argument("--no-rebalance", action="store_true",
+                    help="disable shard rebalancing (sequence migration "
+                         "between block sub-pools at admission)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -132,7 +152,12 @@ def main(argv=None):
                            adaptive=not args.no_adaptive,
                            prefix_cache=not args.no_prefix_cache,
                            topology=topo, donate=not args.no_donate,
-                           rounds_per_sync=args.rounds_per_sync)
+                           rounds_per_sync=args.rounds_per_sync,
+                           lookahead=args.lookahead,
+                           max_head_bypass=args.max_head_bypass,
+                           preempt=not args.no_preempt,
+                           preempt_floor=args.preempt_floor,
+                           rebalance=not args.no_rebalance)
     if topo.mesh is not None:
         print(f"serving on {topo}")
     rng = np.random.default_rng(0)

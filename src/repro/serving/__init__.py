@@ -1,19 +1,24 @@
 """Paged KV-cache serving runtime with adaptive speculation and telemetry.
 
-See DESIGN.md §6-10 and ``repro.serving.engine.ServingEngine`` for the
+See DESIGN.md §6-12 and ``repro.serving.engine.ServingEngine`` for the
 architecture; ``repro.engine.ContinuousBatcher`` remains as a thin
 compatibility alias over this subsystem. ``ServingTopology`` maps an engine
 onto a device mesh (per-data-shard slot ranges + block sub-pools, shard_map
-round step); ``ShardedBlockPool`` routes admissions by pool pressure.
+round step); ``ShardedBlockPool`` routes admissions by pool pressure and
+carries the sequence-migration block accounting; under saturation the
+engine schedules with admission lookahead, priority preemption (host-side
+parking + bitwise-exact resume, ``ParkedSequence``), and shard rebalancing
+(§12).
 """
-from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
+from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
+                                     prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import BlockManager, ShardedBlockPool, chain_hashes
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ParkedSequence, ServingEngine
 from repro.serving.metrics import EngineMetrics, percentile
 from repro.serving.topology import ServingTopology
 
-__all__ = ["AdmissionQueue", "Request", "prefill_chunks",
+__all__ = ["AdmissionQueue", "Request", "prefill_chunks", "pow2_at_most",
            "AdaptiveWindowController", "BlockManager", "ShardedBlockPool",
-           "chain_hashes", "ServingEngine", "EngineMetrics", "percentile",
-           "ServingTopology"]
+           "chain_hashes", "ParkedSequence", "ServingEngine",
+           "EngineMetrics", "percentile", "ServingTopology"]

@@ -5,10 +5,23 @@ value first; within a class, earliest absolute deadline first (EDF;
 requests without a deadline sort last and fall back to FIFO via the arrival
 sequence number) — and admits a request only when the engine has both a
 free batch slot and enough physical blocks to cover its prompt plus its full
-generation target (admission control, not mid-flight preemption: a request
-admitted here can always run to completion). ``Request.deadline`` is a
-latency SLO in seconds from submission; the engine counts blown SLOs in
-``EngineMetrics.deadline_miss_count``.
+generation target (run-to-completion admission control; a request admitted
+can always finish — preemption parks it *exactly*, never kills it).
+``Request.deadline`` is a latency SLO in seconds from submission; the
+engine counts blown SLOs in ``EngineMetrics.deadline_miss_count`` (and, for
+requests that expire while still queued or parked,
+``deadline_missed_in_queue`` — detected at admission poll time, not only
+when the request happens to finish).
+
+Saturation-safe scheduling (DESIGN.md §12): the engine no longer stops at
+the first unroutable request. ``lookahead(k)`` exposes the first ``k``
+requests in queue order so a small fitting request behind an oversized head
+can admit (bounded lookahead); every such bypass ages the head
+(``Request.bypassed``) and once the head's aging bound is reached admission
+goes head-only until it lands — so the head cannot starve. ``requeue``
+re-inserts a preempted request *without* resetting its submit time or
+arrival order, keeping EDF/FIFO ordering and SLO accounting stable across
+park/resume cycles.
 
 Prefill itself is *row-local and chunked* (DESIGN.md §6): the admitted row's
 blocks are gathered into a batch-1 cache view and the un-cached tail of the
@@ -40,9 +53,15 @@ class Request:
     calls_used: int = 0          # verify rounds this request participated in
     prefill_calls: int = 0       # row-local prefill chunks paid at admission
     prefix_hit_blocks: int = 0   # prompt blocks served from the prefix cache
+    preemptions: int = 0         # times parked by a higher-priority request
+    migrations: int = 0          # times moved to another slot/shard mid-flight
+    bypassed: int = 0            # admissions that jumped this request while
+    #                              it sat at the queue head (aging signal)
+    queue_deadline_missed: bool = False  # SLO expired while queued/parked
     submit_time: float = 0.0
     admit_time: float = 0.0
     finish_time: float = 0.0
+    _seq: Optional[int] = None   # arrival order, pinned at first push
 
     @property
     def seq_id(self) -> int:
@@ -68,13 +87,26 @@ class Request:
         return self.deadline is not None and self.finish_time > self.deadline_time
 
 
+def pow2_at_most(x: int) -> int:
+    """Largest power of two <= x (x >= 1)."""
+    assert x >= 1, x
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
 def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
     """Greedy power-of-two cover of ``length`` positions (largest first).
 
     Bounds distinct compiled prefill widths to ``log2(max_chunk) + 1``
     while covering any prompt length exactly (no padding writes).
+    ``max_chunk`` is normalized DOWN to a power of two first — a non-pow2
+    bound (say 48) would otherwise emit non-pow2 widths (48, 24, ...) and
+    silently break the compiled-width guarantee (the halving loop only
+    preserves pow2-ness of a pow2 start).
     """
-    out, c = [], max_chunk
+    out, c = [], pow2_at_most(max(1, max_chunk))
     while length > 0:
         while c > length:
             c //= 2
@@ -84,22 +116,54 @@ def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
 
 
 class AdmissionQueue:
-    """Priority + earliest-deadline + FCFS admission queue."""
+    """Priority + earliest-deadline + FCFS admission queue with bounded
+    lookahead and exact-resume requeue."""
 
     def __init__(self):
         self._heap: list = []
         self._seq = itertools.count()
 
+    def _entry(self, req: Request):
+        if req._seq is None:               # arrival order pinned once
+            req._seq = next(self._seq)
+        return (req.priority, req.deadline_time, req._seq, req)
+
     def push(self, req: Request):
         req.submit_time = time.monotonic()
-        heapq.heappush(self._heap, (req.priority, req.deadline_time,
-                                    next(self._seq), req))
+        heapq.heappush(self._heap, self._entry(req))
+
+    def requeue(self, req: Request):
+        """Re-insert a preempted (parked) request for exact resume: submit
+        time and arrival order are preserved, so its EDF/FIFO rank and SLO
+        clock are those of the original submission."""
+        heapq.heappush(self._heap, self._entry(req))
 
     def pop(self) -> Request:
         return heapq.heappop(self._heap)[-1]
 
     def peek(self) -> Optional[Request]:
         return self._heap[0][-1] if self._heap else None
+
+    def lookahead(self, k: int) -> list[Request]:
+        """The first ``k`` requests in queue order (head first) without
+        removing them — the admission window the engine scans past an
+        unroutable head."""
+        return [e[-1] for e in heapq.nsmallest(k, self._heap)]
+
+    def remove(self, req: Request) -> bool:
+        """Remove a specific request (a lookahead admission that is not the
+        head). O(n) — admission-path work, never on the round hot path."""
+        for i, e in enumerate(self._heap):
+            if e[-1] is req:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return True
+        return False
+
+    def requests(self) -> list[Request]:
+        """All queued requests, unordered (deadline-expiry polling)."""
+        return [e[-1] for e in self._heap]
 
     def __len__(self) -> int:
         return len(self._heap)

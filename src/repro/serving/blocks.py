@@ -53,6 +53,9 @@ class BlockStats:
     prefix_hits: int = 0
     prefix_misses: int = 0
     evictions: int = 0
+    spilled: int = 0             # blocks released to park a preempted seq
+    migrated_in: int = 0         # landing blocks allocated for a migration
+    migrated_out: int = 0        # blocks released by a departing migration
 
     def export(self) -> dict:
         total = self.prefix_hits + self.prefix_misses
@@ -63,6 +66,9 @@ class BlockStats:
             "prefix_misses": self.prefix_misses,
             "prefix_hit_rate": (self.prefix_hits / total) if total else 0.0,
             "evictions": self.evictions,
+            "blocks_spilled": self.spilled,
+            "blocks_migrated_in": self.migrated_in,
+            "blocks_migrated_out": self.migrated_out,
         }
 
 
@@ -160,6 +166,14 @@ class BlockManager:
         for b in blocks:
             self.release(b)
 
+    def spill(self, blocks) -> int:
+        """Release a preempted sequence's blocks (their contents have been
+        parked host-side). Hashed prompt blocks drop into the cached-free
+        pool, so an exact resume can re-hit them without re-uploading."""
+        self.release_all(blocks)
+        self.stats.spilled += len(blocks)
+        return len(blocks)
+
 
 class ShardedBlockPool:
     """Per-data-shard ``BlockManager``s with pool-pressure routing on top
@@ -185,6 +199,25 @@ class ShardedBlockPool:
 
     def manager(self, shard: int) -> BlockManager:
         return self.shards[shard]
+
+    # -- sequence migration (block accounting half) ------------------------
+    def begin_migration(self, src_shard: int, dst_shard: int,
+                        n: int) -> list[int]:
+        """Allocate ``n`` landing blocks on ``dst_shard`` for a sequence
+        moving off ``src_shard``. Returns the fresh shard-LOCAL ids; the
+        caller device-copies the block contents and then calls
+        ``finish_migration`` to release the source blocks. Raises
+        MemoryError if the destination sub-pool cannot take them."""
+        assert src_shard != dst_shard, (src_shard, dst_shard)
+        out = self.shards[dst_shard].alloc(n)
+        self.shards[dst_shard].stats.migrated_in += n
+        return out
+
+    def finish_migration(self, src_shard: int, blocks) -> None:
+        """Release a migrated sequence's source blocks (contents now live in
+        the destination sub-pool). Shared prefix blocks just drop a ref."""
+        self.shards[src_shard].release_all(blocks)
+        self.shards[src_shard].stats.migrated_out += len(blocks)
 
     # -- aggregate capacity ------------------------------------------------
     def available(self, shard: Optional[int] = None) -> int:

@@ -46,8 +46,22 @@ slot and blocks immediately. What's new over the dense batcher:
   and prefill steps donate them (``donate_argnums``): XLA updates the pool
   in place instead of holding two full copies live per round
   (``donate=False`` restores the copying behaviour for A/B measurement).
+* **Saturation-safe scheduling** (DESIGN.md §12) — admission scans a
+  bounded ``lookahead`` window past an unroutable head (with an aging bound
+  so the head cannot starve); a queued higher-priority request may
+  **preempt** the lowest-priority running slot below a progress floor —
+  its live block contents are spilled to a host-side parking list and it
+  is requeued for *exact* resume (still-valid prefix blocks re-hit, the
+  ``n``/``cand`` snapshot restored, tokens bitwise-identical to an
+  uninterrupted run); and admission may **rebalance** a mesh by migrating
+  a live sequence's blocks between shard sub-pools (device block copy +
+  one table-row re-upload + per-slot state move — bit-exact by
+  construction, since tokens and noise streams are placement-independent)
+  when one shard's pool is exhausted while another has headroom.
 * **Telemetry** — per-request latency/accept/ARM-call counters, deadline
-  (SLO) misses, and engine gauges exported as plain dicts (``EngineMetrics``).
+  (SLO) misses — including expiries detected while still queued/parked —
+  preemption/migration/aging counters, and engine gauges exported as plain
+  dicts (``EngineMetrics``).
 
 Exactness: every path emits tokens bit-identical to a per-request
 ``PredictiveSampler.generate`` run with the same eps key and noise-stream id
@@ -57,6 +71,7 @@ mesh paths, tests/serving/test_mesh_engine.py.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from types import SimpleNamespace
 from typing import Optional
 
@@ -67,7 +82,8 @@ import numpy as np
 from repro.engine.spec_decode import GenState, make_eps_fn, verify_round
 from repro.kernels import resolve_interpret
 from repro.models.transformer import PagedView, TransformerLM
-from repro.serving.admission import AdmissionQueue, Request, prefill_chunks
+from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
+                                     prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import ShardedBlockPool
 from repro.serving.metrics import EngineMetrics
@@ -77,6 +93,25 @@ from repro.serving.topology import ServingTopology
 def _has_recurrent(cfg) -> bool:
     return any(m in ("mamba", "rwkv") or f == "rwkv_cmix"
                for m, f in cfg.layer_specs())
+
+
+@dataclass
+class ParkedSequence:
+    """Host-side parking payload of a preempted slot (DESIGN.md §12).
+
+    Everything an exact resume needs: the accepted-token row and the
+    ``n``/``cand`` snapshot (candidates gate only acceptance, never token
+    values — restoring them keeps even the *round count* identical to an
+    uninterrupted run), plus the contents of the ``nb_live`` blocks that
+    hold positions ``[0, n-1)`` (position ``n-1`` onward is rewritten by
+    the next verify window, so those blocks need no spill). ``payload`` is
+    a cache-shaped pytree: attention leaves carry the gathered pool rows in
+    table order, recurrent leaves the slot's state snapshot."""
+    n: int
+    tokens: np.ndarray           # (max_len,) accepted-token row
+    cand: np.ndarray             # (W_max,) verify-window snapshot
+    nb_live: int                 # leading owned blocks whose contents matter
+    payload: dict                # host pytree (see above)
 
 
 class ServingEngine:
@@ -90,17 +125,26 @@ class ServingEngine:
                  paged_attention: bool = True,
                  use_attention_kernel: Optional[bool] = None,
                  topology: Optional[ServingTopology] = None,
-                 donate: bool = True, rounds_per_sync: int = 4):
+                 donate: bool = True, rounds_per_sync: int = 4,
+                 lookahead: int = 8, max_head_bypass: int = 16,
+                 preempt: bool = True, preempt_floor: float = 0.75,
+                 rebalance: bool = True):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         assert rounds_per_sync >= 1, rounds_per_sync
+        assert lookahead >= 1, lookahead
+        assert max_head_bypass >= 0, max_head_bypass
+        assert 0.0 <= preempt_floor <= 1.0, preempt_floor
         self.cfg = cfg
         self.params = params
         self.B = batch
         self.W_max = window_max
         self.max_len = max_len
         self.block_size = block_size
-        self.prefill_chunk = prefill_chunk
+        # pow2 normalization keeps the "log2(max_chunk)+1 compiled prefill
+        # widths" guarantee honest for non-pow2 user values (48 -> 32)
+        assert prefill_chunk >= 1, prefill_chunk
+        self.prefill_chunk = pow2_at_most(prefill_chunk)
         self.use_forecast_heads = (use_forecast_heads
                                    and "forecast" in params
                                    and cfg.forecast_horizon > 0)
@@ -119,6 +163,15 @@ class ServingEngine:
         # device-resident rounds: up to this many verify rounds run inside
         # one dispatch (lax.while_loop) between host syncs; 1 = host-driven
         self.rounds_per_sync = rounds_per_sync
+        # saturation-safe scheduling (DESIGN.md §12): admission lookahead
+        # window, head-aging bound, priority preemption (+ progress floor:
+        # slots past this generated fraction are never evicted), and
+        # cross-shard rebalancing by sequence migration
+        self.lookahead = lookahead
+        self.max_head_bypass = max_head_bypass
+        self.preempt = preempt
+        self.preempt_floor = preempt_floor
+        self.rebalance = rebalance
         self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
             eps_key if eps_key is not None else jax.random.PRNGKey(0),
             cfg.vocab)
@@ -159,6 +212,12 @@ class ServingEngine:
         # worst-case block need reserved per slot at admission (run-to-
         # completion guarantee: lazy growth may never exhaust the pool)
         self.reserved = np.zeros(batch, np.int64)
+        # host mirror of each slot's accepted length, refreshed from the
+        # packed stats at every sync (preemption progress floor + parking)
+        self.n_host = np.ones(batch, np.int64)
+        # parked (preempted) sequences by request uid, awaiting exact resume
+        self.parked: dict[int, ParkedSequence] = {}
+        self._last_rounds_exec = 0
 
         # ---- per-slot device state (slot dim sharded over "data") -------
         self.tokens = self.topo.put_batch(jnp.zeros((batch, max_len),
@@ -176,6 +235,7 @@ class ServingEngine:
 
         self._round_fns: dict[tuple[int, int], callable] = {}
         self._prefill_fns: dict[int, callable] = {}
+        self._copy_fn = None
 
     # -- seed-API compatibility -------------------------------------------
     @property
@@ -309,14 +369,52 @@ class ServingEngine:
                     jnp.ones((1,), bool))
 
             kw = {}
-            if self.topo.mesh is not None:
-                from repro.sharding.rules import paged_cache_shardings
-                kw["out_shardings"] = paged_cache_shardings(
-                    cfg, self.paged, self.topo.mesh,
-                    data_axis=self.topo.data_axis)
+            sh = self.topo.paged_shardings(cfg, self.paged)
+            if sh is not None:
+                kw["out_shardings"] = sh
             donate = (1,) if self.donate else ()
             self._prefill_fns[C] = jax.jit(fn, donate_argnums=donate, **kw)
         return self._prefill_fns[C]
+
+    def _copy_blocks_fn(self):
+        """Jitted sequence-move step: copy ``nb`` pool block rows
+        ``src_ids -> dst_ids`` (GLOBAL ids; unused lanes padded with the
+        sink id 0, whose gathered garbage rewrites itself — deterministic
+        and never read unmasked) and move the per-slot recurrent state row
+        ``src_row -> dst_row`` (zeroing the source row, like
+        ``_clear_row``). One compiled shape per engine: the id vectors are
+        padded to the table width ``nb``. Under a mesh this is a plain
+        GSPMD jit, exactly like row-local prefill: a migration's cross-
+        shard block copy is admission-path work, never on the round hot
+        path, and the output is pinned back to the sub-pool placement so
+        zero collectives appear in the ROUND HLO (the CI gate)."""
+        if self._copy_fn is None:
+            cfg = self.cfg
+
+            def fn(paged, src_ids, dst_ids, src_row, dst_row):
+                def attn(stacked, leaf):
+                    if stacked:
+                        return leaf.at[:, dst_ids].set(leaf[:, src_ids])
+                    return leaf.at[dst_ids].set(leaf[src_ids])
+
+                def rec(stacked, leaf):
+                    if stacked:
+                        moved = leaf[:, src_row]
+                        return (leaf.at[:, dst_row].set(moved)
+                                .at[:, src_row].set(jnp.zeros_like(moved)))
+                    moved = leaf[src_row]
+                    return (leaf.at[dst_row].set(moved)
+                            .at[src_row].set(jnp.zeros_like(moved)))
+
+                return TransformerLM._map_paged(cfg, (paged,), attn, rec)
+
+            kw = {}
+            sh = self.topo.paged_shardings(cfg, self.paged)
+            if sh is not None:
+                kw["out_shardings"] = sh
+            donate = (0,) if self.donate else ()
+            self._copy_fn = jax.jit(fn, donate_argnums=donate, **kw)
+        return self._copy_fn
 
     # -- slot / block plumbing ---------------------------------------------
     def _mgr(self, b: int):
@@ -339,19 +437,27 @@ class ServingEngine:
             self.owned[b].append(blk)
             self._tables_dev = None
 
-    def _clear_row(self, b: int):
+    def _clear_row(self, b: int, release: bool = True):
         """Reset a released slot so its (inactive) lane reads no stale or
-        garbage cache positions: n=1, cache_len=0 -> only its own window."""
-        self._mgr(b).release_all(self.owned[b])
+        garbage cache positions: n=1, cache_len=0 -> only its own window.
+        ``release=False`` keeps the block accounting untouched (migration
+        moves ownership instead of freeing it). ``seq_ids`` is zeroed with
+        the rest of the row: a stale noise-stream id was harmless only
+        because inactive lanes are no-ops, and the preemption/migration
+        paths are judged against rows being *fully* clean."""
+        if release:
+            self._mgr(b).release_all(self.owned[b])
         self.owned[b] = []
         self.tables[b] = 0
         self.target[b] = 0
         self.reserved[b] = 0
+        self.n_host[b] = 1
         self._tables_dev = None
         self._target_dev = None
         self.tokens = self.tokens.at[b].set(0)
         self.n = self.n.at[b].set(1)
         self.cand = self.cand.at[b].set(0)
+        self.seq_ids = self.seq_ids.at[b].set(0)
 
     def _reset_recurrent_row(self, b: int):
         def rec(stacked, leaf):
@@ -370,6 +476,185 @@ class ServingEngine:
             self._target_dev = self.topo.put_batch(
                 self.target.astype(np.int32))
         return self._target_dev
+
+    # -- sequence migration / priority preemption (DESIGN.md §12) -----------
+    def _live_blocks(self, b: int) -> int:
+        """Leading owned blocks whose contents the next round still reads:
+        those holding positions [0, n-1). The verify window re-encodes
+        position n-1 onward every round (slot 0 carries the last accepted
+        token), so later blocks are garbage-by-design and need no spill."""
+        return -(-max(int(self.n_host[b]) - 1, 0) // self.block_size)
+
+    def _park_payload(self, b: int, nb_live: int) -> dict:
+        """Device->host pull of everything slot ``b``'s exact resume needs
+        from the cache: the ``nb_live`` pool block rows (attention leaves,
+        in table order) and the per-slot recurrent state row."""
+        gids = jnp.asarray(self.tables[b, :nb_live].astype(np.int32)
+                           + self._table_offset(b))
+
+        def attn(stacked, leaf):
+            return leaf[:, gids] if stacked else leaf[gids]
+
+        def rec(stacked, leaf):
+            return leaf[:, b] if stacked else leaf[b]
+
+        return jax.device_get(TransformerLM._map_paged(
+            self.cfg, (self.paged,), attn, rec))
+
+    def preempt_slot(self, b: int) -> Request:
+        """Evict the running slot ``b``: spill its live block contents (and
+        recurrent state) to a host-side parking entry, release its blocks
+        and slot, and requeue the request (original submit time + arrival
+        order) for exact resume. Tokens of the resumed run are bitwise
+        those of an uninterrupted one: the parked n/cand snapshot restores
+        the verify window exactly and noise streams are position-keyed."""
+        req = self.slots[b]
+        assert req is not None, f"slot {b} is not occupied"
+        nb_live = self._live_blocks(b)
+        self.parked[req.uid] = ParkedSequence(
+            n=int(self.n_host[b]),
+            tokens=np.asarray(self.tokens[b]),
+            cand=np.asarray(self.cand[b]),
+            nb_live=nb_live,
+            payload=self._park_payload(b, nb_live))
+        self._mgr(b).spill(self.owned[b])
+        self.owned[b] = []
+        self.slots[b] = None
+        self._clear_row(b, release=False)
+        self.queue.requeue(req)
+        req.preemptions += 1
+        self.metrics.preemptions += 1
+        self.metrics.blocks_parked += nb_live
+        return req
+
+    def _resume(self, req: Request, b: int, parked: ParkedSequence):
+        """Re-admit a parked request into slot ``b`` exactly where it left
+        off: re-hit still-valid prefix blocks, upload the parked contents of
+        the rest, restore the per-slot n/cand/tokens snapshot."""
+        req.admit_time = time.monotonic()
+        prompt = np.asarray(req.prompt, np.int64)
+        L_p = len(prompt)
+        mgr = self._mgr(b)
+        nb_live = parked.nb_live
+        # full prompt blocks may have survived the spill in this shard's
+        # prefix cache (spill leaves hashed blocks cached-free) — re-hit
+        # them instead of re-uploading
+        hits, keys = [], []
+        nb_full = min((L_p - 1) // self.block_size, nb_live)
+        if self.prefix_enabled and nb_full:
+            hits, keys = mgr.lookup_prefix(prompt, nb_full)
+        req.prefix_hit_blocks += len(hits)
+        fresh = mgr.alloc(nb_live - len(hits))
+        owned = list(hits) + fresh
+        self.owned[b] = list(owned)
+        self.tables[b] = 0
+        self.tables[b, :nb_live] = owned
+        self._tables_dev = None
+
+        # upload the parked payload: non-hit block rows + the recurrent row
+        fresh_pos = np.arange(len(hits), nb_live)
+        gids = jnp.asarray(np.asarray(fresh, np.int64).astype(np.int32)
+                           + self._table_offset(b))
+
+        def attn(stacked, pleaf, kleaf):
+            if len(fresh_pos) == 0:
+                return pleaf
+            if stacked:
+                return pleaf.at[:, gids].set(jnp.asarray(kleaf[:, fresh_pos]))
+            return pleaf.at[gids].set(jnp.asarray(kleaf[fresh_pos]))
+
+        def rec(stacked, pleaf, kleaf):
+            if stacked:
+                return pleaf.at[:, b].set(jnp.asarray(kleaf))
+            return pleaf.at[b].set(jnp.asarray(kleaf))
+
+        self.paged = TransformerLM._map_paged(
+            self.cfg, (self.paged, parked.payload), attn, rec)
+
+        # per-slot state: the exact park-time snapshot
+        self.tokens = self.tokens.at[b].set(
+            jnp.asarray(parked.tokens, jnp.int32))
+        self.n = self.n.at[b].set(parked.n)
+        self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
+        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.n_host[b] = parked.n
+
+        # re-publish the freshly uploaded full prompt blocks
+        if self.prefix_enabled:
+            for j in range(len(hits), nb_full):
+                mgr.register(owned[j], keys[j])
+
+        self.slots[b] = req
+        self.target[b] = L_p + req.new_tokens
+        self._target_dev = None
+        self.reserved[b] = self._worst_case_blocks(req)
+        self.metrics.resumes += 1
+
+    def migrate_slot(self, b_src: int, b_dst: int):
+        """Move a live sequence to a free slot: across shard sub-pools
+        under a mesh (device block copy into freshly allocated landing
+        blocks + one table-row re-upload + per-slot state move) or within
+        one (the blocks stay put; only the table row and state move).
+        Bit-exact by construction — tokens and noise streams are
+        placement-independent, and the block contents are copied bitwise.
+        Callers are responsible for capacity: a cross-shard move needs
+        ``len(owned)`` free blocks on the destination shard (and should
+        leave its outstanding reservations coverable — ``_try_rebalance``
+        checks ``reserved`` before moving)."""
+        req = self.slots[b_src]
+        assert req is not None, f"slot {b_src} is not occupied"
+        assert self.slots[b_dst] is None, f"slot {b_dst} is occupied"
+        s = self.topo.shard_of_slot(b_src, self.B)
+        t = self.topo.shard_of_slot(b_dst, self.B)
+        n_owned = len(self.owned[b_src])
+        src_ids = np.zeros(self.nb, np.int32)   # sink-padded: id 0 -> id 0
+        dst_ids = np.zeros(self.nb, np.int32)
+        if s == t:
+            new_owned = list(self.owned[b_src])   # blocks stay put
+        else:
+            new_owned = self.pool.begin_migration(s, t, n_owned)
+            src_ids[:n_owned] = (self.tables[b_src, :n_owned]
+                                 + self._table_offset(b_src))
+            dst_ids[:n_owned] = (np.asarray(new_owned, np.int32)
+                                 + self._table_offset(b_dst))
+            self.metrics.blocks_migrated += n_owned
+        self.paged = self._copy_blocks_fn()(
+            self.paged, jnp.asarray(src_ids), jnp.asarray(dst_ids),
+            jnp.asarray(b_src, jnp.int32), jnp.asarray(b_dst, jnp.int32))
+        if s != t:
+            self.pool.finish_migration(s, self.owned[b_src])
+            if self.prefix_enabled:
+                # re-publish the copied full prompt blocks under the
+                # destination shard's cache (content-identical; first
+                # writer wins)
+                from repro.serving.blocks import chain_hashes
+                prompt = np.asarray(req.prompt)
+                nb_full = min((len(prompt) - 1) // self.block_size, n_owned)
+                keys = chain_hashes(prompt, self.block_size, nb_full)
+                for j in range(nb_full):
+                    self.pool.manager(t).register(new_owned[j], keys[j])
+
+        # per-slot device rows ride along (the recurrent state row moved
+        # inside the copy step)
+        for name in ("tokens", "cand", "seq_ids"):
+            arr = getattr(self, name)
+            setattr(self, name, arr.at[b_dst].set(arr[b_src]))
+        self.n = self.n.at[b_dst].set(self.n[b_src])
+
+        # host-side bookkeeping moves, then the source row is cleared
+        # WITHOUT releasing (ownership moved, it was not freed)
+        self.tables[b_dst] = 0
+        self.tables[b_dst, :n_owned] = new_owned
+        self.owned[b_dst] = list(new_owned)
+        self.slots[b_dst] = req
+        self.target[b_dst] = self.target[b_src]
+        self.reserved[b_dst] = self.reserved[b_src]
+        self.n_host[b_dst] = self.n_host[b_src]
+        self.slots[b_src] = None
+        self.owned[b_src] = []
+        self._clear_row(b_src, release=False)
+        req.migrations += 1
+        self.metrics.migrations += 1
 
     # -- admission -----------------------------------------------------------
     def _worst_case_blocks(self, req: Request) -> int:
@@ -390,6 +675,10 @@ class ServingEngine:
                 return b
         return None
 
+    def _headroom(self, shard: int) -> int:
+        return (self.pool.available(shard)
+                - self._outstanding_reservations(shard))
+
     def _route(self, req: Request) -> Optional[int]:
         """Pool-pressure admission routing: the free slot on the shard with
         the most block headroom that still covers the request's worst case
@@ -397,12 +686,142 @@ class ServingEngine:
         headroom = {}
         for s in range(self.topo.data_size):
             if self._free_slot_in(s) is not None:
-                headroom[s] = (self.pool.available(s)
-                               - self._outstanding_reservations(s))
+                headroom[s] = self._headroom(s)
         shard = self.pool.route(self._worst_case_blocks(req), headroom)
         return None if shard is None else self._free_slot_in(shard)
 
+    def _try_rebalance(self, req: Request) -> Optional[int]:
+        """Shard rebalancing: when no single shard has a free slot AND
+        enough headroom for ``req``, look for a resident whose migration to
+        another shard both fits there (its full remaining reservation) and
+        frees enough capacity — slot and blocks — on its home shard to
+        admit ``req``. Cheapest sufficient move (fewest copied blocks)
+        wins. Returns the admission slot, or None."""
+        if not self.rebalance or self.topo.data_size == 1:
+            return None
+        need = self._worst_case_blocks(req)
+        best = None
+        for v in range(self.B):
+            if self.slots[v] is None:
+                continue
+            s_v = self.topo.shard_of_slot(v, self.B)
+            # once v leaves, its slot frees and its blocks + outstanding
+            # reservation return to s_v's headroom
+            if self._headroom(s_v) + int(self.reserved[v]) < need:
+                continue
+            for t in range(self.topo.data_size):
+                if t == s_v:
+                    continue
+                b_dst = self._free_slot_in(t)
+                if b_dst is None or self._headroom(t) < int(self.reserved[v]):
+                    continue
+                cand = (len(self.owned[v]), v, b_dst)
+                if best is None or cand < best:
+                    best = cand
+        if best is None:
+            return None
+        _, v, b_dst = best
+        self.migrate_slot(v, b_dst)
+        return self._route(req)
+
+    def _evictable(self, head: Request) -> list[int]:
+        """Running slots the queue head may preempt: strictly lower
+        priority AND below the progress floor (slots past
+        ``preempt_floor`` of their generation target are protected — they
+        free their slot soon anyway). Lowest priority first, then cheapest
+        park."""
+        out = []
+        for b in range(self.B):
+            r = self.slots[b]
+            if r is None or r.priority <= head.priority:
+                continue
+            prog = (int(self.n_host[b]) - len(r.prompt)) / max(
+                1, r.new_tokens)
+            if prog >= self.preempt_floor:
+                continue
+            out.append(b)
+        out.sort(key=lambda b: (-self.slots[b].priority,
+                                self._live_blocks(b)))
+        return out
+
+    def _try_preempt(self, head: Request) -> Optional[int]:
+        """Priority preemption: evict, on a single shard, the smallest
+        prefix of evictable (lowest-priority, below-floor) slots whose
+        freed reservations plus current headroom cover the head's worst
+        case; park each victim for exact resume; route the head."""
+        if not self.preempt:
+            return None
+        need = self._worst_case_blocks(head)
+        by_shard: dict[int, list[int]] = {}
+        for b in self._evictable(head):
+            by_shard.setdefault(
+                self.topo.shard_of_slot(b, self.B), []).append(b)
+        best = None
+        for s, vs in by_shard.items():
+            gain = self._headroom(s)
+            took = []
+            for b in vs:
+                gain += int(self.reserved[b])
+                took.append(b)
+                if gain >= need:
+                    break
+            if gain >= need and (best is None or len(took) < len(best)):
+                best = took
+        if best is None:
+            return None
+        for b in best:
+            self.preempt_slot(b)
+        return self._route(head)
+
+    def _poll_queue_deadlines(self):
+        """Count SLO expiries of requests still queued or parked — without
+        this, a request that blows its deadline before ever running (or
+        while parked by preemption) is invisible until it happens to
+        finish (the ``deadline_miss_count`` undercount bug)."""
+        now = time.monotonic()
+        for req in self.queue.requests():
+            if (req.deadline is not None and not req.queue_deadline_missed
+                    and now > req.deadline_time):
+                req.queue_deadline_missed = True
+                self.metrics.deadline_missed_in_queue += 1
+
+    def _admit_pending(self):
+        """Lookahead admission (DESIGN.md §12): scan up to ``lookahead``
+        queued requests in queue order and admit the first routable one —
+        a small fitting request behind an oversized head no longer
+        head-of-line blocks. The head may additionally claim capacity by
+        shard rebalancing (any candidate may) or priority preemption (head
+        only — preempting for a lower-ranked request would invert the
+        queue order). Every admission that jumps the head ages it
+        (``Request.bypassed``); at ``max_head_bypass`` the scan narrows to
+        the head alone, so the head admits next and cannot starve."""
+        while self.queue:
+            cands = self.queue.lookahead(self.lookahead)
+            head = cands[0]
+            if head.bypassed >= self.max_head_bypass:
+                cands = [head]            # aging bound reached: head-only
+            admitted = None
+            for req in cands:
+                b = self._route(req)
+                if b is None:
+                    b = self._try_rebalance(req)
+                if b is None and req is head:
+                    b = self._try_preempt(head)
+                if b is not None:
+                    self.queue.remove(req)
+                    self._admit(req, b)
+                    admitted = req
+                    break
+            if admitted is None:
+                break
+            if admitted is not head:
+                head.bypassed += 1
+                self.metrics.head_bypass_admissions += 1
+
     def _admit(self, req: Request, b: int):
+        parked = self.parked.pop(req.uid, None)
+        if parked is not None:            # preempted: exact resume path
+            return self._resume(req, b, parked)
         req.admit_time = time.monotonic()
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
@@ -455,22 +874,21 @@ class ServingEngine:
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
+        self.n_host[b] = L_p
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits (routing by pool pressure), run one device
-        dispatch of up to ``rounds_per_sync`` verify rounds, harvest
-        finished requests. The host touches exactly ONE small packed stats
-        array per step — no ``n``/``cand`` pulls per round. While admission
-        backlog is queued the loop yields every round (``k = 1``) so freed
-        slots refill promptly; with no backlog it stays device-resident for
-        the full ``rounds_per_sync``. Returns True while there is (or may
-        be) work left."""
-        while self.queue:
-            b = self._route(self.queue.peek())
-            if b is None:
-                break
-            self._admit(self.queue.pop(), b)
+        """Admit what fits (lookahead scan, pool-pressure routing, shard
+        rebalancing, priority preemption), run one device dispatch of up to
+        ``rounds_per_sync`` verify rounds, harvest finished requests. The
+        host touches exactly ONE small packed stats array per step — no
+        ``n``/``cand`` pulls per round. While admission backlog is queued
+        the loop yields every round (``k = 1``) so freed slots refill
+        promptly; with no backlog it stays device-resident for the full
+        ``rounds_per_sync``. Returns True while there is (or may be) work
+        left."""
+        self._poll_queue_deadlines()
+        self._admit_pending()
 
         if not any(s is not None for s in self.slots):
             if self.queue:
@@ -493,6 +911,8 @@ class ServingEngine:
         stats = np.asarray(stats_dev)
         accepted, rounds_active, n_host = stats[:, 0], stats[:, 1], stats[:, 2]
         rounds_exec = int(stats[:, 3].max())   # critical path across shards
+        self.n_host[:] = n_host                # preemption progress mirror
+        self._last_rounds_exec = rounds_exec   # run()'s convergence budget
 
         slot_rows = [b for b in range(self.B) if self.slots[b] is not None]
         for b in slot_rows:
@@ -516,13 +936,22 @@ class ServingEngine:
         return True
 
     def run(self, max_rounds: int = 10_000) -> list[Request]:
-        """Drain the queue; returns completed Requests with stats."""
+        """Drain the queue; returns completed Requests with stats.
+
+        ``max_rounds`` bounds *executed verify rounds* (the packed stats'
+        per-sync ``loop_rounds``), not host steps — with ``rounds_per_sync
+        = 4`` a per-step count would silently allow 4x the documented
+        convergence budget."""
+        budget = int(max_rounds)
         while self.queue or any(s is not None for s in self.slots):
             if not self.step():
                 break
-            max_rounds -= 1
-            if max_rounds <= 0:
-                raise RuntimeError("serving engine did not converge")
+            budget -= self._last_rounds_exec
+            if budget <= 0 and (self.queue
+                                or any(s is not None for s in self.slots)):
+                raise RuntimeError(
+                    f"serving engine did not converge within {max_rounds} "
+                    "verify rounds")
         return self.done
 
     # -- telemetry -----------------------------------------------------------
@@ -530,6 +959,8 @@ class ServingEngine:
         out = self.metrics.export(self.pool.stats_export())
         out["blocks_in_use"] = self.pool.blocks_in_use()
         out["blocks_available"] = self.pool.available()
+        out["parked_requests"] = len(self.parked)
+        out["queue_depth"] = len(self.queue)
         if self.topo.data_size > 1:
             out["blocks_available_by_shard"] = [
                 self.pool.available(s) for s in range(self.topo.data_size)]

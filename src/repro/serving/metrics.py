@@ -37,6 +37,15 @@ class EngineMetrics:
     request_new_tokens: list = field(default_factory=list)
     deadline_miss_count: int = 0         # finished past their latency SLO
     deadline_requests: int = 0           # finished requests that carried one
+    deadline_missed_in_queue: int = 0    # SLO expired while queued/parked
+    #                                      (detected at admission poll time,
+    #                                      once per request)
+    preemptions: int = 0                 # slots parked for a higher priority
+    resumes: int = 0                     # parked requests re-admitted
+    migrations: int = 0                  # mid-flight slot/shard moves
+    blocks_parked: int = 0               # block payloads spilled to host
+    blocks_migrated: int = 0             # blocks device-copied across shards
+    head_bypass_admissions: int = 0      # lookahead admissions past the head
 
     def observe_loop(self, window: int, rounds: int, active_row_rounds: int,
                      batch: int, accepted: int):
@@ -112,6 +121,13 @@ class EngineMetrics:
             "queue_wait_p95_s": percentile(self.request_queue_waits, 95),
             "deadline_miss_count": self.deadline_miss_count,
             "deadline_requests": self.deadline_requests,
+            "deadline_missed_in_queue": self.deadline_missed_in_queue,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "migrations": self.migrations,
+            "blocks_parked": self.blocks_parked,
+            "blocks_migrated": self.blocks_migrated,
+            "head_bypass_admissions": self.head_bypass_admissions,
         }
         if block_stats:
             out.update(block_stats)

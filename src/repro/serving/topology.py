@@ -115,11 +115,22 @@ class ServingTopology:
         (see ``sharding.rules.paged_cache_shardings``)."""
         if self.mesh is None:
             return paged
-        from repro.sharding.rules import paged_cache_shardings
-        sh = paged_cache_shardings(cfg, paged, self.mesh,
-                                   data_axis=self.data_axis)
+        sh = self.paged_shardings(cfg, paged)
         return jax.tree.map(jax.device_put, paged, sh,
                             is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    def paged_shardings(self, cfg, paged):
+        """NamedSharding pytree for the paged cache, or None without a mesh.
+        Admission-path jits that write into sub-pools with GLOBAL pool ids —
+        row-local prefill, the sequence-migration block copy — run as plain
+        GSPMD programs and pin their output back to this placement, so the
+        pool never silently decays to replicated; cross-shard traffic there
+        is acceptable because none of it is on the round hot path."""
+        if self.mesh is None:
+            return None
+        from repro.sharding.rules import paged_cache_shardings
+        return paged_cache_shardings(cfg, paged, self.mesh,
+                                     data_axis=self.data_axis)
 
     # -- program wrapping ---------------------------------------------------
     def wrap_round(self, fn, paged_specs, n_batch_in: int, n_batch_out: int):

@@ -1,0 +1,83 @@
+"""Admission-layer units: pow2 prefill chunk cover, queue lookahead /
+remove / requeue semantics (the host-side half of saturation-safe
+scheduling — engine integration lives in test_engine.py /
+test_preemption.py)."""
+import numpy as np
+
+from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
+                                     prefill_chunks)
+
+
+def test_prefill_chunks_pow2_cover_exact():
+    for length in range(0, 130):
+        for max_chunk in (1, 2, 3, 7, 8, 48, 64, 100):
+            chunks = prefill_chunks(length, max_chunk)
+            assert sum(chunks) == length
+            for c in chunks:
+                assert c & (c - 1) == 0, (length, max_chunk, chunks)
+                assert c <= max_chunk
+
+
+def test_prefill_chunks_non_pow2_bound_normalized():
+    """Satellite regression: a non-pow2 ``max_chunk`` (48) used to emit
+    non-pow2 widths (48, 24, ...), breaking the bounded-compiled-widths
+    guarantee. The bound must normalize down to 32."""
+    chunks = prefill_chunks(100, 48)
+    assert chunks == [32, 32, 32, 4]
+    # distinct widths across ANY length stay within log2(32)+1 = 6 shapes
+    widths = {c for L in range(200) for c in prefill_chunks(L, 48)}
+    assert widths <= {1, 2, 4, 8, 16, 32}
+
+
+def test_pow2_at_most():
+    assert [pow2_at_most(x) for x in (1, 2, 3, 48, 64, 100)] == \
+        [1, 2, 2, 32, 64, 64]
+
+
+def _req(uid, priority=0, deadline=None):
+    return Request(uid=uid, prompt=np.asarray([1, 2]), new_tokens=4,
+                   priority=priority, deadline=deadline)
+
+
+def test_lookahead_returns_queue_order_without_removal():
+    q = AdmissionQueue()
+    reqs = [_req(0, priority=1), _req(1, priority=0), _req(2, priority=1)]
+    for r in reqs:
+        q.push(r)
+    look = q.lookahead(2)
+    assert [r.uid for r in look] == [1, 0]      # priority, then FIFO
+    assert len(q) == 3                          # nothing removed
+    assert [r.uid for r in q.lookahead(10)] == [1, 0, 2]
+
+
+def test_remove_specific_request_keeps_heap_order():
+    q = AdmissionQueue()
+    reqs = [_req(i) for i in range(5)]
+    for r in reqs:
+        q.push(r)
+    assert q.remove(reqs[2])
+    assert not q.remove(reqs[2])                # already gone
+    assert [q.pop().uid for _ in range(len(q))] == [0, 1, 3, 4]
+
+
+def test_requeue_preserves_submit_time_and_arrival_order():
+    """Preemption requeues must keep the original SLO clock and FIFO rank:
+    a parked request resumes ahead of later arrivals in its class."""
+    q = AdmissionQueue()
+    first, second = _req(0), _req(1)
+    q.push(first)
+    q.push(second)
+    t0 = first.submit_time
+    assert q.pop() is first
+    q.push(_req(2))
+    q.requeue(first)                 # parked -> requeued
+    assert first.submit_time == t0   # SLO clock untouched
+    assert [q.pop().uid for _ in range(len(q))] == [0, 1, 2]
+
+
+def test_queue_requests_unordered_view():
+    q = AdmissionQueue()
+    for i in range(3):
+        q.push(_req(i))
+    assert {r.uid for r in q.requests()} == {0, 1, 2}
+    assert len(q.requests()) == 3

@@ -1,9 +1,11 @@
 """BlockManager units: free-list accounting, refcounts, prefix-cache chain
-lookup, LRU eviction of cached-free blocks, reserved sink block."""
+lookup, LRU eviction of cached-free blocks, reserved sink block, and the
+spill/migration accounting the preemption + rebalancing layer sits on."""
 import numpy as np
 import pytest
 
-from repro.serving.blocks import BlockManager, chain_hashes
+from repro.serving.blocks import (BlockManager, ShardedBlockPool,
+                                  chain_hashes)
 
 
 def test_alloc_never_hands_out_block_zero():
@@ -73,3 +75,44 @@ def test_cached_free_blocks_survive_until_evicted():
     assert m.stats.evictions >= 1
     hits3, _ = m.lookup_prefix([7, 7, 7, 7], 2)
     assert hits3 == []                  # evicted chain no longer hittable
+
+
+def test_spill_leaves_hashed_blocks_hittable():
+    """Preemption spill: released blocks are counted, and hashed prompt
+    blocks stay in the cached-free pool so an exact resume re-hits them."""
+    m = BlockManager(num_blocks=8, block_size=4)
+    prompt = np.arange(8)
+    keys = chain_hashes(prompt, 4)
+    blks = m.alloc(3)                       # 2 prompt blocks + 1 private
+    for b, k in zip(blks[:2], keys):
+        m.register(b, k)
+    assert m.spill(blks) == 3
+    assert m.stats.spilled == 3
+    assert m.blocks_in_use() == 0
+    hits, _ = m.lookup_prefix(prompt, 2)
+    assert hits == blks[:2]                 # resumed sequence re-hits them
+
+
+def test_pool_migration_accounting():
+    """begin/finish_migration move a sequence's block accounting between
+    sub-pools: fresh landing ids on the destination, source refs released,
+    per-shard stats recording the move."""
+    pool = ShardedBlockPool(num_shards=2, blocks_per_shard=6, block_size=4)
+    src = pool.manager(0).alloc(3)
+    assert pool.available(0) == 2 and pool.available(1) == 5
+
+    landing = pool.begin_migration(0, 1, 3)
+    assert len(landing) == 3 and 0 not in landing
+    assert pool.available(1) == 2
+    pool.finish_migration(0, src)
+    assert pool.available(0) == 5
+    assert pool.manager(1).stats.migrated_in == 3
+    assert pool.manager(0).stats.migrated_out == 3
+    stats = pool.stats_export()
+    assert stats["blocks_migrated_in"] == 3
+    assert stats["blocks_migrated_out"] == 3
+
+    with pytest.raises(AssertionError):
+        pool.begin_migration(1, 1, 1)       # same-shard move is not a copy
+    with pytest.raises(MemoryError):
+        pool.begin_migration(0, 1, 3)       # destination sub-pool is full

@@ -2,6 +2,8 @@
 serving path (paged cache, ragged mid-flight admission, prefix-cache hits,
 adaptive W) must emit tokens identical to a per-request
 ``PredictiveSampler.generate`` run with the same eps key and noise stream."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -383,6 +385,157 @@ def test_deadline_edf_order_and_miss_metrics(qwen):
     assert m["deadline_miss_count"] == 1              # only the 100us SLO
     assert m["queue_wait_p95_s"] >= m["queue_wait_p50_s"] >= 0.0
     _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+
+def test_lookahead_admission_no_head_of_line_blocking(qwen):
+    """Satellite regression (engine.py admission loop): a small fitting
+    request queued behind an oversized, unroutable head must admit into the
+    free slot instead of waiting for the head — and the head must not
+    starve (it lands once capacity frees) with every result bit-exact."""
+    cfg, params = qwen
+    # pool of 15 usable blocks: big requests need 12, smalls 3 — while one
+    # big runs, the next big is unroutable but a small still fits
+    kw = dict(batch=2, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, num_blocks=16, adaptive=False,
+              prefix_cache=False, preempt=False)
+    rng = np.random.default_rng(21)
+    big1 = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                   new_tokens=40)
+    big2 = Request(uid=1, prompt=rng.integers(0, cfg.vocab, 4),
+                   new_tokens=40)
+    small = Request(uid=2, prompt=rng.integers(0, cfg.vocab, 3),
+                    new_tokens=5)
+    eng = ServingEngine(cfg, params, **kw)
+    for r in (big1, big2, small):
+        eng.submit(r)
+    eng.step()
+    # lookahead admitted the small past the unroutable big2 head
+    assert {r.uid for b in range(2)
+            if (r := eng.slots[b]) is not None} == {0, 2}
+    assert big2.bypassed == 1
+    assert eng.metrics.head_bypass_admissions == 1
+    done = eng.run()
+    assert {r.uid for r in done} == {0, 1, 2}
+    assert done[0].uid == 2 or done[1].uid == 2   # small didn't wait for big2
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+    # the old break-on-head behaviour is restorable (lookahead=1): the
+    # small now head-of-line blocks behind big2
+    eng1 = ServingEngine(cfg, params, lookahead=1, **kw)
+    for uid, r in ((0, big1), (1, big2), (2, small)):
+        eng1.submit(Request(uid=uid, prompt=np.asarray(r.prompt),
+                            new_tokens=r.new_tokens))
+    eng1.step()
+    assert [b for b in range(2) if eng1.slots[b] is not None] == [0]
+    assert eng1.metrics.head_bypass_admissions == 0
+
+
+def test_aging_bound_narrows_admission_to_the_head(qwen):
+    """After ``max_head_bypass`` lookahead admissions jump an unroutable
+    head, admission goes head-only: later smalls wait even though they
+    would fit, so the head admits next and cannot starve."""
+    cfg, params = qwen
+    kw = dict(batch=2, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, num_blocks=16, adaptive=False,
+              prefix_cache=False, preempt=False, max_head_bypass=2)
+    rng = np.random.default_rng(23)
+    eng = ServingEngine(cfg, params, **kw)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                       new_tokens=40))              # occupies the pool
+    eng.submit(Request(uid=1, prompt=rng.integers(0, cfg.vocab, 4),
+                       new_tokens=40))              # unroutable head
+    for i in range(4):                              # fitting smalls behind
+        eng.submit(Request(uid=10 + i, prompt=rng.integers(0, cfg.vocab, 3),
+                           new_tokens=4))
+    done = eng.run()
+    head = next(r for r in done if r.uid == 1)
+    assert head.bypassed == 2                       # aged exactly to the bound
+    assert eng.metrics.head_bypass_admissions == 2
+    # once aged, the head ADMITTED before the remaining smalls (they fit
+    # but had to wait for it)
+    by_uid = {r.uid: r for r in done}
+    assert head.admit_time < by_uid[12].admit_time
+    assert head.admit_time < by_uid[13].admit_time
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+
+def test_run_max_rounds_counts_verify_rounds_not_steps(qwen):
+    """Satellite regression: the convergence budget must count *executed
+    verify rounds* from the packed stats — with ``rounds_per_sync=4`` the
+    old per-step decrement silently allowed 4x the documented bound."""
+    cfg, params = qwen
+    kw = dict(batch=1, window_max=1, max_len=32, eps_key=EPS_KEY,
+              block_size=4, adaptive=False, rounds_per_sync=4)
+    # W=1: every round accepts exactly one token -> 12 rounds for 12 tokens
+    eng = ServingEngine(cfg, params, **kw)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 4), new_tokens=12))
+    with pytest.raises(RuntimeError):
+        eng.run(max_rounds=8)        # 12 > 8: must trip (3 steps passed it
+        #                              under the old per-step accounting)
+    eng2 = ServingEngine(cfg, params, **kw)
+    eng2.submit(Request(uid=0, prompt=np.arange(1, 4), new_tokens=12))
+    done = eng2.run(max_rounds=12)   # exactly the required budget
+    assert eng2.metrics.rounds == 12
+    _assert_all_exact(cfg, params, done, window=1, max_len=32)
+
+
+def test_deadline_missed_in_queue_counted_before_finish(qwen):
+    """Satellite regression: a request that blows its SLO while still
+    queued must show up in ``deadline_missed_in_queue`` at admission poll
+    time — not only in ``deadline_miss_count`` when it happens to finish."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(29)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 3),
+                       new_tokens=32))
+    eng.step()                                       # uid 0 occupies the slot
+    eng.submit(Request(uid=1, prompt=rng.integers(0, cfg.vocab, 3),
+                       new_tokens=4, deadline=1e-6))
+    time.sleep(0.01)
+    eng.step()
+    m = eng.export_metrics()
+    assert m["deadline_missed_in_queue"] == 1        # visible while queued
+    assert m["deadline_miss_count"] == 0             # not finished yet
+    eng.step()
+    assert eng.metrics.deadline_missed_in_queue == 1  # counted once
+    done = eng.run()
+    m = eng.export_metrics()
+    assert m["deadline_missed_in_queue"] == 1
+    assert m["deadline_miss_count"] == 1             # finish-side count too
+    _assert_all_exact(cfg, params, done, window=4, max_len=64)
+
+
+def test_clear_row_zeroes_seq_ids(qwen):
+    """Satellite regression: a released slot's noise-stream id must be
+    zeroed with the rest of the row (stale ids were harmless only while
+    inactive lanes stayed no-ops — preemption/migration judge rows on
+    being fully clean)."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=4, max_len=48,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    eng.submit(Request(uid=77, prompt=np.arange(1, 5), new_tokens=24))
+    eng.step()          # 4 rounds can accept at most 16 < 24: still running
+    assert int(eng.seq_ids[0]) == 77
+    eng.run()
+    assert np.asarray(eng.seq_ids).tolist() == [0, 0]
+    assert np.asarray(eng.n).tolist() == [1, 1]
+
+
+def test_engine_normalizes_prefill_chunk_to_pow2(qwen):
+    """Satellite: a non-pow2 ``prefill_chunk`` (48) must normalize down to
+    32 so compiled prefill widths stay on the pow2 grid."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=96,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False,
+                        prefill_chunk=48)
+    assert eng.prefill_chunk == 32
+    rng = np.random.default_rng(31)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 50),
+                       new_tokens=4))
+    done = eng.run()
+    assert set(eng._prefill_fns) <= {1, 2, 4, 8, 16, 32}
+    _assert_all_exact(cfg, params, done, window=4, max_len=96)
 
 
 def test_continuous_batcher_alias_is_serving_engine(qwen):
