@@ -91,6 +91,26 @@ def _csv_rows_table(rows):
                             f"(static={r['admitted_same_step_off']});"
                             f"bit_exact={r['bit_exact']};"
                             f"backend={r['backend']}"))
+            elif r.get("scenario") == "host_tier":
+                if r["mode"] == "tiered":
+                    out.append((f"serving/host_tier/{r['mode']}",
+                                f"{r['time_s']*1e6:.0f}",
+                                f"prefix_hit_rate={r['prefix_hit_rate']};"
+                                f"host_hit_rate={r['host_hit_rate']};"
+                                f"h2d_overlap={r['h2d_overlap_frac']};"
+                                f"staged={r['host_staged_blocks']};"
+                                f"prefills={r['prefill_calls']};"
+                                f"p95={r['latency_p95_s']}s;"
+                                f"pool_scatters={r['pool_scatter_eqns']};"
+                                f"backend={r['backend']}"))
+                else:
+                    out.append((f"serving/host_tier/{r['mode']}",
+                                f"{r['time_s']*1e6:.0f}",
+                                f"prefix_hit_rate={r['prefix_hit_rate']};"
+                                f"dropped={r['blocks_dropped']};"
+                                f"prefills={r['prefill_calls']};"
+                                f"p95={r['latency_p95_s']}s;"
+                                f"backend={r['backend']}"))
             elif r.get("scenario") == "mesh_serving":
                 out.append((f"serving/mesh/data{r['data']}",
                             f"{r['mesh_wall_us_per_round']}",
@@ -147,15 +167,17 @@ def serving_only() -> None:
     """Training-free serving baseline for CI: the paged-vs-dense capacity
     sweep, the donation live-bytes measurement, the mesh-serving equality
     row (when the host exposes >= 2 devices — the CI mesh job forces 8),
-    plus one mixed-traffic run (prefix hit rate, latency percentiles) on
-    untrained weights — no acceptance bar asserted for the latter."""
+    the host-tier A/B (spill + H2D restage vs drop, with its hit-rate /
+    prefill acceptance bar), plus one mixed-traffic run (prefix hit rate,
+    latency percentiles) on untrained weights — no acceptance bar
+    asserted for the latter."""
     import jax
 
     from benchmarks.serving_bench import (donation_round_bytes,
-                                          fused_writeback, mesh_serving,
-                                          mixed_traffic, paged_vs_dense,
-                                          round_loop, saturation,
-                                          saturation_mesh)
+                                          fused_writeback, host_tier,
+                                          mesh_serving, mixed_traffic,
+                                          paged_vs_dense, round_loop,
+                                          saturation, saturation_mesh)
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
 
@@ -168,6 +190,7 @@ def serving_only() -> None:
     rows.extend(mesh_serving(cfg, params))
     rows.extend(saturation(cfg, params))
     rows.extend(saturation_mesh(cfg, params))
+    rows.extend(host_tier(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))
     print("name,us_per_call,derived")
     for row in _csv_rows_table(rows):

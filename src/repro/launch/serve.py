@@ -138,6 +138,16 @@ def main(argv=None):
     ap.add_argument("--no-rebalance", action="store_true",
                     help="disable shard rebalancing (sequence migration "
                          "between block sub-pools at admission)")
+    ap.add_argument("--host-cache-mb", type=float, default=None,
+                    metavar="MB",
+                    help="host cache tier byte budget in MiB (DESIGN.md "
+                         "§13: spilled prefix blocks, parked sequences, "
+                         "recurrent-state snapshots share one bounded LRU "
+                         "arena); default: REPRO_HOST_CACHE_MB or 256")
+    ap.add_argument("--no-host-cache", action="store_true",
+                    help="disable the host cache tier (evicted prefix "
+                         "blocks drop, parked payloads stay raw host "
+                         "copies, recurrent archs never prefix-hit)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -157,7 +167,9 @@ def main(argv=None):
                            max_head_bypass=args.max_head_bypass,
                            preempt=not args.no_preempt,
                            preempt_floor=args.preempt_floor,
-                           rebalance=not args.no_rebalance)
+                           rebalance=not args.no_rebalance,
+                           host_cache_mb=(0 if args.no_host_cache
+                                          else args.host_cache_mb))
     if topo.mesh is not None:
         print(f"serving on {topo}")
     rng = np.random.default_rng(0)

@@ -15,10 +15,12 @@ from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import BlockManager, ShardedBlockPool, chain_hashes
 from repro.serving.engine import ParkedSequence, ServingEngine
+from repro.serving.hostcache import HostArena, HostTier, StagingRing
 from repro.serving.metrics import EngineMetrics, percentile
 from repro.serving.topology import ServingTopology
 
 __all__ = ["AdmissionQueue", "Request", "prefill_chunks", "pow2_at_most",
            "AdaptiveWindowController", "BlockManager", "ShardedBlockPool",
            "chain_hashes", "ParkedSequence", "ServingEngine",
-           "EngineMetrics", "percentile", "ServingTopology"]
+           "EngineMetrics", "percentile", "ServingTopology",
+           "HostArena", "HostTier", "StagingRing"]

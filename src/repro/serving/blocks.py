@@ -53,7 +53,10 @@ class BlockStats:
     prefix_hits: int = 0
     prefix_misses: int = 0
     evictions: int = 0
-    spilled: int = 0             # blocks released to park a preempted seq
+    spilled: int = 0             # block contents preserved host-side (parked
+    #                              payloads, evictions saved by the host tier)
+    dropped: int = 0             # hashed contents evicted outright — no host
+    #                              tier, or its arena refused the spill
     migrated_in: int = 0         # landing blocks allocated for a migration
     migrated_out: int = 0        # blocks released by a departing migration
 
@@ -67,6 +70,7 @@ class BlockStats:
             "prefix_hit_rate": (self.prefix_hits / total) if total else 0.0,
             "evictions": self.evictions,
             "blocks_spilled": self.spilled,
+            "blocks_dropped": self.dropped,
             "blocks_migrated_in": self.migrated_in,
             "blocks_migrated_out": self.migrated_out,
         }
@@ -86,6 +90,12 @@ class BlockManager:
         self.block_of: dict[int, int] = {}         # prefix key -> block id
         self.cached_free: OrderedDict[int, None] = OrderedDict()  # LRU, oldest first
         self.stats = BlockStats()
+        # host-tier escape hatch (DESIGN.md §13): called when a registered
+        # cached-free block is about to be evicted for reallocation, with
+        # ``(block_id, prefix_key)`` — still registered, contents readable.
+        # Returns True iff the contents were preserved host-side (counted
+        # ``spilled``); False/None drops them outright (``dropped``).
+        self.spill_hook = None
 
     # -- capacity ----------------------------------------------------------
     def available(self) -> int:
@@ -106,6 +116,13 @@ class BlockManager:
                 b = self.free.pop()
             else:
                 b, _ = self.cached_free.popitem(last=False)  # evict oldest
+                key = self.hash_of.get(b)
+                saved = bool(key is not None and self.spill_hook is not None
+                             and self.spill_hook(b, key))
+                if saved:
+                    self.stats.spilled += 1
+                else:
+                    self.stats.dropped += 1
                 self._unregister(b)
                 self.stats.evictions += 1
             self.refcount[b] = 1
@@ -134,6 +151,22 @@ class BlockManager:
         self.stats.prefix_hits += len(hits)
         self.stats.prefix_misses += len(keys) - len(hits)
         return hits, keys
+
+    def lookup_prefix_tiered(self, tokens, max_blocks: int, tier=None,
+                             shard: int = 0):
+        """``lookup_prefix`` with host-tier fall-through (DESIGN.md §13):
+        device misses past the hit run are probed against the tier's spilled
+        KV blocks. Returns ``(hits, keys, host_keys)`` where ``host_keys``
+        is the contiguous run of chained keys, starting right after the
+        device hits, whose contents are resident host-side — the engine
+        stages those back instead of recomputing them. Chained keys make any
+        resident *prefix* run valid; a resident block behind a gap is not."""
+        hits, keys = self.lookup_prefix(tokens, max_blocks)
+        host_keys: list[int] = []
+        if tier is not None and len(hits) < len(keys):
+            run = tier.kv_run(shard, keys[len(hits):])
+            host_keys = keys[len(hits):len(hits) + run]
+        return hits, keys, host_keys
 
     def register(self, b: int, key: int):
         """Publish a (still-referenced) block under a prefix key so later
@@ -218,6 +251,13 @@ class ShardedBlockPool:
         the destination sub-pool). Shared prefix blocks just drop a ref."""
         self.shards[src_shard].release_all(blocks)
         self.shards[src_shard].stats.migrated_out += len(blocks)
+
+    # -- host tier -----------------------------------------------------------
+    def set_spill_hook(self, make_hook) -> None:
+        """Install a per-shard eviction spill hook: ``make_hook(shard)``
+        returns the hook (or None) for that shard's sub-pool."""
+        for s, m in enumerate(self.shards):
+            m.spill_hook = make_hook(s)
 
     # -- aggregate capacity ------------------------------------------------
     def available(self, shard: Optional[int] = None) -> int:

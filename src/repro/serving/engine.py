@@ -24,9 +24,18 @@ slot and blocks immediately. What's new over the dense batcher:
   single-device engine (placement-independent noise streams).
 * **Prefix cache** — full prompt blocks are content-hashed (chained keys);
   admissions sharing a prompt prefix point their tables at the cached blocks
-  and skip recomputing them (attention-only models; recurrent stacks carry
-  un-paged per-slot state, so they always prefill — see ``_has_recurrent``).
-  Under a mesh the cache is per-shard (blocks never cross shards).
+  and skip recomputing them. Under a mesh the cache is per-shard (blocks
+  never cross shards).
+* **Host cache tier** (DESIGN.md §13) — a bounded host-memory arena behind
+  the device prefix cache: evicted prefix blocks spill D2H and re-admit via
+  async double-buffered H2D staging overlapped with prefill; parked
+  sequences dedup their shared prompt blocks through the same arena; and
+  recurrent-state snapshots checkpointed at block boundaries give
+  ssm/rwkv/hybrid stacks prefix hits for the first time (their per-slot
+  state is un-paged, so without the tier they always prefill — see
+  ``_has_recurrent`` and the ``kv_prefix``/``rec_prefix`` split).
+  Everything tier-related is admission-path host work: the verify-round
+  jaxpr/HLO is untouched.
 * **Row-local chunked prefill** — an admitted row prefills through batch-1
   windows over its own blocks; nothing scales with the batch width.
 * **Device-resident verify rounds** — a verify round is a SINGLE device
@@ -70,6 +79,7 @@ mesh paths, tests/serving/test_mesh_engine.py.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from types import SimpleNamespace
@@ -85,7 +95,7 @@ from repro.models.transformer import PagedView, TransformerLM
 from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
                                      prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
-from repro.serving.blocks import ShardedBlockPool
+from repro.serving.blocks import ShardedBlockPool, chain_hashes
 from repro.serving.metrics import EngineMetrics
 from repro.serving.topology import ServingTopology
 
@@ -97,21 +107,36 @@ def _has_recurrent(cfg) -> bool:
 
 @dataclass
 class ParkedSequence:
-    """Host-side parking payload of a preempted slot (DESIGN.md §12).
+    """Host-side parking payload of a preempted slot (DESIGN.md §12, §13).
 
     Everything an exact resume needs: the accepted-token row and the
     ``n``/``cand`` snapshot (candidates gate only acceptance, never token
     values — restoring them keeps even the *round count* identical to an
     uninterrupted run), plus the contents of the ``nb_live`` blocks that
     hold positions ``[0, n-1)`` (position ``n-1`` onward is rewritten by
-    the next verify window, so those blocks need no spill). ``payload`` is
-    a cache-shaped pytree: attention leaves carry the gathered pool rows in
-    table order, recurrent leaves the slot's state snapshot."""
+    the next verify window, so those blocks need no spill).
+
+    With a host tier the payload is split (§13): the victim's full prompt
+    blocks live ONCE in the tier's shared ``kv`` namespace, refcount-pinned
+    under ``kv_keys`` — N victims of a shared prefix pin the same entries
+    instead of storing N copies — and only the *private* remainder (rows of
+    the tail blocks ``[len(kv_keys), nb_live)`` preceded by the recurrent
+    state row) is parked per victim: in the arena (``in_arena``) when it
+    fits, raw in ``private`` otherwise. Without a tier, ``payload`` is the
+    legacy cache-shaped pytree: attention leaves carry the gathered pool
+    rows in table order, recurrent leaves the slot's state snapshot."""
     n: int
     tokens: np.ndarray           # (max_len,) accepted-token row
     cand: np.ndarray             # (W_max,) verify-window snapshot
     nb_live: int                 # leading owned blocks whose contents matter
-    payload: dict                # host pytree (see above)
+    payload: Optional[dict] = None   # legacy host pytree (no host tier)
+    kv_keys: tuple = ()          # arena-pinned chain keys, blocks [0, len)
+    n_rec: int = 0               # leading private arrays = recurrent row
+    rows_per_block: int = 0      # arrays per tail block in the private part
+    in_arena: bool = False       # private part parked under ("park", uid)
+    private: Optional[list] = None   # raw fallback when the arena was full
+    shard: int = 0               # tier kv partition the pins live under
+    #                              (resume may land on a different shard)
 
 
 class ServingEngine:
@@ -128,7 +153,8 @@ class ServingEngine:
                  donate: bool = True, rounds_per_sync: int = 4,
                  lookahead: int = 8, max_head_bypass: int = 16,
                  preempt: bool = True, preempt_floor: float = 0.75,
-                 rebalance: bool = True):
+                 rebalance: bool = True,
+                 host_cache_mb: Optional[float] = None, host_tier=None):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         assert rounds_per_sync >= 1, rounds_per_sync
@@ -197,9 +223,36 @@ class ServingEngine:
         # host-side code converts to global pool ids via the shard offset
         self.tables = np.zeros((batch, self.nb), np.int32)
         self.owned: list[list[int]] = [[] for _ in range(batch)]
-        # prefix-cache hits need the post-prefix recurrent state too, which
-        # is per-slot (not paged) — so recurrent stacks always prefill
-        self.prefix_enabled = prefix_cache and not _has_recurrent(cfg)
+
+        # ---- host cache tier (DESIGN.md §13) ----------------------------
+        # One byte-budgeted arena behind the device prefix cache: spilled
+        # KV blocks, parked-sequence payloads, recurrent-state snapshots.
+        # ``host_cache_mb=0`` (or --no-host-cache) disables it; unset falls
+        # back to REPRO_HOST_CACHE_MB, then 256 MiB.
+        if host_tier is not None:
+            self.tier = host_tier
+        else:
+            mb = host_cache_mb
+            if mb is None:
+                mb = float(os.environ.get("REPRO_HOST_CACHE_MB", 256))
+            self.tier = (self.topo.host_tier(int(mb * 2 ** 20))
+                         if mb > 0 else None)
+
+        # prefix-cache enablement is split per state kind: attention KV
+        # blocks are paged and shareable as before (``kv_prefix``), while a
+        # prefix hit for a recurrent stack additionally needs the
+        # post-prefix per-slot state — un-paged, so only reachable through
+        # the tier's recurrent-state snapshots (``rec_prefix``; without a
+        # tier, recurrent archs always prefill, as before)
+        has_rec = _has_recurrent(cfg)
+        self.has_attn = any(m not in ("mamba", "rwkv")
+                            for m, _ in cfg.layer_specs())
+        self.kv_prefix = prefix_cache and not has_rec
+        self.rec_prefix = prefix_cache and has_rec and self.tier is not None
+        # device KV blocks are registered/looked-up whenever the arch has
+        # attention layers to fill them (hybrids included under rec_prefix)
+        self._kv_share = self.kv_prefix or (self.rec_prefix and self.has_attn)
+        self.pool.set_spill_hook(self._make_spill_hook)
 
         # ---- control / telemetry ---------------------------------------
         self.controller = AdaptiveWindowController(
@@ -243,6 +296,11 @@ class ServingEngine:
         """Seed ``ContinuousBatcher`` exposed ``state.rounds``; preserved."""
         return SimpleNamespace(rounds=self.metrics.rounds, n=self.n,
                                tokens=self.tokens)
+
+    @property
+    def prefix_enabled(self) -> bool:
+        """Any prefix reuse active (device KV and/or tiered recurrent)."""
+        return self.kv_prefix or self.rec_prefix
 
     def submit(self, req: Request):
         assert len(req.prompt) >= 1
@@ -477,6 +535,129 @@ class ServingEngine:
                 self.target.astype(np.int32))
         return self._target_dev
 
+    # -- host cache tier plumbing (DESIGN.md §13) ----------------------------
+    def _collect_block_payload(self, gids) -> list:
+        """Attention pool rows for GLOBAL block ids ``gids``: ONE device
+        pull, split host-side into a flat row list per block. Row order is
+        the ``_map_paged`` leaf walk — ``_merge_block_rows`` replays the
+        same walk, so the flat encoding round-trips without a schema."""
+        if len(gids) == 0:
+            return []
+        g = jnp.asarray(np.asarray(gids, np.int32))
+        flags, pulled = [], []
+
+        def attn(stacked, leaf):
+            flags.append(stacked)
+            pulled.append(leaf[:, g] if stacked else leaf[g])
+            return leaf
+
+        TransformerLM._map_paged(self.cfg, (self.paged,), attn,
+                                 lambda stacked, leaf: leaf)
+        host = jax.device_get(pulled)
+        return [[a[:, j] if st else a[j] for st, a in zip(flags, host)]
+                for j in range(len(gids))]
+
+    def _merge_block_rows(self, gid: int, rows):
+        """Write one block's attention rows (``_map_paged`` walk order)
+        into the pool at GLOBAL id ``gid`` — the same admission-path
+        ``.at[].set`` merge the exact-resume upload uses; the round
+        jaxpr/HLO never sees it."""
+        it = iter(rows)
+
+        def attn(stacked, leaf):
+            a = next(it)
+            if not isinstance(a, jax.Array):
+                # explicit host copy: never let the device buffer alias an
+                # arena slab that a later put may recycle
+                a = jnp.asarray(np.array(a))
+            return leaf.at[:, gid].set(a) if stacked else leaf.at[gid].set(a)
+
+        self.paged = TransformerLM._map_paged(self.cfg, (self.paged,), attn,
+                                              lambda stacked, leaf: leaf)
+
+    def _collect_rec_row(self, b: int) -> list:
+        """Slot ``b``'s recurrent state rows (leaf walk order), on host."""
+        pulled = []
+
+        def rec(stacked, leaf):
+            pulled.append(leaf[:, b] if stacked else leaf[b])
+            return leaf
+
+        TransformerLM._map_paged(self.cfg, (self.paged,),
+                                 lambda stacked, leaf: leaf, rec)
+        return list(jax.device_get(pulled))
+
+    def _restore_rec_row(self, b: int, rows):
+        it = iter(rows)
+
+        def rec(stacked, leaf):
+            a = jnp.asarray(np.array(next(it)))
+            return leaf.at[:, b].set(a) if stacked else leaf.at[b].set(a)
+
+        self.paged = TransformerLM._map_paged(self.cfg, (self.paged,),
+                                              lambda stacked, leaf: leaf, rec)
+
+    def _make_spill_hook(self, shard: int):
+        """BlockManager eviction -> host tier: when a registered cached-free
+        block is reclaimed, copy its contents D2H into the arena under its
+        chain key (skipping the pull when the key is already resident —
+        chained keys are content-addressed). Returns None (drop outright)
+        without a tier or attention leaves to spill."""
+        if self.tier is None or not self.has_attn:
+            return None
+        off = self.topo.block_offset(shard, self.pool.blocks_per_shard)
+
+        def hook(local_bid: int, key) -> bool:
+            if self.tier.has_kv(shard, key):
+                return True
+            rows = self._collect_block_payload([local_bid + off])[0]
+            return self.tier.put_kv(shard, key, rows)
+
+        return hook
+
+    def _stage_host_blocks(self, b: int, mgr, host_keys, pos0: int) -> int:
+        """Re-admit host-resident KV blocks into slot ``b``'s table
+        positions ``[pos0, pos0 + len(host_keys))`` through the async
+        staging ring: upload ``k+1`` dispatches while ``k``'s merge is
+        still executing (double-buffered, ``staging.depth`` in flight).
+        The run is pinned first so the block allocations below — whose
+        evictions spill INTO the same arena — cannot evict it mid-flight;
+        a pin that fails truncates the run and prefill covers the rest.
+        Returns the number of blocks staged."""
+        shard = self.topo.shard_of_slot(b, self.B)
+        off = self._table_offset(b)
+        ring = self.tier.staging
+        pinned = []
+        for key in host_keys:
+            if not self.tier.pin_kv(shard, key):
+                break
+            pinned.append(key)
+        staged = 0
+        try:
+            self._ensure_capacity(
+                b, (pos0 + len(pinned)) * self.block_size)
+            for j, key in enumerate(pinned):
+                rows = self.tier.get_kv(shard, key)   # counts the host hit
+                ring.stage((self.owned[b][pos0 + j], key), rows)
+                if len(ring) >= ring.depth:           # drain behind the ring
+                    (blk, k2), devs = ring.take()
+                    self._merge_block_rows(blk + off, devs)
+                    mgr.register(blk, k2)
+                    staged += 1
+            while True:
+                item = ring.take()
+                if item is None:
+                    break
+                (blk, k2), devs = item
+                self._merge_block_rows(blk + off, devs)
+                mgr.register(blk, k2)
+                staged += 1
+        finally:
+            for key in pinned:
+                self.tier.unpin_kv(shard, key)
+        self.metrics.host_staged_blocks += staged
+        return staged
+
     # -- sequence migration / priority preemption (DESIGN.md §12) -----------
     def _live_blocks(self, b: int) -> int:
         """Leading owned blocks whose contents the next round still reads:
@@ -511,12 +692,15 @@ class ServingEngine:
         req = self.slots[b]
         assert req is not None, f"slot {b} is not occupied"
         nb_live = self._live_blocks(b)
-        self.parked[req.uid] = ParkedSequence(
-            n=int(self.n_host[b]),
-            tokens=np.asarray(self.tokens[b]),
-            cand=np.asarray(self.cand[b]),
-            nb_live=nb_live,
-            payload=self._park_payload(b, nb_live))
+        if self.tier is None:
+            self.parked[req.uid] = ParkedSequence(
+                n=int(self.n_host[b]),
+                tokens=np.asarray(self.tokens[b]),
+                cand=np.asarray(self.cand[b]),
+                nb_live=nb_live,
+                payload=self._park_payload(b, nb_live))
+        else:
+            self.parked[req.uid] = self._park_tiered(req, b, nb_live)
         self._mgr(b).spill(self.owned[b])
         self.owned[b] = []
         self.slots[b] = None
@@ -527,11 +711,57 @@ class ServingEngine:
         self.metrics.blocks_parked += nb_live
         return req
 
+    def _park_tiered(self, req: Request, b: int, nb_live: int) -> ParkedSequence:
+        """Park into the host tier (DESIGN.md §13): the victim's full
+        prompt blocks go to the shared ``kv`` namespace — refcount-pinned,
+        stored ONCE however many victims share the prefix — and only the
+        private remainder (tail block rows + the recurrent state row) is
+        parked per victim: in the arena when it fits, raw host memory as
+        the overflow fallback (parking must never fail)."""
+        shard = self.topo.shard_of_slot(b, self.B)
+        off = self._table_offset(b)
+        prompt = np.asarray(req.prompt)
+        nb_pub = (min((len(prompt) - 1) // self.block_size, nb_live)
+                  if self._kv_share else 0)
+        keys = chain_hashes(prompt, self.block_size, nb_pub)
+        # pull only the blocks whose keys are not already arena-resident
+        # (content-addressed: a resident entry IS this block's contents)
+        need = [jb for jb in range(nb_pub)
+                if not self.tier.has_kv(shard, keys[jb])]
+        payloads = dict(zip(need, self._collect_block_payload(
+            [int(self.tables[b, jb]) + off for jb in need])))
+        kv_keys = []
+        for jb in range(nb_pub):
+            ok = (self.tier.put_kv(shard, keys[jb], payloads[jb], pin=True)
+                  if jb in payloads else self.tier.pin_kv(shard, keys[jb]))
+            if not ok:          # arena full / entry evicted: rest goes private
+                break
+            kv_keys.append(keys[jb])
+        tail = self._collect_block_payload(
+            [int(self.tables[b, jb]) + off
+             for jb in range(len(kv_keys), nb_live)]) if self.has_attn \
+            else [[] for _ in range(len(kv_keys), nb_live)]
+        rec = self._collect_rec_row(b) if _has_recurrent(self.cfg) else []
+        private = list(rec)
+        for rows in tail:
+            private.extend(rows)
+        in_arena = self.tier.put_park(req.uid, private)
+        return ParkedSequence(
+            n=int(self.n_host[b]), tokens=np.asarray(self.tokens[b]),
+            cand=np.asarray(self.cand[b]), nb_live=nb_live,
+            kv_keys=tuple(kv_keys), n_rec=len(rec),
+            rows_per_block=len(tail[0]) if tail else 0,
+            in_arena=in_arena, private=None if in_arena else private,
+            shard=shard)
+
     def _resume(self, req: Request, b: int, parked: ParkedSequence):
         """Re-admit a parked request into slot ``b`` exactly where it left
         off: re-hit still-valid prefix blocks, upload the parked contents of
-        the rest, restore the per-slot n/cand/tokens snapshot."""
+        the rest (host tier or legacy payload), restore the per-slot
+        n/cand/tokens snapshot."""
         req.admit_time = time.monotonic()
+        if parked.payload is None:
+            return self._resume_tiered(req, b, parked)
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
         mgr = self._mgr(b)
@@ -590,6 +820,76 @@ class ServingEngine:
         self.reserved[b] = self._worst_case_blocks(req)
         self.metrics.resumes += 1
 
+    def _resume_tiered(self, req: Request, b: int, parked: ParkedSequence):
+        """Exact resume from a tier-split park: device re-hits first (spill
+        left hashed blocks cached-free), then the pinned shared ``kv``
+        entries, then the private tail rows; the recurrent row is restored
+        bit-exactly from the private part, so device KV hits need no
+        snapshot gating here (unlike a fresh admission)."""
+        prompt = np.asarray(req.prompt, np.int64)
+        L_p = len(prompt)
+        mgr = self._mgr(b)
+        # the pinned kv entries live under the PARKING shard's tier
+        # partition — resume may land elsewhere (mesh routing), and the
+        # entries are content-addressed, so read them where they are
+        shard = parked.shard
+        off = self._table_offset(b)
+        nb_live = parked.nb_live
+        n_shared = len(parked.kv_keys)
+        hits, keys = [], []
+        nb_full = min((L_p - 1) // self.block_size, nb_live)
+        if self._kv_share and nb_full:
+            hits, keys = mgr.lookup_prefix(prompt, nb_full)
+        fresh = mgr.alloc(nb_live - len(hits))
+        owned = list(hits) + fresh
+        self.owned[b] = list(owned)
+        self.tables[b] = 0
+        self.tables[b, :nb_live] = owned
+        self._tables_dev = None
+
+        # private payload: recurrent row arrays first, then the rows of
+        # tail blocks [n_shared, nb_live) (flat, rows_per_block each)
+        private = (self.tier.take_park(req.uid) if parked.in_arena
+                   else (parked.private or []))
+        rec_rows = private[:parked.n_rec]
+        tail = private[parked.n_rec:]
+        rpb = parked.rows_per_block
+
+        host_restored = 0
+        for jb in range(len(hits), nb_live):
+            if jb < n_shared:
+                rows = self.tier.get_kv(shard, parked.kv_keys[jb])
+                assert rows is not None, "pinned parked kv block evicted"
+                host_restored += 1
+            else:
+                t0 = (jb - n_shared) * rpb
+                rows = tail[t0:t0 + rpb]
+            self._merge_block_rows(owned[jb] + off, rows)
+        req.prefix_hit_blocks += len(hits) + host_restored
+        if _has_recurrent(self.cfg):
+            self._restore_rec_row(b, rec_rows)
+
+        # per-slot state: the exact park-time snapshot
+        self.tokens = self.tokens.at[b].set(
+            jnp.asarray(parked.tokens, jnp.int32))
+        self.n = self.n.at[b].set(parked.n)
+        self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
+        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.n_host[b] = parked.n
+
+        # re-publish the rebuilt full prompt blocks, drop the park pins
+        if self._kv_share:
+            for jb in range(len(hits), nb_full):
+                mgr.register(owned[jb], keys[jb])
+        for key in parked.kv_keys:
+            self.tier.unpin_kv(shard, key)
+
+        self.slots[b] = req
+        self.target[b] = L_p + req.new_tokens
+        self._target_dev = None
+        self.reserved[b] = self._worst_case_blocks(req)
+        self.metrics.resumes += 1
+
     def migrate_slot(self, b_src: int, b_dst: int):
         """Move a live sequence to a free slot: across shard sub-pools
         under a mesh (device block copy into freshly allocated landing
@@ -623,11 +923,10 @@ class ServingEngine:
             jnp.asarray(b_src, jnp.int32), jnp.asarray(b_dst, jnp.int32))
         if s != t:
             self.pool.finish_migration(s, self.owned[b_src])
-            if self.prefix_enabled:
+            if self._kv_share:
                 # re-publish the copied full prompt blocks under the
                 # destination shard's cache (content-identical; first
                 # writer wins)
-                from repro.serving.blocks import chain_hashes
                 prompt = np.asarray(req.prompt)
                 nb_full = min((len(prompt) - 1) // self.block_size, n_owned)
                 keys = chain_hashes(prompt, self.block_size, nb_full)
@@ -826,21 +1125,65 @@ class ServingEngine:
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
         mgr = self._mgr(b)
+        shard = self.topo.shard_of_slot(b, self.B)
 
         # prefix-cache: reuse full blocks strictly below position L_p - 1
         # (the verify window rewrites position n-1 = L_p-1 onward, so those
         # blocks stay read-only and shareable). Per-shard cache: hits can
-        # only come from the sub-pool this slot decodes through.
-        hits, keys = [], []
+        # only come from the sub-pool this slot decodes through; device
+        # misses fall through to the host tier (DESIGN.md §13).
+        hits, keys, host_keys = [], [], []
         nb_full = (L_p - 1) // self.block_size
-        if self.prefix_enabled and nb_full:
-            hits, keys = mgr.lookup_prefix(prompt, nb_full)
-        req.prefix_hit_blocks = len(hits)
+        if self._kv_share and nb_full:
+            hits, keys, host_keys = mgr.lookup_prefix_tiered(
+                prompt, nb_full, tier=self.tier, shard=shard)
+        elif self.rec_prefix and nb_full:
+            keys = chain_hashes(prompt, self.block_size, nb_full)
+
+        rec_rows, rec_bound = None, 0
+        if self.rec_prefix and nb_full:
+            # a prefix hit for a recurrent stack needs BOTH halves at one
+            # block boundary j: KV blocks [0, j) coverable (device hits +
+            # the contiguous host run; trivially all of them when the arch
+            # has no attention layers) AND the recurrent-state snapshot at
+            # keys[j-1] host-resident. Pick the largest such j.
+            cover = (len(hits) + len(host_keys)) if self.has_attn else nb_full
+            for jj in range(cover, 0, -1):
+                rows = self.tier.get_rec(shard, keys[jj - 1])
+                if rows is not None:
+                    # copied out now: block allocs below spill into the
+                    # same arena and could recycle these buffers
+                    rec_rows, rec_bound = [np.array(a) for a in rows], jj
+                    break
+            # prefill rewrites blocks >= j through the table, so device
+            # hits past the snapshot boundary are unusable SHARED blocks —
+            # release them and let prefill write fresh private ones
+            if len(hits) > rec_bound:
+                mgr.release_all(hits[rec_bound:])
+                hits = hits[:rec_bound]
+            host_keys = (keys[len(hits):rec_bound] if self.has_attn else [])
+
         self.owned[b] = list(hits)
         self.tables[b] = 0
         self.tables[b, :len(hits)] = hits
         self._tables_dev = None
+        staged = self._stage_host_blocks(b, mgr, host_keys, len(hits)) \
+            if host_keys else 0
         self._ensure_capacity(b, L_p)
+
+        if self.rec_prefix and rec_bound > (len(hits) + staged
+                                            if self.has_attn else nb_full):
+            # staging truncated under arena pressure: fall back to the
+            # best boundary the staged KV coverage still supports
+            rec_rows, rec_bound = None, 0
+            for jj in range(len(hits) + staged, 0, -1):
+                rows = self.tier.get_rec(shard, keys[jj - 1])
+                if rows is not None:
+                    rec_rows, rec_bound = [np.array(a) for a in rows], jj
+                    break
+
+        start_blocks = rec_bound if self.rec_prefix else len(hits) + staged
+        req.prefix_hit_blocks = start_blocks
 
         # per-slot state
         self.tokens = self.tokens.at[b].set(0).at[b, :L_p].set(
@@ -850,24 +1193,50 @@ class ServingEngine:
         self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
         if _has_recurrent(self.cfg):
             self._reset_recurrent_row(b)
+            if rec_rows is not None and start_blocks > 0:
+                # state after positions [0, start_blocks * bs): the
+                # snapshot captured at this boundary by an earlier
+                # admission — a recurrent prefix hit
+                self._restore_rec_row(b, rec_rows)
+                self.metrics.rec_snapshot_restores += 1
 
         # chunked row-local prefill of the un-cached prompt tail (global
-        # pool ids: local table + the slot's shard offset)
-        start = len(hits) * self.block_size
+        # pool ids: local table + the slot's shard offset). Recurrent
+        # archs segment the tail at registerable block boundaries so the
+        # state row can be checkpointed into the tier at each one —
+        # chunk decomposition is bitwise-invariant (sequential scans), so
+        # tokens are unchanged; attention-only archs keep the single
+        # greedy pow2 cover.
+        start = start_blocks * self.block_size
         table_row = jnp.asarray(self.tables[b:b + 1] + self._table_offset(b))
         row = jnp.asarray([b], jnp.int32)
-        for C in prefill_chunks(L_p - 1 - start, self.prefill_chunk):
-            chunk = jnp.asarray(prompt[None, start:start + C], jnp.int32)
-            self.paged = self._prefill_fn(C)(
-                self.params, self.paged, table_row, row, chunk,
-                jnp.asarray([start], jnp.int32))
-            start += C
-            req.prefill_calls += 1
-            self.metrics.prefill_calls += 1
+        seg_ends = ([jb * self.block_size
+                     for jb in range(start_blocks + 1, nb_full + 1)]
+                    if self.rec_prefix else [])
+        if not seg_ends or seg_ends[-1] != L_p - 1:
+            seg_ends.append(L_p - 1)
+        for end in seg_ends:
+            for C in prefill_chunks(end - start, self.prefill_chunk):
+                chunk = jnp.asarray(prompt[None, start:start + C], jnp.int32)
+                self.paged = self._prefill_fn(C)(
+                    self.params, self.paged, table_row, row, chunk,
+                    jnp.asarray([start], jnp.int32))
+                start += C
+                req.prefill_calls += 1
+                self.metrics.prefill_calls += 1
+            if (self.rec_prefix and end > 0 and end == start
+                    and end % self.block_size == 0
+                    and end <= nb_full * self.block_size):
+                kb = end // self.block_size - 1
+                if not self.tier.has_rec(shard, keys[kb]):
+                    if self.tier.put_rec(shard, keys[kb],
+                                         self._collect_rec_row(b)):
+                        self.metrics.rec_snapshot_captures += 1
 
-        # publish this prompt's freshly computed full blocks
-        if self.prefix_enabled:
-            for j in range(len(hits), nb_full):
+        # publish this prompt's freshly computed full blocks (host-staged
+        # ones were registered as they merged)
+        if self._kv_share:
+            for j in range(len(hits) + staged, nb_full):
                 mgr.register(self.owned[b][j], keys[j])
 
         self.slots[b] = req
@@ -956,7 +1325,9 @@ class ServingEngine:
 
     # -- telemetry -----------------------------------------------------------
     def export_metrics(self) -> dict:
-        out = self.metrics.export(self.pool.stats_export())
+        out = self.metrics.export(
+            self.pool.stats_export(),
+            self.tier.stats_export() if self.tier is not None else None)
         out["blocks_in_use"] = self.pool.blocks_in_use()
         out["blocks_available"] = self.pool.available()
         out["parked_requests"] = len(self.parked)

@@ -1,0 +1,11 @@
+"""Host-memory cache tier: bounded LRU arena + staging + HostTier facade.
+
+See DESIGN.md §13. The tier sits between the device prefix cache and
+fresh prefill compute: spilled KV blocks, parked-sequence payloads, and
+recurrent-state snapshots share one byte-budgeted arena.
+"""
+from .arena import ArenaStats, HostArena
+from .staging import StagingRing
+from .tier import HostTier
+
+__all__ = ["ArenaStats", "HostArena", "StagingRing", "HostTier"]

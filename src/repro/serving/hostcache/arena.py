@@ -1,0 +1,227 @@
+"""Bounded host-memory arena: slab-recycled buffers, refcount pinning,
+strict LRU eviction (DESIGN.md §13).
+
+The arena is the single byte-budgeted store under the host cache tier
+(``tier.HostTier``). An *entry* is a flat list of numpy arrays under one
+hashable key — a spilled prefix block's pool rows, a parked sequence's
+private payload, or a recurrent-state snapshot. The arena never interprets
+the arrays; clients own the keying and the (de)composition.
+
+Invariants:
+
+* **Bounded.** ``bytes_resident + bytes_slab <= capacity_bytes`` always.
+  A ``put`` that cannot fit after evicting every unpinned entry is
+  *rejected* (returns False, counted) — the caller falls back to dropping
+  the data or keeping it outside the arena; the arena never grows past its
+  budget and never throws on pressure.
+* **Slab allocation per block shape.** Evicted entries donate their
+  buffers to per-``(shape, dtype)`` free lists instead of returning them
+  to the allocator; a later ``put`` of the same shape copies into a
+  recycled slab (serving traffic is dominated by a handful of block
+  shapes, so steady-state spill traffic allocates nothing). Slab bytes
+  count against the budget and are trimmed first under pressure.
+* **Refcount pinning.** ``refs > 0`` entries (parked payloads, prefix
+  blocks a parked sequence depends on, entries mid-staging) are exempt
+  from eviction. Pins are explicit (``pin``/``unpin`` or the ``pin=``
+  flags); a pinned ``put`` still respects the budget.
+* **Strict LRU.** Unpinned entries are evicted oldest-touch first; every
+  ``get`` hit and dedup ``put`` refreshes recency.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+def _nbytes(arrays) -> int:
+    return int(sum(a.nbytes for a in arrays))
+
+
+@dataclass
+class ArenaStats:
+    hits: int = 0                # get() found the key
+    misses: int = 0              # get()/contains probe found nothing
+    puts: int = 0                # new entries admitted
+    dedup_hits: int = 0          # put() of an already-resident key
+    evictions: int = 0           # LRU entries dropped for space
+    rejections: int = 0          # puts refused (budget/pins)
+    slab_reuses: int = 0         # buffers recycled from the slab pool
+    bytes_in: int = 0            # payload bytes copied into the arena
+
+    def export(self, arena: "HostArena") -> dict:
+        return {
+            "host_hits": self.hits,
+            "host_misses": self.misses,
+            "host_puts": self.puts,
+            "host_dedup_hits": self.dedup_hits,
+            "host_evictions": self.evictions,
+            "host_rejections": self.rejections,
+            "host_slab_reuses": self.slab_reuses,
+            "host_bytes_in": self.bytes_in,
+            "host_bytes_resident": arena.bytes_resident,
+            "host_bytes_slab": arena.bytes_slab,
+            "host_bytes_capacity": arena.capacity_bytes,
+            "host_entries": len(arena._entries),
+            "host_entries_pinned": sum(
+                1 for e in arena._entries.values() if e.refs > 0),
+        }
+
+
+@dataclass
+class _Entry:
+    arrays: list
+    nbytes: int
+    refs: int = 0
+
+
+class HostArena:
+    """Fixed-budget key -> list-of-ndarray store with LRU + pinning."""
+
+    def __init__(self, capacity_bytes: int):
+        assert capacity_bytes >= 0, capacity_bytes
+        self.capacity_bytes = int(capacity_bytes)
+        # insertion/touch order IS the LRU order (oldest first)
+        self._entries: "OrderedDict[object, _Entry]" = OrderedDict()
+        self._slab: dict[tuple, list] = {}       # (shape, dtype) -> buffers
+        self.bytes_resident = 0
+        self.bytes_slab = 0
+        self.stats = ArenaStats()
+
+    # -- slab pool ----------------------------------------------------------
+    def _slab_key(self, a: np.ndarray) -> tuple:
+        return (a.shape, a.dtype.str)
+
+    def _slab_take(self, src: np.ndarray) -> np.ndarray:
+        free = self._slab.get(self._slab_key(src))
+        if free:
+            buf = free.pop()
+            self.bytes_slab -= buf.nbytes
+            self.stats.slab_reuses += 1
+        else:
+            buf = np.empty_like(src)
+        np.copyto(buf, src)
+        return buf
+
+    def _slab_give(self, arrays):
+        for a in arrays:
+            self._slab.setdefault(self._slab_key(a), []).append(a)
+            self.bytes_slab += a.nbytes
+
+    def _trim_slab(self, want: int):
+        """Drop slab buffers (any shape, arbitrary order) until ``want``
+        bytes fit alongside the resident set."""
+        for key in list(self._slab):
+            free = self._slab[key]
+            while free and self._free_bytes() < want:
+                self.bytes_slab -= free.pop().nbytes
+            if not free:
+                del self._slab[key]
+            if self._free_bytes() >= want:
+                return
+
+    # -- capacity -----------------------------------------------------------
+    def _free_bytes(self) -> int:
+        return self.capacity_bytes - self.bytes_resident - self.bytes_slab
+
+    def _evict_for(self, want: int) -> bool:
+        """Make room for ``want`` payload bytes: trim slab first (pure
+        bookkeeping), then evict unpinned entries strictly oldest-first.
+        Returns False if even a full sweep cannot free enough."""
+        if want > self.capacity_bytes:
+            return False
+        self._trim_slab(want)
+        if self._free_bytes() >= want:
+            return True
+        for key in list(self._entries):
+            e = self._entries[key]
+            if e.refs > 0:
+                continue
+            del self._entries[key]
+            self.bytes_resident -= e.nbytes
+            self._slab_give(e.arrays)
+            self.stats.evictions += 1
+            self._trim_slab(want)
+            if self._free_bytes() >= want:
+                return True
+        self._trim_slab(want)
+        return self._free_bytes() >= want
+
+    # -- entry API ----------------------------------------------------------
+    def contains(self, key, touch: bool = False) -> bool:
+        """Presence probe with NO hit/miss accounting (planning passes use
+        it to size an admission before committing to it)."""
+        if key in self._entries:
+            if touch:
+                self._entries.move_to_end(key)
+            return True
+        return False
+
+    def put(self, key, arrays, pin: bool = False) -> bool:
+        """Copy ``arrays`` (a flat list of ndarrays) into the arena under
+        ``key``. Duplicate keys are a *dedup hit*: the resident entry is
+        kept (contents are content-addressed by construction), refreshed,
+        and optionally pinned — nothing is copied twice. Returns False iff
+        the arena cannot make room (entry never partially admitted)."""
+        e = self._entries.get(key)
+        if e is not None:
+            self._entries.move_to_end(key)
+            if pin:
+                e.refs += 1
+            self.stats.dedup_hits += 1
+            return True
+        arrays = [np.asarray(a) for a in arrays]
+        want = _nbytes(arrays)
+        if not self._evict_for(want):
+            self.stats.rejections += 1
+            return False
+        self._entries[key] = _Entry([self._slab_take(a) for a in arrays],
+                                    want, refs=1 if pin else 0)
+        self.bytes_resident += want
+        self.stats.puts += 1
+        self.stats.bytes_in += want
+        return True
+
+    def get(self, key, pin: bool = False) -> Optional[list]:
+        """LRU-refreshing lookup. Returns the entry's arrays (the arena's
+        own buffers — callers must not mutate them) or None."""
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        if pin:
+            e.refs += 1
+        self.stats.hits += 1
+        return e.arrays
+
+    def pin(self, key) -> bool:
+        e = self._entries.get(key)
+        if e is None:
+            return False
+        e.refs += 1
+        return True
+
+    def unpin(self, key):
+        e = self._entries.get(key)
+        assert e is not None and e.refs > 0, f"unpin of unpinned key {key!r}"
+        e.refs -= 1
+
+    def drop(self, key) -> bool:
+        """Remove an entry outright (e.g. a consumed parked payload); its
+        buffers go to the slab pool. Pinned entries may be dropped — the
+        owner of the last pin is the one calling."""
+        e = self._entries.pop(key, None)
+        if e is None:
+            return False
+        self.bytes_resident -= e.nbytes
+        self._slab_give(e.arrays)
+        return True
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats_export(self) -> dict:
+        return self.stats.export(self)

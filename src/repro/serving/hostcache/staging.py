@@ -1,0 +1,84 @@
+"""Async H2D staging ring for host-tier re-admission (DESIGN.md §13).
+
+``jax.device_put`` is asynchronous: it returns a ``jax.Array`` immediately
+and the copy proceeds in the background. The ring exploits that to overlap
+host-tier uploads with the prefill chunks the engine is already paying for
+a new admission: stage block ``k+1`` while block ``k``'s merge (or the next
+prefill chunk) is executing, bounded to ``depth`` in-flight uploads so host
+pressure cannot pile up unbounded device allocations.
+
+The ring also measures how much overlap it actually got: an upload counts
+as *overlapped* when, at issue time, the previously staged array had not
+yet landed (``not is_ready()``) — i.e. the copy engine was still busy and
+this dispatch queued behind useful work instead of blocking the host. The
+exported ``h2d_overlap_frac`` is the serving-bench "H2D overlap fraction".
+
+Buffers returned by ``take()`` are plain device arrays; the engine merges
+them into the pool with the same ``.at[gids].set`` pattern the resume path
+uses, so nothing here touches the verify-round jaxpr.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import numpy as np
+
+
+class StagingRing:
+    """Depth-bounded asynchronous host->device upload ring."""
+
+    def __init__(self, depth: int = 2):
+        assert depth >= 1, depth
+        self.depth = depth
+        self._ring: deque = deque()          # in flight: (tag, [jax.Array])
+        self._landed: deque = deque()        # drained, awaiting take()
+        self.staged = 0                      # uploads issued
+        self.staged_bytes = 0
+        self.overlapped = 0                  # issued while ring was busy
+        self._last: "jax.Array | None" = None
+
+    def _busy(self) -> bool:
+        return self._last is not None and not self._last.is_ready()
+
+    def stage(self, tag, arrays) -> None:
+        """Dispatch async uploads of ``arrays`` (numpy) under ``tag``.
+        Blocks only when the ring is full (depth uploads in flight); the
+        upload it waits for moves to the landed queue, never dropped."""
+        while len(self._ring) >= self.depth:
+            self._landed.append(self._drain_one())
+        if self._busy():
+            self.overlapped += 1
+        devs = [jax.device_put(np.asarray(a)) for a in arrays]
+        self.staged += 1
+        self.staged_bytes += int(sum(a.nbytes for a in arrays))
+        if devs:
+            self._last = devs[-1]
+        self._ring.append((tag, devs))
+
+    def _drain_one(self):
+        tag, devs = self._ring.popleft()
+        for d in devs:
+            d.block_until_ready()
+        return (tag, devs)
+
+    def take(self):
+        """Pop the oldest staged upload as ``(tag, [device arrays])``,
+        waiting for it to land. Returns None when nothing is staged."""
+        if self._landed:
+            return self._landed.popleft()
+        if not self._ring:
+            return None
+        return self._drain_one()
+
+    def __len__(self) -> int:
+        return len(self._ring) + len(self._landed)
+
+    def stats_export(self) -> dict:
+        frac = self.overlapped / self.staged if self.staged else 0.0
+        return {
+            "h2d_staged": self.staged,
+            "h2d_staged_bytes": self.staged_bytes,
+            "h2d_overlapped": self.overlapped,
+            "h2d_overlap_frac": frac,
+        }

@@ -1,0 +1,98 @@
+"""HostTier: the facade the engine consults between the device prefix
+cache and fresh compute (DESIGN.md §13).
+
+One shared :class:`~repro.serving.hostcache.arena.HostArena` (a single
+byte budget for the whole process — mesh topologies partition *keys* per
+data shard, not bytes, so a hot shard can use headroom an idle shard is
+not) serves three clients through namespaced keys:
+
+* ``("kv", shard, chain_key)`` — spilled prefix blocks: the per-layer pool
+  rows of one hashed KV block, keyed by the same chained prompt hash
+  ``blocks.chain_hashes`` registers on device. Spill writes them on
+  BlockManager eviction; ``kv_run`` answers lookup-miss fall-through with
+  the longest contiguous resident run so the engine only stages blocks it
+  can actually use (chained keys make any resident prefix run valid).
+* ``("rec", shard, chain_key)`` — recurrent-state snapshots: a slot's
+  ssm/rwkv/hybrid state rows checkpointed at a registerable block
+  boundary. Same keying as KV blocks, so a shared system prompt hits for
+  recurrent archs exactly where it hits for attention.
+* ``("park", uid)`` — a parked sequence's *private* payload (partial
+  blocks + live recurrent rows), pinned until resume. The shared hashed
+  prefix blocks are NOT duplicated here — they live once in the ``kv``
+  namespace, refcount-pinned by each parked victim (satellite: dedup).
+
+All payloads are flat lists of numpy arrays; the engine owns pytree
+(de)composition so the tier stays model-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .arena import HostArena
+from .staging import StagingRing
+
+
+class HostTier:
+    def __init__(self, capacity_bytes: int, num_shards: int = 1,
+                 staging_depth: int = 2):
+        self.arena = HostArena(capacity_bytes)
+        self.num_shards = num_shards
+        self.staging = StagingRing(depth=staging_depth)
+
+    # -- prefix-spill client ------------------------------------------------
+    def put_kv(self, shard: int, key, arrays, pin: bool = False) -> bool:
+        return self.arena.put(("kv", shard, key), arrays, pin=pin)
+
+    def has_kv(self, shard: int, key) -> bool:
+        return self.arena.contains(("kv", shard, key))
+
+    def get_kv(self, shard: int, key) -> Optional[list]:
+        return self.arena.get(("kv", shard, key))
+
+    def pin_kv(self, shard: int, key) -> bool:
+        return self.arena.pin(("kv", shard, key))
+
+    def unpin_kv(self, shard: int, key):
+        self.arena.unpin(("kv", shard, key))
+
+    def kv_run(self, shard: int, keys) -> int:
+        """Longest contiguous resident run of ``keys`` (chained hashes,
+        oldest block first). Touches each resident key so a popular prefix
+        stays warm. Stops at the first gap — a later resident block is
+        useless without its predecessors."""
+        n = 0
+        for k in keys:
+            if not self.arena.contains(("kv", shard, k), touch=True):
+                break
+            n += 1
+        return n
+
+    # -- recurrent-snapshot client ------------------------------------------
+    def put_rec(self, shard: int, key, arrays) -> bool:
+        return self.arena.put(("rec", shard, key), arrays)
+
+    def has_rec(self, shard: int, key) -> bool:
+        return self.arena.contains(("rec", shard, key), touch=True)
+
+    def get_rec(self, shard: int, key) -> Optional[list]:
+        return self.arena.get(("rec", shard, key))
+
+    # -- parked-sequence client ---------------------------------------------
+    def put_park(self, uid: int, arrays) -> bool:
+        return self.arena.put(("park", uid), arrays, pin=True)
+
+    def take_park(self, uid: int) -> Optional[list]:
+        """Consume a parked payload: returns the arrays and removes the
+        (pinned) entry — parking is one-shot, resume owns the copy-out."""
+        arrays = self.arena.get(("park", uid))
+        if arrays is None:
+            return None
+        arrays = [a.copy() for a in arrays]      # buffers return to the slab
+        self.arena.drop(("park", uid))
+        return arrays
+
+    # -- misc ---------------------------------------------------------------
+    def stats_export(self) -> dict:
+        out = self.arena.stats_export()
+        out.update(self.staging.stats_export())
+        return out

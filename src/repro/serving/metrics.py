@@ -46,6 +46,12 @@ class EngineMetrics:
     blocks_parked: int = 0               # block payloads spilled to host
     blocks_migrated: int = 0             # blocks device-copied across shards
     head_bypass_admissions: int = 0      # lookahead admissions past the head
+    host_staged_blocks: int = 0          # KV blocks re-admitted from the host
+    #                                      tier at admission (H2D staging)
+    rec_snapshot_captures: int = 0       # recurrent-state rows checkpointed
+    #                                      into the host tier at block bounds
+    rec_snapshot_restores: int = 0       # admissions that resumed from a
+    #                                      host-tier recurrent snapshot
 
     def observe_loop(self, window: int, rounds: int, active_row_rounds: int,
                      batch: int, accepted: int):
@@ -78,7 +84,8 @@ class EngineMetrics:
             if req.missed_deadline:
                 self.deadline_miss_count += 1
 
-    def export(self, block_stats: dict | None = None) -> dict:
+    def export(self, block_stats: dict | None = None,
+               host_stats: dict | None = None) -> dict:
         calls = np.asarray(self.request_calls, np.float64)
         new = np.asarray(self.request_new_tokens, np.float64)
         out = {
@@ -128,7 +135,14 @@ class EngineMetrics:
             "blocks_parked": self.blocks_parked,
             "blocks_migrated": self.blocks_migrated,
             "head_bypass_admissions": self.head_bypass_admissions,
+            "host_staged_blocks": self.host_staged_blocks,
+            "rec_snapshot_captures": self.rec_snapshot_captures,
+            "rec_snapshot_restores": self.rec_snapshot_restores,
         }
         if block_stats:
             out.update(block_stats)
+        if host_stats:
+            # arena + staging-ring counters (host_hits/host_evictions/
+            # bytes_resident/h2d_staged/h2d_overlap_frac, ...)
+            out.update(host_stats)
         return out

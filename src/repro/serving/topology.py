@@ -95,6 +95,17 @@ class ServingTopology:
         """Global pool id of a shard's local block 0 (its reserved sink)."""
         return shard * blocks_per_shard
 
+    # -- host cache tier (DESIGN.md §13) ------------------------------------
+    def host_tier(self, capacity_bytes: int, staging_depth: int = 2):
+        """Build the engine's host cache tier for this topology: one arena
+        (a single shared byte budget for the whole process — a hot shard may
+        use headroom an idle one is not) partitioned into per-data-shard key
+        namespaces, mirroring the per-shard device prefix caches (block
+        contents never cross shards, so neither do their host copies)."""
+        from repro.serving.hostcache import HostTier
+        return HostTier(capacity_bytes, num_shards=self.data_size,
+                        staging_depth=staging_depth)
+
     # -- device placement ---------------------------------------------------
     def batch_spec(self) -> P:
         return P(self.data_axis)

@@ -1,0 +1,125 @@
+"""Host-arena / staging-ring / tier-facade units (DESIGN.md §13): byte
+budget enforcement, strict LRU order, refcount pinning, slab recycling,
+dedup puts, contiguous-run lookup, one-shot park consumption."""
+import numpy as np
+import pytest
+
+from repro.serving import HostArena, HostTier, StagingRing
+
+
+def _blk(fill, shape=(4, 8), dtype=np.float32):
+    return np.full(shape, fill, dtype)
+
+
+BLK_BYTES = _blk(0).nbytes
+
+
+def test_budget_is_a_hard_bound():
+    a = HostArena(3 * BLK_BYTES)
+    for i in range(5):
+        assert a.put(i, [_blk(i)])
+        assert a.bytes_resident + a.bytes_slab <= a.capacity_bytes
+    assert len(a) == 3                       # LRU evicted the overflow
+    assert a.stats.evictions == 2
+    # an entry that can never fit is rejected, not partially admitted
+    assert not a.put("huge", [_blk(0, shape=(64, 64))])
+    assert a.stats.rejections == 1
+    assert len(a) == 3
+
+
+def test_strict_lru_eviction_order_with_touch():
+    a = HostArena(3 * BLK_BYTES)
+    for k in "xyz":
+        a.put(k, [_blk(1)])
+    assert a.get("x") is not None            # refresh x: y is now oldest
+    a.put("w", [_blk(2)])
+    assert not a.contains("y")               # y evicted, x survived
+    assert a.contains("x") and a.contains("z") and a.contains("w")
+
+
+def test_pinned_entries_are_eviction_exempt():
+    a = HostArena(2 * BLK_BYTES)
+    assert a.put("pinned", [_blk(7)], pin=True)
+    a.put("a", [_blk(1)])
+    a.put("b", [_blk(2)])                    # evicts "a", never "pinned"
+    assert a.contains("pinned") and not a.contains("a")
+    # fully pinned arena: a new put is rejected outright
+    assert a.put("c", [_blk(3)], pin=True)
+    assert not a.put("d", [_blk(4)])
+    a.unpin("pinned")
+    assert a.put("d", [_blk(4)])             # unpinned entry now evictable
+    assert not a.contains("pinned")
+
+
+def test_slab_buffers_are_recycled_per_shape():
+    a = HostArena(4 * BLK_BYTES)
+    a.put("a", [_blk(1)])
+    a.drop("a")                              # buffer parked in the slab pool
+    assert a.bytes_slab == BLK_BYTES and a.bytes_resident == 0
+    a.put("b", [_blk(2)])                    # same shape: recycled, no alloc
+    assert a.stats.slab_reuses == 1
+    assert a.bytes_slab == 0
+    np.testing.assert_array_equal(a.get("b")[0], _blk(2))
+
+
+def test_dedup_put_refreshes_and_optionally_pins():
+    a = HostArena(4 * BLK_BYTES)
+    assert a.put("k", [_blk(5)])
+    assert a.put("k", [_blk(5)], pin=True)   # dedup: no second copy
+    assert a.stats.dedup_hits == 1
+    assert a.bytes_resident == BLK_BYTES
+    a.put("x", [_blk(1)])
+    a.put("y", [_blk(2)])
+    a.put("z", [_blk(3)])                    # pressure: "k" is pinned, safe
+    assert a.contains("k")
+
+
+def test_unpin_of_unpinned_key_asserts():
+    a = HostArena(BLK_BYTES)
+    a.put("k", [_blk(0)])
+    with pytest.raises(AssertionError):
+        a.unpin("k")
+
+
+def test_tier_kv_run_stops_at_first_gap():
+    t = HostTier(capacity_bytes=1 << 20)
+    keys = [101, 102, 103, 104]
+    for k in (101, 102, 104):                # 103 missing: run must stop
+        assert t.put_kv(0, k, [_blk(k)])
+    assert t.kv_run(0, keys) == 2
+    assert t.kv_run(0, keys[2:]) == 0        # resident-behind-a-gap unused
+    # shard namespaces are disjoint partitions of one shared budget
+    assert t.kv_run(1, keys) == 0
+    assert t.put_kv(1, 101, [_blk(1)])
+    assert t.kv_run(1, keys) == 1
+
+
+def test_tier_park_is_pinned_and_one_shot():
+    t = HostTier(capacity_bytes=4 * BLK_BYTES)
+    assert t.put_park(7, [_blk(9), _blk(10)])
+    t.put_kv(0, 1, [_blk(1)])
+    t.put_kv(0, 2, [_blk(2)])                # pressure: park entry pinned
+    got = t.take_park(7)
+    np.testing.assert_array_equal(got[0], _blk(9))
+    assert t.take_park(7) is None            # consumed
+    assert t.arena.bytes_resident <= 2 * BLK_BYTES
+
+
+def test_staging_ring_depth_and_accounting():
+    ring = StagingRing(depth=2)
+    for i in range(5):
+        ring.stage(i, [_blk(i)])
+    assert len(ring) == 5                    # nothing lost to the depth cap
+    tags = []
+    while True:
+        item = ring.take()
+        if item is None:
+            break
+        tag, devs = item
+        tags.append(tag)
+        np.testing.assert_array_equal(np.asarray(devs[0]), _blk(tag))
+    assert tags == [0, 1, 2, 3, 4]           # FIFO order preserved
+    st = ring.stats_export()
+    assert st["h2d_staged"] == 5
+    assert st["h2d_staged_bytes"] == 5 * BLK_BYTES
+    assert 0.0 <= st["h2d_overlap_frac"] <= 1.0

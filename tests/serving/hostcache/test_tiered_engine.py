@@ -1,0 +1,274 @@
+"""Host cache tier behind the serving engine (DESIGN.md §13).
+
+Acceptance net: every tiered path — spill-and-restage of evicted prefix
+blocks, arena-parked preemption payloads with dedup'd prompt blocks, and
+recurrent-state snapshot reuse — must emit tokens bitwise-equal to solo
+``PredictiveSampler.generate`` runs, while the tier's counters prove the
+host round-trips actually happened."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import PredictiveSampler
+from repro.models.transformer import TransformerLM
+from repro.serving import Request, ServingEngine
+from repro.serving.blocks import BlockManager
+
+EPS_KEY = jax.random.PRNGKey(9)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo(cfg, params, req, window, max_len):
+    s = PredictiveSampler(cfg, params, window=window, max_len=max_len,
+                          eps_key=EPS_KEY)
+    t, _ = s.generate(jnp.asarray(np.asarray(req.prompt)[None], jnp.int32),
+                      req.new_tokens,
+                      seq_ids=jnp.asarray([req.seq_id], jnp.int32))
+    return np.asarray(t[0, :len(req.prompt) + req.new_tokens])
+
+
+def _assert_all_exact(cfg, params, done, window, max_len):
+    assert done, "no requests completed"
+    for req in done:
+        np.testing.assert_array_equal(
+            req.result, _solo(cfg, params, req, window, max_len),
+            err_msg=f"request {req.uid} diverged from its solo run")
+
+
+def test_blocks_dropped_vs_spilled_accounting():
+    """Evictions split into saved-to-host (spilled) vs lost (dropped) —
+    the tier's effectiveness is unreadable if the two share a counter."""
+    mgr = BlockManager(num_blocks=4, block_size=4)      # 3 usable + sink
+    saved = []
+    mgr.spill_hook = lambda b, key: saved.append(key) or key % 2 == 0
+    for i, b in enumerate(mgr.alloc(3)):
+        mgr.register(b, 100 + i)
+    mgr.release_all(range(1, 4))                        # all cached-free
+    mgr.alloc(3)                         # evicts 100 (saved), 101, 102
+    st = mgr.stats.export()
+    assert saved == [100, 101, 102]
+    assert st["blocks_spilled"] == 2     # keys 100, 102 (hook said True)
+    assert st["blocks_dropped"] == 1     # key 101 declined by the hook
+    assert st["evictions"] == 3
+
+
+def test_spilled_prefix_blocks_restage_from_host(qwen):
+    """Device pool too small to keep a prefix cached across interleaved
+    traffic: eviction spills the blocks D2H; a later same-prefix request
+    misses on device, hits the host tier, and H2D-stages the run back —
+    skipping that prefill — with bitwise-identical tokens."""
+    cfg, params = qwen
+    kw = dict(batch=1, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False, num_blocks=8)
+    rng = np.random.default_rng(11)
+    pre_a = rng.integers(0, cfg.vocab, 8)
+    pre_b = rng.integers(0, cfg.vocab, 9)
+    reqs = [
+        Request(uid=0, prompt=np.concatenate([pre_a, [3]]), new_tokens=8),
+        Request(uid=1, prompt=pre_b, new_tokens=15),   # worst case fills
+        #                                                the 7-block pool,
+        #                                                evicting A's blocks
+        Request(uid=2, prompt=np.concatenate([pre_a, [5]]), new_tokens=8),
+    ]
+
+    eng = ServingEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    m = eng.export_metrics()
+    assert m["blocks_spilled"] >= 2          # A's 2 full blocks went D2H
+    assert m["host_hits"] >= 1
+    assert m["host_staged_blocks"] >= 1      # ...and came back
+    assert reqs[2].prefix_hit_blocks >= 1
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)
+
+    # A/B vs a tier-less engine on identical traffic: the tier must
+    # strictly reduce prefill work (the re-admitted blocks are not recomputed)
+    eng_nt = ServingEngine(cfg, params, **kw, host_cache_mb=0)
+    assert eng_nt.tier is None
+    for r in reqs:
+        eng_nt.submit(Request(uid=r.uid, prompt=r.prompt,
+                              new_tokens=r.new_tokens))
+    eng_nt.run()
+    m_nt = eng_nt.export_metrics()
+    assert m_nt["blocks_dropped"] >= 2       # same evictions, nothing saved
+    assert m["prefill_calls"] < m_nt["prefill_calls"]
+
+
+def test_parked_payload_dedup_counts_arena_bytes(qwen):
+    """Two victims sharing a prompt park into the arena: the shared
+    prompt-hash blocks are stored ONCE (second park pins, not copies), so
+    the second park adds exactly one arena entry (its private payload)."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, batch=2, window_max=4, max_len=64,
+                        eps_key=EPS_KEY, block_size=4, adaptive=False)
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab, 13)          # 3 full shared blocks
+    r0 = Request(uid=0, prompt=prompt, new_tokens=24)
+    r1 = Request(uid=1, prompt=prompt, new_tokens=24)
+    eng.submit(r0)
+    eng.submit(r1)
+    eng.step()
+    assert all(s is not None for s in eng.slots)
+    arena = eng.tier.arena
+    n0, b0 = len(arena), arena.bytes_resident
+    eng.preempt_slot(0)
+    n1, b1 = len(arena), arena.bytes_resident
+    eng.preempt_slot(1)
+    n2, b2 = len(arena), arena.bytes_resident
+    assert n1 - n0 >= 4            # 3 shared KV blocks + 1 park payload
+    assert n2 - n1 == 1            # dedup: ONLY the park payload is new
+    assert b2 - b1 < b1 - b0       # second park is strictly cheaper
+    done = eng.run()
+    assert eng.metrics.preemptions == 2 and eng.metrics.resumes == 2
+    assert len(done) == 2
+    _assert_all_exact(cfg, params, done, window=4, max_len=64)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "jamba-1.5-large-398b"])
+def test_recurrent_prefix_reuse_via_snapshots(arch):
+    """Recurrent archs get prefix hits for the first time: a shared system
+    prompt's boundary snapshots are captured on the cold run and restored
+    on the warm one (host_hits > 0), with tokens bitwise-equal to a cold
+    engine and to solo. rwkv6 = pure recurrent (no KV at all); jamba =
+    attention+mamba hybrid (KV blocks and the ssm state row must agree on
+    the restore boundary)."""
+    cfg = get_config(arch, reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    kw = dict(batch=1, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False)
+    rng = np.random.default_rng(13)
+    system = rng.integers(0, cfg.vocab, 13)          # 3 snapshot boundaries
+    r0 = Request(uid=0, prompt=system, new_tokens=8)
+    r1 = Request(uid=1, prompt=np.concatenate([system, [7, 2]]),
+                 new_tokens=8)
+
+    eng = ServingEngine(cfg, params, **kw)
+    assert eng.rec_prefix and not eng.kv_prefix
+    eng.submit(r0)
+    eng.run()
+    assert eng.metrics.rec_snapshot_captures >= 3    # boundaries 4, 8, 12
+    eng.submit(r1)
+    done = eng.run()
+    m = eng.export_metrics()
+    assert eng.metrics.rec_snapshot_restores >= 1
+    assert m["host_hits"] > 0
+    assert r1.prefix_hit_blocks >= 3                 # full shared prefix
+    _assert_all_exact(cfg, params, [r0] + done, window=4, max_len=48)
+
+    # warm-path tokens must match a cold engine serving the same request
+    cold = ServingEngine(cfg, params, **kw)
+    rc = Request(uid=1, prompt=r1.prompt, new_tokens=8)
+    cold.submit(rc)
+    cold.run()
+    assert cold.metrics.rec_snapshot_restores == 0
+    np.testing.assert_array_equal(r1.result, rc.result)
+
+
+def _interleaved_tiered(cfg, params, plan, batch=2, max_len=64, **extra):
+    """Admit/step/preempt/migrate interleavings over a deliberately tiny
+    device pool (evictions -> spills on nearly every admission) and an
+    engine-default tier budget (shrinkable via REPRO_HOST_CACHE_MB)."""
+    eng = ServingEngine(cfg, params, batch=batch, window_max=4,
+                        max_len=max_len, eps_key=EPS_KEY, block_size=4,
+                        adaptive=False, num_blocks=12, **extra)
+    uid = 0
+    for op, arg in plan:
+        if op == "submit":
+            L_p, new = arg
+            rng = np.random.default_rng(100 + uid)
+            eng.submit(Request(uid=uid,
+                               prompt=rng.integers(0, cfg.vocab, L_p),
+                               new_tokens=new))
+            uid += 1
+        elif op == "step":
+            if eng.queue or any(s is not None for s in eng.slots):
+                eng.step()
+        elif op == "preempt":
+            occ = [b for b in range(batch) if eng.slots[b] is not None]
+            if occ:
+                eng.preempt_slot(occ[arg % len(occ)])
+        elif op == "migrate":
+            occ = [b for b in range(batch) if eng.slots[b] is not None]
+            free = [b for b in range(batch) if eng.slots[b] is None]
+            if occ and free:
+                eng.migrate_slot(occ[arg % len(occ)],
+                                 free[arg % len(free)])
+    done = eng.run()
+    assert len(done) == uid
+    for req in done:
+        np.testing.assert_array_equal(
+            req.result, _solo(cfg, params, req, 4, max_len),
+            err_msg=f"request {req.uid} diverged from its solo run")
+    return eng
+
+
+PLAN = [("submit", (3, 8)), ("submit", (9, 6)), ("step", None),
+        ("preempt", 0), ("submit", (9, 10)), ("step", None),
+        ("migrate", 1), ("step", None), ("submit", (7, 5)),
+        ("preempt", 1), ("step", None), ("submit", (3, 6)),
+        ("preempt", 0), ("migrate", 0)]
+
+
+def test_interleaved_tiered_schedule_exact(qwen):
+    """Deterministic always-run form: slot churn + arena parks + spills +
+    resumes over the tiny pool stay bitwise-exact."""
+    cfg, params = qwen
+    eng = _interleaved_tiered(cfg, params, PLAN)
+    assert eng.metrics.preemptions >= 1
+    m = eng.export_metrics()
+    assert m["host_puts"] >= 1           # the tier actually saw traffic
+
+
+def test_interleaved_tiered_tiny_budget_exact(qwen):
+    """Same schedule under a ~30 KiB arena: rejections and forced arena
+    evictions (parks fall back to raw payloads, spills drop) must degrade
+    capacity only — never correctness."""
+    cfg, params = qwen
+    eng = _interleaved_tiered(cfg, params, PLAN, host_cache_mb=0.03)
+    assert eng.tier is not None
+    assert eng.tier.arena.capacity_bytes < 64 * 1024
+
+
+def test_interleaved_tiered_schedules_hypothesis(qwen):
+    """Property form: random interleavings of admit/step/preempt/migrate
+    over the tiny tiered pool stay bitwise-equal to solo generate."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = qwen
+
+    op = st.one_of(
+        st.tuples(st.just("submit"),
+                  st.tuples(st.integers(1, 9), st.integers(2, 8))),
+        st.tuples(st.just("step"), st.none()),
+        st.tuples(st.just("preempt"), st.integers(0, 3)),
+        st.tuples(st.just("migrate"), st.integers(0, 3)),
+    )
+
+    @hyp.settings(max_examples=6, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(st.lists(op, min_size=2, max_size=8))
+    def run_plan(plan):
+        if not any(p[0] == "submit" for p in plan):
+            plan = [("submit", (2, 4))] + plan
+        _interleaved_tiered(cfg, params, plan)
+
+    run_plan()
+
+
+def test_serve_help_lists_host_cache_flags(capsys):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as exc:
+        serve.main(["--help"])
+    assert exc.value.code == 0
+    out = capsys.readouterr().out
+    assert "--host-cache-mb" in out
+    assert "--no-host-cache" in out
