@@ -26,7 +26,7 @@ from repro.data.synthetic import repetitive_tokens, synthetic_tokens
 from repro.engine import ContinuousBatcher, PredictiveSampler, Request
 from repro.models.losses import lm_loss
 from repro.models.transformer import TransformerLM
-from repro.serving import ServingEngine, ServingTopology
+from repro.serving import FaultPlan, ServingEngine, ServingTopology
 
 
 def train_tiny_lm(cfg, steps=300, seed=0, gen=synthetic_tokens):
@@ -159,6 +159,10 @@ def run(fast: bool = True):
     # host cache tier: spilled prefixes re-admitted from the host arena
     # vs dropped outright (DESIGN.md §13)
     rows.extend(host_tier(cfg, params_rep))
+
+    # fault isolation: scripted FaultPlan vs fault-free on identical
+    # traffic — healthy requests bitwise equal, counters visible (§14)
+    rows.extend(chaos(cfg, params_rep))
     return rows
 
 
@@ -262,8 +266,7 @@ def _round_memory(eng, W: int = 8) -> dict:
     (arguments + outputs + temps - donation aliasing) and the aliased
     bytes the donation actually established."""
     fn = eng._round_loop_fn(W, eng.rounds_per_sync)
-    args = (eng.params, eng.paged, eng._tables_device(), eng.tokens, eng.n,
-            eng.cand, eng.seq_ids, eng._target_device())
+    args = eng._round_args()
     ma = fn.lower(*args).compile().memory_analysis()
     if ma is None:                       # backend without memory analysis
         return {"live_bytes": -1, "alias_bytes": -1}
@@ -403,8 +406,7 @@ def fused_writeback(cfg, params=None, seed: int = 23):
                             adaptive=False, prefix_cache=False,
                             paged_attention=(mode == "paged"))
         fn = eng._round_loop_fn(4, eng.rounds_per_sync)
-        args = (eng.params, eng.paged, eng._tables_device(), eng.tokens,
-                eng.n, eng.cand, eng.seq_ids, eng._target_device())
+        args = eng._round_args()
         jaxpr = fn.trace(*args).jaxpr
         c = count_jaxpr_primitives(jaxpr, ("scatter", "pallas_call"),
                                    min_rank=0)
@@ -717,8 +719,7 @@ def host_tier(cfg, params, families: int = 4, blocks_per_prefix: int = 4,
             # hot-path gate: the tier is host-side only — the compiled
             # round loop keeps zero pool-ranked scatters (§11 invariant)
             fn = eng._round_loop_fn(4, eng.rounds_per_sync)
-            args = (eng.params, eng.paged, eng._tables_device(), eng.tokens,
-                    eng.n, eng.cand, eng.seq_ids, eng._target_device())
+            args = eng._round_args()
             row["pool_scatter_eqns"] = count_jaxpr_primitives(
                 fn.trace(*args).jaxpr, ("scatter",), min_rank=3)["scatter"]
         rows.append(row)
@@ -732,6 +733,93 @@ def host_tier(cfg, params, families: int = 4, blocks_per_prefix: int = 4,
                 < by["no-tier"]["prefill_calls"]), rows
         assert by["tiered"]["host_staged_blocks"] >= 1, rows
         assert by["tiered"]["pool_scatter_eqns"] == 0, rows
+    return rows
+
+
+def chaos(cfg, params, seed: int = 47, assert_bar: bool = True):
+    """Fault-isolation scenario (DESIGN.md §14): identical traffic through
+    a fault-free engine and one under a scripted :class:`FaultPlan` — an
+    injected block-allocation failure at the first admission, arena
+    corruption + put rejections + staging drops at seeded rates, one
+    NaN-poisoned noise stream, one mid-flight cancel — with a retry budget
+    of 1.
+
+    Acceptance bar (asserted): every healthy request (neither poisoned nor
+    cancelled) emits tokens bitwise equal to the fault-free run; the
+    poisoned request recovers on a fresh noise stream; nothing fails
+    permanently; the §14 failure counters (``requests_failed``,
+    ``requests_cancelled``, ``checksum_failures``, ``tier_tripped``,
+    ``retries``) are published in the rows."""
+    POISONED, CANCELLED = 2, 4
+    kw = dict(batch=2, window_max=4, max_len=64, block_size=4,
+              eps_key=jax.random.PRNGKey(3), adaptive=False,
+              host_cache_mb=8)
+
+    def traffic(eng, cancel_uid=None):
+        rng = np.random.default_rng(seed)
+        for i in range(5):
+            eng.submit(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(4, 10))),
+                new_tokens=int(rng.integers(10, 16))))
+        eng.step()
+        # park one running slot so resume crosses the (corruptible) arena
+        occ = [b for b in range(eng.B) if eng.slots[b] is not None]
+        eng.preempt_slot(occ[0])
+        if cancel_uid is not None:
+            assert eng.cancel(cancel_uid)
+        t0 = time.time()
+        done = eng.run()
+        return done, time.time() - t0
+
+    plan = FaultPlan(schedule={"alloc": (0,)},
+                     rates={"arena_corrupt": 0.75, "arena_put": 0.25,
+                            "stage_drop": 0.5},
+                     poison_streams=(POISONED,), seed=seed)
+    rows, results = [], {}
+    for mode, faults, cancel_uid in (("fault-free", FaultPlan(), None),
+                                     ("chaos", plan, CANCELLED)):
+        eng = ServingEngine(cfg, params, faults=faults, request_retries=1,
+                            **kw)
+        done, dt = traffic(eng, cancel_uid)
+        m = eng.export_metrics()
+        results[mode] = {r.uid: r for r in done}
+        rows.append({
+            "table": "serving", "scenario": "chaos", "mode": mode,
+            "backend": jax.default_backend(),
+            "requests": len(done),
+            "completed_ok": sum(1 for r in done if r.ok),
+            "time_s": round(dt, 3),
+            "faults_injected": m["faults_injected"],
+            "requests_failed": m["requests_failed"],
+            "requests_cancelled": m["requests_cancelled"],
+            "retries": m["retries"],
+            "checksum_failures": m["checksum_failures"],
+            "tier_tripped": m["tier_tripped"],
+            "staging_errors": m["staging_errors"],
+            "resume_recomputes": m["resume_recomputes"],
+            "preemptions": m["preemptions"]})
+    # §14 exactness: healthy requests are bitwise those of the clean run
+    for uid, ref in results["fault-free"].items():
+        if uid in (POISONED, CANCELLED):
+            continue
+        got = results["chaos"][uid]
+        assert got.ok and ref.ok, (uid, got.error, ref.error)
+        assert (got.result == ref.result).all(), \
+            f"chaos changed healthy request {uid}'s tokens"
+    if assert_bar:
+        by = {r["mode"]: r for r in rows}
+        c = by["chaos"]
+        assert by["fault-free"]["faults_injected"] == 0, rows
+        assert c["faults_injected"] >= 2, rows
+        # alloc replay (same stream) + quarantine requeue (fresh stream)
+        assert c["retries"] >= 2, rows
+        assert c["requests_cancelled"] == 1, rows
+        assert c["requests_failed"] == 0, rows      # retry budget recovered
+        assert results["chaos"][POISONED].ok, \
+            results["chaos"][POISONED].error
+        assert c["checksum_failures"] >= 1, rows
     return rows
 
 

@@ -157,7 +157,8 @@ class PredictiveSampler:
 def verify_round(params, cfg, eps_fn, state: GenState, target_len,
                  use_forecast_heads: bool = False,
                  use_verify_kernel: bool = False,
-                 paged: Optional[PagedView] = None):
+                 paged: Optional[PagedView] = None,
+                 poison=None):
     """One verify round over ``state``. W is taken from
     ``state.cand.shape[1]`` so callers may vary the window round-to-round
     (adaptive speculation): candidates only gate acceptance, never token
@@ -167,11 +168,21 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     block-pool pytree, decoded in place through the block tables (no dense
     attention K/V view is ever materialized; DESIGN.md §9).
 
+    ``poison`` (B,) int32, optional, is the serving engine's fault-
+    injection seam (DESIGN.md §14): rows with ``poison > 0`` have their
+    logits NaN-replaced *post-model*, so K/V written to the cache stay
+    finite and row-local — a poisoned row degrades only itself while the
+    quarantine health flag (below) trips for it.
+
     Returns ``(new_state, row_stats)`` where ``row_stats`` is the packed
-    (B, 3) int32 per-row stats vector ``[accepted, done, new_length]`` —
-    everything a driving loop needs to decide continuation and everything a
-    host needs per sync, without pulling ``n``/``cand``/``tokens`` (the
-    device-resident round loop ABI, DESIGN.md §11)."""
+    (B, 4) int32 per-row stats vector ``[accepted, done, new_length,
+    nonfinite]`` — everything a driving loop needs to decide continuation
+    and everything a host needs per sync, without pulling
+    ``n``/``cand``/``tokens`` (the device-resident round loop ABI,
+    DESIGN.md §11). The ``nonfinite`` health column is always computed
+    (one cheap ``isfinite`` reduce next to the vocab matmul): any NaN/inf
+    in a row's logits — poisoned or genuinely numerically broken — reports
+    1 there, the engine's quarantine signal (§14)."""
     B, W = state.cand.shape
     max_len = state.tokens.shape[1]
     active = state.n < target_len
@@ -183,13 +194,18 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     else:
         logits, h, new_cache = TransformerLM.decode_window_paged(
             params, cfg, state.cand, state.cache, paged, cache_len)
+    logits = logits.astype(jnp.float32)
+    if poison is not None:
+        logits = jnp.where((poison > 0)[:, None, None], jnp.nan, logits)
+    nonfinite = 1 - jnp.all(jnp.isfinite(logits),
+                            axis=(1, 2)).astype(jnp.int32)
     out_pos = state.n[:, None] + jnp.arange(W)[None, :]   # sampled positions
     eps = eps_fn(state.seq_ids, out_pos)
     if use_verify_kernel:
         from repro.kernels.spec_verify.ops import spec_verify
-        out = spec_verify(logits.astype(jnp.float32), eps)  # (B, W)
+        out = spec_verify(logits, eps)                    # (B, W)
     else:
-        out = reparam_argmax(logits.astype(jnp.float32), eps)
+        out = reparam_argmax(logits, eps)
 
     # accept length: slot t+1 valid while candidate c_{n+t} matched o_t
     match = state.cand[:, 1:] == out[:, :-1]               # (B, W-1)
@@ -270,5 +286,6 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
         state.seq_ids,
     )
     row_stats = jnp.stack(
-        [a, (n_new >= target_len).astype(jnp.int32), n_new], axis=1)
+        [a, (n_new >= target_len).astype(jnp.int32), n_new, nonfinite],
+        axis=1)
     return new_state, row_stats

@@ -31,7 +31,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.reparam import reparam_argmax
 from repro.models.transformer import TransformerLM
-from repro.serving import Request, ServingEngine, ServingTopology
+from repro.serving import (FaultPlan, Request, ServingEngine,
+                           ServingTopology)
 
 
 def make_serve_step(cfg, window: int = 8, low_memory: bool = False):
@@ -148,6 +149,24 @@ def main(argv=None):
                     help="disable the host cache tier (evicted prefix "
                          "blocks drop, parked payloads stay raw host "
                          "copies, recurrent archs never prefix-hit)")
+    ap.add_argument("--max-request-seconds", type=float, default=None,
+                    metavar="S",
+                    help="per-request wall-time bound (DESIGN.md §14): a "
+                         "request running past this fails with a "
+                         "structured 'timeout' error instead of holding "
+                         "its slot forever")
+    ap.add_argument("--request-retries", type=int, default=0,
+                    help="re-admissions granted after a retryable "
+                         "per-request failure (quarantined row, admission "
+                         "fault) before the request fails for good")
+    ap.add_argument("--no-integrity-checks", action="store_true",
+                    help="skip host-tier checksum stamping/verification "
+                         "(DESIGN.md §14; corruption then goes undetected "
+                         "— A/B for the checksum cost)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault-injection plan, e.g. "
+                         "'seed=7,alloc=@2;5,arena_corrupt=0.05,poison=3' "
+                         "(default: REPRO_FAULT_PLAN env)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -169,7 +188,12 @@ def main(argv=None):
                            preempt_floor=args.preempt_floor,
                            rebalance=not args.no_rebalance,
                            host_cache_mb=(0 if args.no_host_cache
-                                          else args.host_cache_mb))
+                                          else args.host_cache_mb),
+                           max_request_seconds=args.max_request_seconds,
+                           request_retries=args.request_retries,
+                           integrity_checks=not args.no_integrity_checks,
+                           faults=(FaultPlan.parse(args.fault_plan)
+                                   if args.fault_plan else None))
     if topo.mesh is not None:
         print(f"serving on {topo}")
     rng = np.random.default_rng(0)

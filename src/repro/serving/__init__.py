@@ -8,13 +8,18 @@ round step); ``ShardedBlockPool`` routes admissions by pool pressure and
 carries the sequence-migration block accounting; under saturation the
 engine schedules with admission lookahead, priority preemption (host-side
 parking + bitwise-exact resume, ``ParkedSequence``), and shard rebalancing
-(§12).
+(§12); fault isolation (§14) quarantines failures per request
+(``RequestError``), integrity-checks the host cache tiers behind a
+``CircuitBreaker``, and scripts every failure path deterministically
+through a ``FaultPlan``.
 """
 from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
                                      prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import BlockManager, ShardedBlockPool, chain_hashes
 from repro.serving.engine import ParkedSequence, ServingEngine
+from repro.serving.faults import (CircuitBreaker, FaultPlan, RequestError,
+                                  StagingFault)
 from repro.serving.hostcache import HostArena, HostTier, StagingRing
 from repro.serving.metrics import EngineMetrics, percentile
 from repro.serving.topology import ServingTopology
@@ -23,4 +28,5 @@ __all__ = ["AdmissionQueue", "Request", "prefill_chunks", "pow2_at_most",
            "AdaptiveWindowController", "BlockManager", "ShardedBlockPool",
            "chain_hashes", "ParkedSequence", "ServingEngine",
            "EngineMetrics", "percentile", "ServingTopology",
-           "HostArena", "HostTier", "StagingRing"]
+           "HostArena", "HostTier", "StagingRing",
+           "CircuitBreaker", "FaultPlan", "RequestError", "StagingFault"]

@@ -40,6 +40,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serving.faults import RequestError
+
 
 @dataclass
 class Request:
@@ -50,6 +52,8 @@ class Request:
     deadline: Optional[float] = None   # latency SLO seconds from submit
     noise_seed: Optional[int] = None   # noise-stream id; defaults to uid
     result: Optional[np.ndarray] = None
+    error: Optional[RequestError] = None  # structured failure (DESIGN.md §14)
+    retries: int = 0             # re-admissions consumed after failures
     calls_used: int = 0          # verify rounds this request participated in
     prefill_calls: int = 0       # row-local prefill chunks paid at admission
     prefix_hit_blocks: int = 0   # prompt blocks served from the prefix cache
@@ -66,6 +70,11 @@ class Request:
     @property
     def seq_id(self) -> int:
         return self.uid if self.noise_seed is None else self.noise_seed
+
+    @property
+    def ok(self) -> bool:
+        """Finished successfully (result delivered, no structured error)."""
+        return self.error is None and self.result is not None
 
     @property
     def latency(self) -> float:

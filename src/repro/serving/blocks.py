@@ -96,6 +96,10 @@ class BlockManager:
         # Returns True iff the contents were preserved host-side (counted
         # ``spilled``); False/None drops them outright (``dropped``).
         self.spill_hook = None
+        # fault-injection seam (DESIGN.md §14): a no-arg callable consulted
+        # at the top of every ``alloc`` call; True raises MemoryError as if
+        # the pool were exhausted (serving/faults.py ``alloc`` seam)
+        self.fault_hook = None
 
     # -- capacity ----------------------------------------------------------
     def available(self) -> int:
@@ -107,6 +111,9 @@ class BlockManager:
     # -- allocation --------------------------------------------------------
     def alloc(self, n: int = 1) -> list[int]:
         """Take ``n`` fresh private blocks (refcount 1, no hash)."""
+        if self.fault_hook is not None and self.fault_hook():
+            raise MemoryError(
+                "injected block allocation failure (FaultPlan seam 'alloc')")
         if self.available() < n:
             raise MemoryError(
                 f"block pool exhausted: want {n}, have {self.available()}")
@@ -258,6 +265,13 @@ class ShardedBlockPool:
         returns the hook (or None) for that shard's sub-pool."""
         for s, m in enumerate(self.shards):
             m.spill_hook = make_hook(s)
+
+    def set_fault_hook(self, hook) -> None:
+        """Install one shared allocation fault hook on every sub-pool
+        (DESIGN.md §14; host-side calls are sequential, so a shared
+        FaultPlan counter stays deterministic across shards)."""
+        for m in self.shards:
+            m.fault_hook = hook
 
     # -- aggregate capacity ------------------------------------------------
     def available(self, shard: Optional[int] = None) -> int:

@@ -67,6 +67,20 @@ slot and blocks immediately. What's new over the dense batcher:
   one table-row re-upload + per-slot state move — bit-exact by
   construction, since tokens and noise streams are placement-independent)
   when one shard's pool is exhausted while another has headroom.
+* **Fault isolation** (DESIGN.md §14) — the engine fails *per request*,
+  never per process: submit-time validation rejects malformed requests with
+  a structured ``RequestError``; a per-row health flag folded into the
+  packed sync stats (non-finite logits, stuck progress) quarantines only
+  the offending slot — its blocks are released, the error attached, and
+  every other row of the same batch stays bitwise identical to a fault-free
+  run (poison is injected at the LOGITS level, so cache contents stay
+  finite and row-local); host-side faults (allocation failures, corrupt or
+  tripped host-tier entries, staging drops) unwind to the request that hit
+  them, with bounded retries (``request_retries``) and fresh noise streams
+  for quarantined rows; ``cancel(uid)`` removes a request wherever it
+  currently lives (queued, parked, running); ``max_request_seconds`` /
+  ``max_request_rounds`` bound runaway requests. All of it is scriptable
+  through a deterministic ``FaultPlan`` (``repro.serving.faults``).
 * **Telemetry** — per-request latency/accept/ARM-call counters, deadline
   (SLO) misses — including expiries detected while still queued/parked —
   preemption/migration/aging counters, and engine gauges exported as plain
@@ -96,6 +110,7 @@ from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
                                      prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import ShardedBlockPool, chain_hashes
+from repro.serving.faults import CircuitBreaker, FaultPlan, RequestError
 from repro.serving.metrics import EngineMetrics
 from repro.serving.topology import ServingTopology
 
@@ -154,7 +169,12 @@ class ServingEngine:
                  lookahead: int = 8, max_head_bypass: int = 16,
                  preempt: bool = True, preempt_floor: float = 0.75,
                  rebalance: bool = True,
-                 host_cache_mb: Optional[float] = None, host_tier=None):
+                 host_cache_mb: Optional[float] = None, host_tier=None,
+                 request_retries: int = 0,
+                 max_request_seconds: Optional[float] = None,
+                 max_request_rounds: Optional[int] = None,
+                 integrity_checks: bool = True,
+                 faults: Optional[FaultPlan] = None):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         assert rounds_per_sync >= 1, rounds_per_sync
@@ -198,6 +218,15 @@ class ServingEngine:
         self.preempt = preempt
         self.preempt_floor = preempt_floor
         self.rebalance = rebalance
+        # fault isolation (DESIGN.md §14): bounded re-admission after
+        # retryable failures, runaway-request bounds, and the deterministic
+        # fault-injection plan (defaults to REPRO_FAULT_PLAN — the CI chaos
+        # job's hook — so production code paths need no test shims)
+        assert request_retries >= 0, request_retries
+        self.request_retries = request_retries
+        self.max_request_seconds = max_request_seconds
+        self.max_request_rounds = max_request_rounds
+        self.faults = faults if faults is not None else FaultPlan.from_env()
         self.eps_fn = eps_fn if eps_fn is not None else make_eps_fn(
             eps_key if eps_key is not None else jax.random.PRNGKey(0),
             cfg.vocab)
@@ -235,8 +264,14 @@ class ServingEngine:
             mb = host_cache_mb
             if mb is None:
                 mb = float(os.environ.get("REPRO_HOST_CACHE_MB", 256))
-            self.tier = (self.topo.host_tier(int(mb * 2 ** 20))
-                         if mb > 0 else None)
+            self.tier = (self.topo.host_tier(
+                int(mb * 2 ** 20), integrity=integrity_checks,
+                faults=self.faults, breaker=CircuitBreaker())
+                if mb > 0 else None)
+        if self.faults is not None:
+            # the 'alloc' seam: injected block-allocation failures surface
+            # as the MemoryError a genuinely exhausted pool would raise
+            self.pool.set_fault_hook(lambda: self.faults.fire("alloc"))
 
         # prefix-cache enablement is split per state kind: attention KV
         # blocks are paged and shareable as before (``kv_prefix``), while a
@@ -280,11 +315,17 @@ class ServingEngine:
         self.cand = self.topo.put_batch(jnp.zeros((batch, window_max),
                                                   jnp.int32))
         self.seq_ids = self.topo.put_batch(jnp.zeros((batch,), jnp.int32))
+        # per-slot poison mask (§14): rows whose noise stream is scripted in
+        # ``faults.poison_streams`` get their verify-round logits
+        # NaN-replaced on device — the injection point of the quarantine
+        # path. All zeros (the common case) is a bit-exact no-op.
+        self.poison = np.zeros(batch, np.int32)
         # cached device copies of host-owned admission state; invalidated
         # only when the host actually mutates them (admission, slot clear,
         # table growth) instead of re-uploading every round
         self._tables_dev = None
         self._target_dev = None
+        self._poison_dev = None
 
         self._round_fns: dict[tuple[int, int], callable] = {}
         self._prefill_fns: dict[int, callable] = {}
@@ -302,11 +343,47 @@ class ServingEngine:
         """Any prefix reuse active (device KV and/or tiered recurrent)."""
         return self.kv_prefix or self.rec_prefix
 
-    def submit(self, req: Request):
-        assert len(req.prompt) >= 1
-        assert len(req.prompt) + req.new_tokens <= self.max_len, \
-            (len(req.prompt), req.new_tokens, self.max_len)
+    def _validate(self, req: Request) -> Optional[RequestError]:
+        """Submit-time validation (DESIGN.md §14): reject malformed or
+        unservable requests *before* they own a slot, with a structured
+        reason — never an assert five layers down. Token range is checked
+        on VALUES (prompts arrive as any integral-valued array; the engine
+        casts to int32 at admission)."""
+        prompt = np.asarray(req.prompt)
+        if prompt.size < 1:
+            return RequestError("empty_prompt", "prompt holds no tokens")
+        if req.new_tokens <= 0:
+            return RequestError("bad_new_tokens",
+                                f"new_tokens={req.new_tokens}")
+        if prompt.size + req.new_tokens > self.max_len:
+            return RequestError(
+                "too_long", f"{prompt.size} prompt + {req.new_tokens} new "
+                f"> max_len={self.max_len}")
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab:
+            return RequestError(
+                "token_out_of_range",
+                f"tokens span [{lo}, {hi}], vocab={self.cfg.vocab}")
+        cap = self.pool.blocks_per_shard - 1      # minus the reserved sink
+        if self._worst_case_blocks(req) > cap:
+            return RequestError(
+                "over_capacity", f"worst case {self._worst_case_blocks(req)}"
+                f" blocks > pool capacity {cap}/shard")
+        return None
+
+    def submit(self, req: Request) -> bool:
+        """Validate and enqueue. Returns False — with ``req.error`` set and
+        the request delivered through ``done`` — on rejection."""
+        err = self._validate(req)
+        if err is not None:
+            req.error = err
+            req.submit_time = time.monotonic()
+            req.finish_time = req.submit_time
+            self.metrics.requests_rejected += 1
+            self.done.append(req)
+            return False
         self.queue.push(req)
+        return True
 
     # -- jitted steps -------------------------------------------------------
     def _round_loop_fn(self, W: int, k: int):
@@ -321,9 +398,15 @@ class ServingEngine:
         A ``lax.while_loop`` re-runs the body until every local row is done
         or ``k`` rounds have run (the window-retune boundary): the host
         syncs one small packed stats array per *loop*, not per round —
-        (R, 4) int32 ``[accepted, rounds_active, new_length, loop_rounds]``
-        (DESIGN.md §11). Inactive rows are no-ops inside the loop, so extra
-        rounds never change tokens.
+        (R, 5) int32 ``[accepted, rounds_active, new_length, loop_rounds,
+        bad]`` (DESIGN.md §11, §14). ``bad`` is the sticky per-row health
+        flag the quarantine path reads: bit 0 = the row produced non-finite
+        logits while active (poisoned stream or genuine numeric blowup),
+        bit 1 = the row made no progress over an active round. Rows gone
+        bad stop counting toward the loop condition — NaNs are row-local
+        (logits-level injection; cache contents stay finite), so freezing a
+        bad row leaves every healthy row bitwise identical to a fault-free
+        run, and inactive rows remain no-ops as before.
 
         Under a mesh topology the whole loop runs shard_map-manual over
         "data": each shard sees its local rows, its local tables, and its
@@ -336,7 +419,8 @@ class ServingEngine:
         if (W, k) not in self._round_fns:
             cfg = self.cfg
 
-            def fn(params, paged, tables, tokens, n, cand, seq_ids, target):
+            def fn(params, paged, tables, tokens, n, cand, seq_ids, target,
+                   poison):
                 R = tokens.shape[0]          # rows on this shard (B/D)
                 rows = jnp.arange(R)
 
@@ -356,7 +440,8 @@ class ServingEngine:
                     st2, rstats = verify_round(
                         params, cfg, self.eps_fn, st, target,
                         use_forecast_heads=self.use_forecast_heads,
-                        use_verify_kernel=self.use_verify_kernel, paged=pv)
+                        use_verify_kernel=self.use_verify_kernel, paged=pv,
+                        poison=poison)
                     if self.paged_attention:
                         paged2 = st2.cache
                     else:
@@ -368,35 +453,49 @@ class ServingEngine:
                     return paged2, st2.tokens, st2.n, cand2, rstats
 
                 def cond(carry):
-                    _, _, n_c, _, _, _, r = carry
-                    return (r < k) & jnp.any(n_c < target)
+                    _, _, n_c, _, _, _, bad, r = carry
+                    return (r < k) & jnp.any((n_c < target) & (bad == 0))
 
                 def body(carry):
-                    paged_c, tokens_c, n_c, cand_c, acc, act_rounds, r = \
-                        carry
+                    paged_c, tokens_c, n_c, cand_c, acc, act_rounds, bad, \
+                        r = carry
                     active = (n_c < target).astype(jnp.int32)
+                    n_prev = n_c
                     paged_c, tokens_c, n_c, cand_c, rstats = one_round(
                         paged_c, tokens_c, n_c, cand_c)
-                    # consume the §11 per-round stats ABI: col 0 = accepted
+                    # consume the §11 per-round stats ABI: col 0 = accepted,
+                    # col 3 = non-finite logits; sticky health bits (§14)
+                    stuck = active * (n_c == n_prev).astype(jnp.int32)
+                    bad = bad | (active * rstats[:, 3]) | (stuck << 1)
                     return (paged_c, tokens_c, n_c, cand_c,
-                            acc + rstats[:, 0], act_rounds + active, r + 1)
+                            acc + rstats[:, 0], act_rounds + active, bad,
+                            r + 1)
 
                 init = (paged, tokens, n, cand, jnp.zeros((R,), jnp.int32),
+                        jnp.zeros((R,), jnp.int32),
                         jnp.zeros((R,), jnp.int32), jnp.zeros((), jnp.int32))
-                (paged2, tokens2, n2, cand2, acc, act_rounds, r) = \
+                (paged2, tokens2, n2, cand2, acc, act_rounds, bad, r) = \
                     jax.lax.while_loop(cond, body, init)
                 stats = jnp.stack(
                     [acc, act_rounds, n2,
-                     jnp.broadcast_to(r, (R,))], axis=1)
+                     jnp.broadcast_to(r, (R,)), bad], axis=1)
                 return paged2, tokens2, n2, cand2, stats
 
             wrapped = self.topo.wrap_round(fn, self._paged_specs,
-                                           n_batch_in=6, n_batch_out=4)
+                                           n_batch_in=7, n_batch_out=4)
             # donate pool + tokens/n/cand (dead after the loop); tables,
             # seq_ids and target are cached host-owned uploads — kept alive
             donate = (1, 3, 4, 5) if self.donate else ()
             self._round_fns[(W, k)] = jax.jit(wrapped, donate_argnums=donate)
         return self._round_fns[(W, k)]
+
+    def _round_args(self) -> tuple:
+        """Positional args of the jitted round loop, in ABI order — the one
+        place that order is written down (tests and benches that drive the
+        round fn directly build their calls through this)."""
+        return (self.params, self.paged, self._tables_device(), self.tokens,
+                self.n, self.cand, self.seq_ids, self._target_device(),
+                self._poison_device())
 
     def _prefill_fn(self, C: int):
         """Row-local chunked prefill. Runs as a plain (GSPMD) jit even under
@@ -512,6 +611,9 @@ class ServingEngine:
         self.n_host[b] = 1
         self._tables_dev = None
         self._target_dev = None
+        if self.poison[b]:
+            self.poison[b] = 0
+            self._poison_dev = None
         self.tokens = self.tokens.at[b].set(0)
         self.n = self.n.at[b].set(1)
         self.cand = self.cand.at[b].set(0)
@@ -534,6 +636,19 @@ class ServingEngine:
             self._target_dev = self.topo.put_batch(
                 self.target.astype(np.int32))
         return self._target_dev
+
+    def _poison_device(self):
+        if self._poison_dev is None:
+            self._poison_dev = self.topo.put_batch(self.poison)
+        return self._poison_dev
+
+    def _set_poison(self, b: int, req: Request):
+        """Refresh slot ``b``'s poison-mask entry for its new occupant."""
+        v = int(self.faults is not None
+                and req.seq_id in self.faults.poison_streams)
+        if int(self.poison[b]) != v:
+            self.poison[b] = v
+            self._poison_dev = None
 
     # -- host cache tier plumbing (DESIGN.md §13) ----------------------------
     def _collect_block_payload(self, gids) -> list:
@@ -623,7 +738,15 @@ class ServingEngine:
         The run is pinned first so the block allocations below — whose
         evictions spill INTO the same arena — cannot evict it mid-flight;
         a pin that fails truncates the run and prefill covers the rest.
-        Returns the number of blocks staged."""
+
+        Partial failure (DESIGN.md §14): a staging run that dies mid-ring —
+        an injected/real ``StagingFault``, an allocation failure, a corrupt
+        entry read — must leave NOTHING behind: the ring is cleared so the
+        next caller cannot ``take()`` uploads staged for this slot's table,
+        and only blocks that completed the merge+register pair count as
+        staged; everything short of that is rewritten by prefill (staging
+        is a pure optimization, truncation is always safe). Returns the
+        number of blocks staged."""
         shard = self.topo.shard_of_slot(b, self.B)
         off = self._table_offset(b)
         ring = self.tier.staging
@@ -638,6 +761,8 @@ class ServingEngine:
                 b, (pos0 + len(pinned)) * self.block_size)
             for j, key in enumerate(pinned):
                 rows = self.tier.get_kv(shard, key)   # counts the host hit
+                if rows is None:     # corrupt/tripped mid-run: truncate
+                    break
                 ring.stage((self.owned[b][pos0 + j], key), rows)
                 if len(ring) >= ring.depth:           # drain behind the ring
                     (blk, k2), devs = ring.take()
@@ -652,6 +777,12 @@ class ServingEngine:
                 self._merge_block_rows(blk + off, devs)
                 mgr.register(blk, k2)
                 staged += 1
+        except Exception:
+            # drop every in-flight upload (staged-but-unmerged blocks are
+            # rewritten by prefill — `staged` only counts completed merges)
+            ring.clear()
+            self.metrics.staging_errors += 1
+            self.tier.record_failure()
         finally:
             for key in pinned:
                 self.tier.unpin_kv(shard, key)
@@ -774,12 +905,16 @@ class ServingEngine:
         if self.prefix_enabled and nb_full:
             hits, keys = mgr.lookup_prefix(prompt, nb_full)
         req.prefix_hit_blocks += len(hits)
+        # hits are owned the moment lookup returns: record them BEFORE the
+        # (fault-injectable) alloc so an unwind releases them (§14)
+        self.owned[b] = list(hits)
+        self.tables[b] = 0
+        self.tables[b, :len(hits)] = hits
+        self._tables_dev = None
         fresh = mgr.alloc(nb_live - len(hits))
         owned = list(hits) + fresh
         self.owned[b] = list(owned)
-        self.tables[b] = 0
         self.tables[b, :nb_live] = owned
-        self._tables_dev = None
 
         # upload the parked payload: non-hit block rows + the recurrent row
         fresh_pos = np.arange(len(hits), nb_live)
@@ -815,6 +950,7 @@ class ServingEngine:
                 mgr.register(owned[j], keys[j])
 
         self.slots[b] = req
+        self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
@@ -825,7 +961,14 @@ class ServingEngine:
         left hashed blocks cached-free), then the pinned shared ``kv``
         entries, then the private tail rows; the recurrent row is restored
         bit-exactly from the private part, so device KV hits need no
-        snapshot gating here (unlike a fresh admission)."""
+        snapshot gating here (unlike a fresh admission).
+
+        The whole parked payload is prefetched BEFORE any engine state is
+        touched (§14): a piece gone missing — a checksum failure demoted
+        the entry to a miss, the breaker tripped, the arena evicted under
+        pressure — then routes to :meth:`_resume_cold` (recompute) with
+        nothing to unwind. Prefetched shared rows stay valid until the park
+        pins drop at the end; the merge copies them out."""
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
         mgr = self._mgr(b)
@@ -836,30 +979,44 @@ class ServingEngine:
         off = self._table_offset(b)
         nb_live = parked.nb_live
         n_shared = len(parked.kv_keys)
-        hits, keys = [], []
-        nb_full = min((L_p - 1) // self.block_size, nb_live)
-        if self._kv_share and nb_full:
-            hits, keys = mgr.lookup_prefix(prompt, nb_full)
-        fresh = mgr.alloc(nb_live - len(hits))
-        owned = list(hits) + fresh
-        self.owned[b] = list(owned)
-        self.tables[b] = 0
-        self.tables[b, :nb_live] = owned
-        self._tables_dev = None
 
-        # private payload: recurrent row arrays first, then the rows of
-        # tail blocks [n_shared, nb_live) (flat, rows_per_block each)
         private = (self.tier.take_park(req.uid) if parked.in_arena
                    else (parked.private or []))
+        shared, missing = [], parked.in_arena and private is None
+        if not missing:
+            for key in parked.kv_keys:
+                rows = self.tier.get_kv(shard, key)
+                if rows is None:      # pinned entry corrupt / tier tripped
+                    missing = True
+                    break
+                shared.append(rows)
+        if missing:
+            self._discard_park(req.uid, parked)
+            self.metrics.resume_recomputes += 1
+            return self._resume_cold(req, b, parked)
+        # private payload: recurrent row arrays first, then the rows of
+        # tail blocks [n_shared, nb_live) (flat, rows_per_block each)
         rec_rows = private[:parked.n_rec]
         tail = private[parked.n_rec:]
         rpb = parked.rows_per_block
 
+        hits, keys = [], []
+        nb_full = min((L_p - 1) // self.block_size, nb_live)
+        if self._kv_share and nb_full:
+            hits, keys = mgr.lookup_prefix(prompt, nb_full)
+        self.owned[b] = list(hits)
+        self.tables[b] = 0
+        self.tables[b, :len(hits)] = hits
+        self._tables_dev = None
+        fresh = mgr.alloc(nb_live - len(hits))
+        owned = list(hits) + fresh
+        self.owned[b] = list(owned)
+        self.tables[b, :nb_live] = owned
+
         host_restored = 0
         for jb in range(len(hits), nb_live):
             if jb < n_shared:
-                rows = self.tier.get_kv(shard, parked.kv_keys[jb])
-                assert rows is not None, "pinned parked kv block evicted"
+                rows = shared[jb]
                 host_restored += 1
             else:
                 t0 = (jb - n_shared) * rpb
@@ -885,10 +1042,85 @@ class ServingEngine:
             self.tier.unpin_kv(shard, key)
 
         self.slots[b] = req
+        self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.metrics.resumes += 1
+
+    def _resume_cold(self, req: Request, b: int, parked: ParkedSequence):
+        """Rebuild a parked slot by recompute when its payload is gone
+        (corruption demoted to a miss, tripped tier, arena eviction):
+        re-prefill positions ``[0, n-1)`` from the parked accepted-token
+        row, then restore the ``n``/``cand``/``tokens`` snapshot. K/V (and
+        recurrent state) at a position are pure functions of the preceding
+        tokens and chunk decomposition is bitwise-invariant — the standing
+        exactness invariant every prefill path rests on — so a cold resume
+        emits tokens bitwise identical to a warm one; it just pays prefill
+        compute (``resume_recomputes`` counts these)."""
+        prompt = np.asarray(req.prompt, np.int64)
+        L_p = len(prompt)
+        mgr = self._mgr(b)
+        n = parked.n
+        nb_live = parked.nb_live
+        toks = np.asarray(parked.tokens, np.int64)
+        # recurrent archs would need the state snapshot at any reuse
+        # boundary — gone with the payload — so they rebuild from zero;
+        # attention archs may still re-hit device-cached prompt blocks
+        hits, keys = [], []
+        nb_full = min((L_p - 1) // self.block_size, nb_live)
+        if self._kv_share and nb_full and not _has_recurrent(self.cfg):
+            hits, keys = mgr.lookup_prefix(prompt, nb_full)
+        req.prefix_hit_blocks += len(hits)
+        self.owned[b] = list(hits)
+        self.tables[b] = 0
+        self.tables[b, :len(hits)] = hits
+        self._tables_dev = None
+        self._ensure_capacity(b, nb_live * self.block_size)
+        if _has_recurrent(self.cfg):
+            self._reset_recurrent_row(b)
+
+        start = len(hits) * self.block_size
+        table_row = jnp.asarray(self.tables[b:b + 1] + self._table_offset(b))
+        row = jnp.asarray([b], jnp.int32)
+        for C in prefill_chunks(n - 1 - start, self.prefill_chunk):
+            chunk = jnp.asarray(toks[None, start:start + C], jnp.int32)
+            self.paged = self._prefill_fn(C)(
+                self.params, self.paged, table_row, row, chunk,
+                jnp.asarray([start], jnp.int32))
+            start += C
+            req.prefill_calls += 1
+            self.metrics.prefill_calls += 1
+        if self._kv_share and not _has_recurrent(self.cfg):
+            for j in range(len(hits), nb_full):
+                mgr.register(self.owned[b][j], keys[j])
+
+        # per-slot state: the exact park-time snapshot
+        self.tokens = self.tokens.at[b].set(
+            jnp.asarray(parked.tokens, jnp.int32))
+        self.n = self.n.at[b].set(n)
+        self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
+        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.n_host[b] = n
+
+        self.slots[b] = req
+        self._set_poison(b, req)
+        self.target[b] = L_p + req.new_tokens
+        self._target_dev = None
+        self.reserved[b] = self._worst_case_blocks(req)
+        self.metrics.resumes += 1
+
+    def _discard_park(self, uid: int, parked: ParkedSequence):
+        """Release a parked payload's tier resources without resuming it
+        (cancel, failed resume): the park entry and the shared-kv pins.
+        Tolerant of partial consumption — ``drop``/``unpin`` are no-ops on
+        already-consumed entries."""
+        if self.tier is None:
+            return
+        if parked.in_arena:
+            self.tier.drop_park(uid)
+        for key in parked.kv_keys:
+            self.tier.unpin_kv(parked.shard, key)
 
     def migrate_slot(self, b_src: int, b_dst: int):
         """Move a live sequence to a free slot: across shard sub-pools
@@ -949,6 +1181,9 @@ class ServingEngine:
         self.target[b_dst] = self.target[b_src]
         self.reserved[b_dst] = self.reserved[b_src]
         self.n_host[b_dst] = self.n_host[b_src]
+        if self.poison[b_dst] != self.poison[b_src]:
+            self.poison[b_dst] = self.poison[b_src]
+            self._poison_dev = None
         self.slots[b_src] = None
         self.owned[b_src] = []
         self._clear_row(b_src, release=False)
@@ -1020,7 +1255,12 @@ class ServingEngine:
         if best is None:
             return None
         _, v, b_dst = best
-        self.migrate_slot(v, b_dst)
+        try:
+            self.migrate_slot(v, b_dst)
+        except MemoryError:
+            # injected landing-block allocation failure (§14): nothing was
+            # mutated before begin_migration's alloc, so just don't move
+            return None
         return self._route(req)
 
     def _evictable(self, head: Request) -> list[int]:
@@ -1100,6 +1340,7 @@ class ServingEngine:
             if head.bypassed >= self.max_head_bypass:
                 cands = [head]            # aging bound reached: head-only
             admitted = None
+            faulted = False
             for req in cands:
                 b = self._route(req)
                 if b is None:
@@ -1108,11 +1349,28 @@ class ServingEngine:
                     b = self._try_preempt(head)
                 if b is not None:
                     self.queue.remove(req)
-                    self._admit(req, b)
+                    try:
+                        self._admit(req, b)
+                    except Exception as e:
+                        # quarantine the failure to THIS request (§14):
+                        # unwind the half-built slot (releasing whatever
+                        # blocks it had claimed), then retry or fail it —
+                        # the other slots and the queue are untouched, so
+                        # rescan the lookahead and keep admitting (a fault
+                        # here must not head-of-line block the pass; the
+                        # retry budget bounds re-admission attempts)
+                        self.slots[b] = None
+                        self._clear_row(b)
+                        self._fail_request(
+                            req, "admission", f"{type(e).__name__}: {e}",
+                            retryable=True)
+                        faulted = True
                     admitted = req
                     break
             if admitted is None:
                 break
+            if faulted:
+                continue
             if admitted is not head:
                 head.bypassed += 1
                 self.metrics.head_bypass_admissions += 1
@@ -1120,7 +1378,14 @@ class ServingEngine:
     def _admit(self, req: Request, b: int):
         parked = self.parked.pop(req.uid, None)
         if parked is not None:            # preempted: exact resume path
-            return self._resume(req, b, parked)
+            try:
+                return self._resume(req, b, parked)
+            except Exception:
+                # the park is consumed/unreliable after a failed resume:
+                # release its tier resources; a retry re-admits from the
+                # prompt (a full restart on the same stream is bit-exact)
+                self._discard_park(req.uid, parked)
+                raise
         req.admit_time = time.monotonic()
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
@@ -1240,10 +1505,88 @@ class ServingEngine:
                 mgr.register(self.owned[b][j], keys[j])
 
         self.slots[b] = req
+        self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.n_host[b] = L_p
+
+    # -- failure / cancellation (DESIGN.md §14) ------------------------------
+    def _fail_request(self, req: Request, code: str, detail: str = "", *,
+                      retryable: bool = False, fresh_stream: bool = False):
+        """Retire or retry a request that hit a fault. Retryable failures
+        under the retry budget requeue (original arrival order — the
+        request does not lose its place); ``fresh_stream`` additionally
+        derives a new noise-stream id (skipping scripted poison streams) so
+        a quarantined row does not replay the same poisoned stream.
+        Otherwise the request finishes with a structured ``RequestError``
+        and ``result=None``."""
+        if retryable and req.retries < self.request_retries:
+            req.retries += 1
+            self.metrics.retries += 1
+            if fresh_stream:
+                seed = int(req.seq_id)
+                poisoned = (self.faults.poison_streams
+                            if self.faults is not None else frozenset())
+                while True:     # splitmix-style LCG walk over 31-bit seeds
+                    seed = (seed * 6364136223846793005
+                            + 1442695040888963407) % (2 ** 31)
+                    if seed not in poisoned and seed != 0:
+                        break
+                req.noise_seed = seed
+            self.queue.requeue(req)
+            return
+        req.error = RequestError(code, detail, retryable=retryable,
+                                 attempts=req.retries + 1)
+        req.result = None
+        req.finish_time = time.monotonic()
+        self.metrics.requests_failed += 1
+        self.done.append(req)
+
+    def _fail_slot(self, b: int, code: str, detail: str = "", *,
+                   retryable: bool = False, fresh_stream: bool = False):
+        """Quarantine one running slot: free it (blocks released, row
+        device state cleared to the inactive no-op lane) and route its
+        request through :meth:`_fail_request`. The other rows never see a
+        discontinuity — slot release is exactly the path a finished
+        request takes."""
+        req = self.slots[b]
+        assert req is not None, f"slot {b} is not occupied"
+        self.slots[b] = None
+        self._clear_row(b)
+        self._fail_request(req, code, detail, retryable=retryable,
+                           fresh_stream=fresh_stream)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request wherever it currently lives — queued, parked
+        (parked requests sit in the queue awaiting resume), or running in a
+        slot. Returns False when ``uid`` is unknown (already finished or
+        never submitted). The cancelled request finishes through ``done``
+        with ``error.code == "cancelled"``."""
+        for req in self.queue.requests():
+            if req.uid == uid:
+                self.queue.remove(req)
+                parked = self.parked.pop(uid, None)
+                if parked is not None:
+                    self._discard_park(uid, parked)
+                self._finalize_cancel(req)
+                return True
+        for b in range(self.B):
+            req = self.slots[b]
+            if req is not None and req.uid == uid:
+                self.slots[b] = None
+                self._clear_row(b)
+                self._finalize_cancel(req)
+                return True
+        return False
+
+    def _finalize_cancel(self, req: Request):
+        req.error = RequestError("cancelled", retryable=False,
+                                 attempts=req.retries + 1)
+        req.result = None
+        req.finish_time = time.monotonic()
+        self.metrics.requests_cancelled += 1
+        self.done.append(req)
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
@@ -1270,15 +1613,20 @@ class ServingEngine:
         k = 1 if self.queue else self.rounds_per_sync
         for b in range(self.B):
             if self.slots[b] is not None:
-                self._ensure_capacity(b, int(self.target[b]) + W)
+                try:
+                    self._ensure_capacity(b, int(self.target[b]) + W)
+                except MemoryError as e:
+                    # reservation guarantees this never fires organically;
+                    # an injected alloc fault fails ONLY this slot (§14)
+                    self._fail_slot(b, "capacity", str(e), retryable=True)
+        if not any(s is not None for s in self.slots):
+            return bool(self.queue)
         (self.paged, self.tokens, self.n, self.cand, stats_dev) = \
-            self._round_loop_fn(W, k)(self.params, self.paged,
-                                      self._tables_device(), self.tokens,
-                                      self.n, self.cand, self.seq_ids,
-                                      self._target_device())
-        # THE host sync: one (B, 4) int32 pull per loop
+            self._round_loop_fn(W, k)(*self._round_args())
+        # THE host sync: one (B, 5) int32 pull per loop
         stats = np.asarray(stats_dev)
         accepted, rounds_active, n_host = stats[:, 0], stats[:, 1], stats[:, 2]
+        bad = stats[:, 4]                      # §14 quarantine health bits
         rounds_exec = int(stats[:, 3].max())   # critical path across shards
         self.n_host[:] = n_host                # preemption progress mirror
         self._last_rounds_exec = rounds_exec   # run()'s convergence budget
@@ -1293,15 +1641,37 @@ class ServingEngine:
                                   acc_total)
         self.controller.observe_aggregate(acc_total, act_row_rounds)
 
+        now = time.monotonic()
         for b in slot_rows:
             req = self.slots[b]
+            if bad[b]:
+                # quarantine verdict from the packed stats: fail only this
+                # slot; a retry gets a FRESH noise stream (replaying a
+                # poisoned stream would just fail again)
+                code = "nonfinite" if bad[b] & 1 else "stuck"
+                self._fail_slot(
+                    b, code, f"health bits 0b{int(bad[b]):02b} at "
+                    f"n={int(n_host[b])}", retryable=True, fresh_stream=True)
+                continue
             if n_host[b] >= self.target[b]:
                 req.result = np.asarray(self.tokens[b, :n_host[b]])
-                req.finish_time = time.monotonic()
+                req.finish_time = now
                 self.metrics.observe_finish(req)
                 self.done.append(req)
                 self.slots[b] = None
                 self._clear_row(b)
+                continue
+            if (self.max_request_rounds is not None
+                    and req.calls_used >= self.max_request_rounds):
+                self._fail_slot(
+                    b, "round_budget", f"{req.calls_used} verify rounds "
+                    f">= {self.max_request_rounds}")
+                continue
+            if (self.max_request_seconds is not None
+                    and now - req.submit_time > self.max_request_seconds):
+                self._fail_slot(
+                    b, "timeout", f"{now - req.submit_time:.3f}s "
+                    f"> {self.max_request_seconds}s wall time")
         return True
 
     def run(self, max_rounds: int = 10_000) -> list[Request]:
@@ -1332,6 +1702,12 @@ class ServingEngine:
         out["blocks_available"] = self.pool.available()
         out["parked_requests"] = len(self.parked)
         out["queue_depth"] = len(self.queue)
+        # §14 failure counters are always present (chaos-job assertions):
+        # tier-backed ones default to 0 when no tier is configured
+        out.setdefault("checksum_failures", 0)
+        out.setdefault("tier_tripped", 0)
+        out["faults_injected"] = (self.faults.total_fired
+                                  if self.faults is not None else 0)
         if self.topo.data_size > 1:
             out["blocks_available_by_shard"] = [
                 self.pool.available(s) for s in range(self.topo.data_size)]

@@ -1,0 +1,187 @@
+"""Fault model of the serving runtime: structured request errors, a
+deterministic fault-injection harness, and the host-tier circuit breaker
+(DESIGN.md §14).
+
+The serving stack fails *per request*, never per process: every failure the
+engine can survive is routed through a :class:`RequestError` attached to the
+offending ``Request`` while the rest of the batch stays bit-exact. To make
+every one of those paths testable the same way ``SCHED_SCRIPT`` exercises
+preemption, :class:`FaultPlan` scripts faults at **named seams**:
+
+==================  =====================================================
+seam                fires inside
+==================  =====================================================
+``alloc``           ``BlockManager.alloc`` — raises MemoryError before
+                    taking a block (admission / capacity-growth faults)
+``arena_put``       ``HostArena.put`` — the put is rejected as if the
+                    host allocation failed (spill/park/snapshot lost)
+``arena_corrupt``   ``HostArena.get`` — flips a byte of the stored entry
+                    *before* the integrity check reads it
+``stage_drop``      ``StagingRing.stage`` — raises :class:`StagingFault`
+                    mid-ring (H2D upload died)
+==================  =====================================================
+
+plus ``poison_streams``: noise-stream ids whose verify-round logits are
+NaN-replaced on device (the model-wrapper seam — exercises the packed-stats
+health flag end to end).
+
+Every seam keeps an invocation counter; a fault fires either at explicitly
+scripted invocation indices (``alloc=@2;5`` -> the 3rd and 6th calls) or at
+a seeded rate (``arena_corrupt=0.05``) decided by a counter-keyed hash —
+**never** by ``random``/time, so a plan replays identically across runs,
+processes, and the CI chaos job (``REPRO_FAULT_PLAN`` env).
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+SEAMS = ("alloc", "arena_put", "arena_corrupt", "stage_drop")
+
+
+@dataclass
+class RequestError:
+    """Structured failure attached to ``Request.error`` (result stays None).
+
+    ``code`` is machine-readable: submit-time rejections (``empty_prompt``,
+    ``bad_new_tokens``, ``too_long``, ``token_out_of_range``,
+    ``over_capacity``), quarantine verdicts (``nonfinite``, ``stuck``),
+    host-side faults (``admission``, ``capacity``), runaway aborts
+    (``timeout``, ``round_budget``) and ``cancelled``."""
+    code: str
+    detail: str = ""
+    retryable: bool = False
+    attempts: int = 1            # admission attempts consumed (retries + 1)
+
+    def __str__(self):
+        return f"{self.code}({self.detail})" if self.detail else self.code
+
+
+class StagingFault(RuntimeError):
+    """Injected (or real) H2D staging failure inside ``StagingRing.stage``."""
+
+
+class FaultPlan:
+    """Deterministic per-seam fault schedule (see module docstring).
+
+    ``schedule`` maps a seam to explicit 0-based invocation indices;
+    ``rates`` maps a seam to a per-invocation firing probability decided by
+    ``crc32(seed:seam:index)`` — deterministic, replayable, process-safe.
+    ``fire(seam)`` is the single entry point every instrumented seam calls.
+    """
+
+    def __init__(self, schedule: Optional[dict] = None,
+                 rates: Optional[dict] = None, seed: int = 0,
+                 poison_streams=()):
+        self.schedule = {k: frozenset(int(i) for i in v)
+                         for k, v in (schedule or {}).items()}
+        self.rates = {k: float(v) for k, v in (rates or {}).items()}
+        self.seed = int(seed)
+        self.poison_streams = frozenset(int(s) for s in poison_streams)
+        self.calls: dict[str, int] = {}      # invocations seen per seam
+        self.fired: dict[str, int] = {}      # faults injected per seam
+
+    def fire(self, seam: str) -> bool:
+        """Advance ``seam``'s invocation counter; True iff a fault fires."""
+        i = self.calls.get(seam, 0)
+        self.calls[seam] = i + 1
+        hit = i in self.schedule.get(seam, ())
+        rate = self.rates.get(seam, 0.0)
+        if not hit and rate > 0.0:
+            h = zlib.crc32(f"{self.seed}:{seam}:{i}".encode())
+            hit = (h & 0xFFFFFFFF) / 2.0 ** 32 < rate
+        if hit:
+            self.fired[seam] = self.fired.get(seam, 0) + 1
+        return hit
+
+    @property
+    def total_fired(self) -> int:
+        return sum(self.fired.values())
+
+    # -- parsing ------------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: str) -> Optional["FaultPlan"]:
+        """``"seed=7,alloc=@2;5,arena_corrupt=0.05,poison=3;9"`` — comma-
+        separated fields; ``@``-values are explicit invocation indices
+        (``;``-separated), bare floats are rates, ``poison`` lists noise-
+        stream ids, ``seed`` keys the rate hash. Empty/None -> no plan."""
+        if not spec or not spec.strip():
+            return None
+        schedule, rates, seed, poison = {}, {}, 0, ()
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            k, v = k.strip(), v.strip()
+            if k == "seed":
+                seed = int(v)
+            elif k == "poison":
+                poison = tuple(int(s) for s in v.split(";") if s)
+            elif v.startswith("@"):
+                schedule[k] = tuple(int(s) for s in v[1:].split(";") if s)
+            else:
+                rates[k] = float(v)
+        for k in list(schedule) + list(rates):
+            assert k in SEAMS, f"unknown fault seam {k!r} (have {SEAMS})"
+        return cls(schedule=schedule, rates=rates, seed=seed,
+                   poison_streams=poison)
+
+    @classmethod
+    def from_env(cls, var: str = "REPRO_FAULT_PLAN") -> Optional["FaultPlan"]:
+        return cls.parse(os.environ.get(var, ""))
+
+    def __repr__(self):
+        return (f"FaultPlan(schedule={dict(self.schedule)}, "
+                f"rates={self.rates}, seed={self.seed}, "
+                f"poison={sorted(self.poison_streams)}, "
+                f"fired={self.fired})")
+
+
+@dataclass
+class CircuitBreaker:
+    """Count-based closed/open/half-open breaker for the host tier.
+
+    Deterministic (counts ops, not wall time): ``threshold`` *consecutive*
+    failures trip it open; while open every ``allow()`` is denied and counts
+    toward ``cooldown``; the first ``allow()`` past the cooldown is the
+    half-open probe — a success re-closes, a failure re-opens. A tripped
+    tier behaves as a total cache miss (the engine recomputes), never as an
+    error — that is the whole point."""
+    threshold: int = 3
+    cooldown: int = 32
+    state: str = "closed"        # "closed" | "open" | "half_open"
+    failures: int = 0            # consecutive failures while closed
+    trips: int = 0               # times the breaker opened
+    denied: int = 0              # ops refused while open
+    _cooldown_left: int = 0
+
+    def allow(self) -> bool:
+        if self.state == "open":
+            self._cooldown_left -= 1
+            if self._cooldown_left > 0:
+                self.denied += 1
+                return False
+            self.state = "half_open"     # this op is the probe
+        return True
+
+    def record_success(self):
+        if self.state == "half_open":
+            self.state = "closed"
+        self.failures = 0
+
+    def record_failure(self):
+        self.failures += 1
+        if (self.state == "half_open"
+                or (self.state == "closed"
+                    and self.failures >= self.threshold)):
+            self.state = "open"
+            self.trips += 1
+            self._cooldown_left = self.cooldown
+            self.failures = 0
+
+    def stats_export(self) -> dict:
+        return {"tier_state": self.state, "tier_tripped": self.trips,
+                "tier_denied_ops": self.denied}

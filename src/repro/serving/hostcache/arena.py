@@ -26,9 +26,19 @@ Invariants:
   flags); a pinned ``put`` still respects the budget.
 * **Strict LRU.** Unpinned entries are evicted oldest-touch first; every
   ``get`` hit and dedup ``put`` refreshes recency.
+* **Integrity-checked (DESIGN.md §14).** Every put stamps a crc32 over the
+  entry's bytes; every get re-verifies it. A mismatch (bit rot, a buggy
+  slab recycle, an injected ``arena_corrupt`` fault) is demoted to a cache
+  miss: the entry is dropped — pinned or not; a corrupt pin protects
+  nothing — ``checksum_failures`` counts it, and the ``on_corruption``
+  callback lets the tier's circuit breaker see repeated failures. The
+  engine then recomputes (re-prefill / cold resume); corruption is never
+  returned to a caller. ``integrity=False`` (--no-integrity-checks) skips
+  the stamp+verify for A/B measurement of its host-path cost.
 """
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
@@ -38,6 +48,15 @@ import numpy as np
 
 def _nbytes(arrays) -> int:
     return int(sum(a.nbytes for a in arrays))
+
+
+def _checksum(arrays) -> int:
+    """crc32 over the concatenated bytes of a flat ndarray list."""
+    c = 0
+    for a in arrays:
+        if a.size:
+            c = zlib.crc32(memoryview(np.ascontiguousarray(a)).cast("B"), c)
+    return c
 
 
 @dataclass
@@ -50,9 +69,12 @@ class ArenaStats:
     rejections: int = 0          # puts refused (budget/pins)
     slab_reuses: int = 0         # buffers recycled from the slab pool
     bytes_in: int = 0            # payload bytes copied into the arena
+    checksum_failures: int = 0   # gets whose crc32 verify failed (entry
+    #                              dropped, demoted to a miss — §14)
 
     def export(self, arena: "HostArena") -> dict:
         return {
+            "checksum_failures": self.checksum_failures,
             "host_hits": self.hits,
             "host_misses": self.misses,
             "host_puts": self.puts,
@@ -75,14 +97,25 @@ class _Entry:
     arrays: list
     nbytes: int
     refs: int = 0
+    crc: int = 0                 # crc32 stamped at put (0 when unchecked)
 
 
 class HostArena:
-    """Fixed-budget key -> list-of-ndarray store with LRU + pinning."""
+    """Fixed-budget key -> list-of-ndarray store with LRU + pinning.
 
-    def __init__(self, capacity_bytes: int):
+    ``integrity`` stamps/verifies crc32 checksums (DESIGN.md §14);
+    ``faults`` is an optional :class:`~repro.serving.faults.FaultPlan`
+    wired to the ``arena_put`` / ``arena_corrupt`` seams; ``on_corruption``
+    is called (with the key) whenever a verify fails — the host tier points
+    it at its circuit breaker."""
+
+    def __init__(self, capacity_bytes: int, *, integrity: bool = True,
+                 faults=None, on_corruption=None):
         assert capacity_bytes >= 0, capacity_bytes
         self.capacity_bytes = int(capacity_bytes)
+        self.integrity = integrity
+        self.faults = faults
+        self.on_corruption = on_corruption
         # insertion/touch order IS the LRU order (oldest first)
         self._entries: "OrderedDict[object, _Entry]" = OrderedDict()
         self._slab: dict[tuple, list] = {}       # (shape, dtype) -> buffers
@@ -164,7 +197,11 @@ class HostArena:
         ``key``. Duplicate keys are a *dedup hit*: the resident entry is
         kept (contents are content-addressed by construction), refreshed,
         and optionally pinned — nothing is copied twice. Returns False iff
-        the arena cannot make room (entry never partially admitted)."""
+        the arena cannot make room (entry never partially admitted) or an
+        injected ``arena_put`` fault rejects it."""
+        if self.faults is not None and self.faults.fire("arena_put"):
+            self.stats.rejections += 1         # as if the host alloc failed
+            return False
         e = self._entries.get(key)
         if e is not None:
             self._entries.move_to_end(key)
@@ -177,8 +214,10 @@ class HostArena:
         if not self._evict_for(want):
             self.stats.rejections += 1
             return False
-        self._entries[key] = _Entry([self._slab_take(a) for a in arrays],
-                                    want, refs=1 if pin else 0)
+        copies = [self._slab_take(a) for a in arrays]
+        self._entries[key] = _Entry(copies, want, refs=1 if pin else 0,
+                                    crc=_checksum(copies) if self.integrity
+                                    else 0)
         self.bytes_resident += want
         self.stats.puts += 1
         self.stats.bytes_in += want
@@ -186,16 +225,38 @@ class HostArena:
 
     def get(self, key, pin: bool = False) -> Optional[list]:
         """LRU-refreshing lookup. Returns the entry's arrays (the arena's
-        own buffers — callers must not mutate them) or None."""
+        own buffers — callers must not mutate them) or None. The stored
+        checksum is re-verified first (DESIGN.md §14): a mismatch drops the
+        entry — pinned or not — counts ``checksum_failures``, notifies
+        ``on_corruption``, and reports a miss, so corrupt bytes never reach
+        the device."""
         e = self._entries.get(key)
         if e is None:
             self.stats.misses += 1
+            return None
+        if self.faults is not None and self.faults.fire("arena_corrupt"):
+            self._corrupt(e)
+        if self.integrity and e.crc != _checksum(e.arrays):
+            self.stats.checksum_failures += 1
+            self.stats.misses += 1
+            self.drop(key)
+            if self.on_corruption is not None:
+                self.on_corruption(key)
             return None
         self._entries.move_to_end(key)
         if pin:
             e.refs += 1
         self.stats.hits += 1
         return e.arrays
+
+    @staticmethod
+    def _corrupt(e: _Entry):
+        """Injected-fault seam: flip one byte of the stored entry in place
+        (the integrity verify on the same get must catch it)."""
+        for a in e.arrays:
+            if a.size:               # stored arrays are contiguous slab copies
+                a.view(np.uint8).flat[0] ^= 0xFF
+                return
 
     def pin(self, key) -> bool:
         e = self._entries.get(key)
@@ -205,8 +266,12 @@ class HostArena:
         return True
 
     def unpin(self, key):
+        """Drop one pin. Tolerant of a missing entry: integrity failures
+        drop corrupt entries even while pinned, and the pin owner still
+        unpins on its normal path afterwards (§14)."""
         e = self._entries.get(key)
-        assert e is not None and e.refs > 0, f"unpin of unpinned key {key!r}"
+        if e is None or e.refs <= 0:
+            return
         e.refs -= 1
 
     def drop(self, key) -> bool:

@@ -24,18 +24,28 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.serving.faults import StagingFault
+
 
 class StagingRing:
-    """Depth-bounded asynchronous host->device upload ring."""
+    """Depth-bounded asynchronous host->device upload ring.
 
-    def __init__(self, depth: int = 2):
+    ``faults`` wires the ``stage_drop`` seam: an injected fault raises
+    :class:`~repro.serving.faults.StagingFault` from ``stage`` exactly as a
+    died H2D upload would. The caller's recovery contract (DESIGN.md §14)
+    is ``clear()``: discard everything in flight so the next caller cannot
+    take a previous admission's half-staged blocks."""
+
+    def __init__(self, depth: int = 2, faults=None):
         assert depth >= 1, depth
         self.depth = depth
+        self.faults = faults
         self._ring: deque = deque()          # in flight: (tag, [jax.Array])
         self._landed: deque = deque()        # drained, awaiting take()
         self.staged = 0                      # uploads issued
         self.staged_bytes = 0
         self.overlapped = 0                  # issued while ring was busy
+        self.dropped = 0                     # uploads discarded by clear()
         self._last: "jax.Array | None" = None
 
     def _busy(self) -> bool:
@@ -45,6 +55,8 @@ class StagingRing:
         """Dispatch async uploads of ``arrays`` (numpy) under ``tag``.
         Blocks only when the ring is full (depth uploads in flight); the
         upload it waits for moves to the landed queue, never dropped."""
+        if self.faults is not None and self.faults.fire("stage_drop"):
+            raise StagingFault(f"injected staging drop at {tag!r}")
         while len(self._ring) >= self.depth:
             self._landed.append(self._drain_one())
         if self._busy():
@@ -71,6 +83,18 @@ class StagingRing:
             return None
         return self._drain_one()
 
+    def clear(self) -> int:
+        """Discard every in-flight and landed upload (partial-failure
+        recovery, DESIGN.md §14): a caller that aborts mid-ring MUST clear,
+        or the next admission would ``take()`` block payloads staged for a
+        different slot's table. Returns the number of uploads dropped."""
+        n = len(self)
+        self._ring.clear()
+        self._landed.clear()
+        self._last = None
+        self.dropped += n
+        return n
+
     def __len__(self) -> int:
         return len(self._ring) + len(self._landed)
 
@@ -81,4 +105,5 @@ class StagingRing:
             "h2d_staged_bytes": self.staged_bytes,
             "h2d_overlapped": self.overlapped,
             "h2d_overlap_frac": frac,
+            "h2d_dropped": self.dropped,
         }

@@ -23,10 +23,21 @@ not) serves three clients through namespaced keys:
 
 All payloads are flat lists of numpy arrays; the engine owns pytree
 (de)composition so the tier stays model-agnostic.
+
+Robustness (DESIGN.md §14): the arena stamps/verifies checksums (corrupt
+entries demote to misses — see ``arena.HostArena``), and a
+:class:`~repro.serving.faults.CircuitBreaker` sits in front of every
+arena-touching op. Repeated integrity/staging failures trip it: an *open*
+tier answers every probe as a total miss (puts refused, gets None, runs 0)
+so the engine quietly recomputes instead of erroring each admission, then
+half-open re-probes after a deterministic op-count cooldown. ``unpin`` and
+``drop`` stay ungated — refcount hygiene must run even while tripped.
 """
 from __future__ import annotations
 
 from typing import Optional
+
+from repro.serving.faults import CircuitBreaker
 
 from .arena import HostArena
 from .staging import StagingRing
@@ -34,32 +45,61 @@ from .staging import StagingRing
 
 class HostTier:
     def __init__(self, capacity_bytes: int, num_shards: int = 1,
-                 staging_depth: int = 2):
-        self.arena = HostArena(capacity_bytes)
+                 staging_depth: int = 2, *, integrity: bool = True,
+                 faults=None, breaker: Optional[CircuitBreaker] = None):
+        self.breaker = breaker
+        self.arena = HostArena(capacity_bytes, integrity=integrity,
+                               faults=faults,
+                               on_corruption=lambda key: self.record_failure())
         self.num_shards = num_shards
-        self.staging = StagingRing(depth=staging_depth)
+        self.staging = StagingRing(depth=staging_depth, faults=faults)
+
+    # -- circuit breaker (DESIGN.md §14) ------------------------------------
+    def _allow(self) -> bool:
+        return self.breaker is None or self.breaker.allow()
+
+    def record_failure(self):
+        """An integrity or staging failure involving this tier."""
+        if self.breaker is not None:
+            self.breaker.record_failure()
+
+    def _verified(self, arrays):
+        """A get that passed the integrity check counts as breaker health."""
+        if arrays is not None and self.breaker is not None:
+            self.breaker.record_success()
+        return arrays
 
     # -- prefix-spill client ------------------------------------------------
     def put_kv(self, shard: int, key, arrays, pin: bool = False) -> bool:
+        if not self._allow():
+            return False
         return self.arena.put(("kv", shard, key), arrays, pin=pin)
 
     def has_kv(self, shard: int, key) -> bool:
+        if not self._allow():
+            return False
         return self.arena.contains(("kv", shard, key))
 
     def get_kv(self, shard: int, key) -> Optional[list]:
-        return self.arena.get(("kv", shard, key))
+        if not self._allow():
+            return None
+        return self._verified(self.arena.get(("kv", shard, key)))
 
     def pin_kv(self, shard: int, key) -> bool:
+        if not self._allow():
+            return False
         return self.arena.pin(("kv", shard, key))
 
     def unpin_kv(self, shard: int, key):
-        self.arena.unpin(("kv", shard, key))
+        self.arena.unpin(("kv", shard, key))      # never breaker-gated
 
     def kv_run(self, shard: int, keys) -> int:
         """Longest contiguous resident run of ``keys`` (chained hashes,
         oldest block first). Touches each resident key so a popular prefix
         stays warm. Stops at the first gap — a later resident block is
         useless without its predecessors."""
+        if not self._allow():
+            return 0
         n = 0
         for k in keys:
             if not self.arena.contains(("kv", shard, k), touch=True):
@@ -69,30 +109,50 @@ class HostTier:
 
     # -- recurrent-snapshot client ------------------------------------------
     def put_rec(self, shard: int, key, arrays) -> bool:
+        if not self._allow():
+            return False
         return self.arena.put(("rec", shard, key), arrays)
 
     def has_rec(self, shard: int, key) -> bool:
+        if not self._allow():
+            return False
         return self.arena.contains(("rec", shard, key), touch=True)
 
     def get_rec(self, shard: int, key) -> Optional[list]:
-        return self.arena.get(("rec", shard, key))
+        if not self._allow():
+            return None
+        return self._verified(self.arena.get(("rec", shard, key)))
 
     # -- parked-sequence client ---------------------------------------------
     def put_park(self, uid: int, arrays) -> bool:
+        if not self._allow():
+            return False
         return self.arena.put(("park", uid), arrays, pin=True)
 
     def take_park(self, uid: int) -> Optional[list]:
         """Consume a parked payload: returns the arrays and removes the
-        (pinned) entry — parking is one-shot, resume owns the copy-out."""
-        arrays = self.arena.get(("park", uid))
+        (pinned) entry — parking is one-shot, resume owns the copy-out.
+        None (tripped tier / corrupt entry) sends the caller down the
+        cold-resume recompute path."""
+        if not self._allow():
+            return None
+        arrays = self._verified(self.arena.get(("park", uid)))
         if arrays is None:
             return None
         arrays = [a.copy() for a in arrays]      # buffers return to the slab
         self.arena.drop(("park", uid))
         return arrays
 
+    def drop_park(self, uid: int) -> bool:
+        """Discard a parked payload without reading it (cancel / failed
+        resume)."""
+        return self.arena.drop(("park", uid))    # never breaker-gated
+
     # -- misc ---------------------------------------------------------------
     def stats_export(self) -> dict:
         out = self.arena.stats_export()
         out.update(self.staging.stats_export())
+        out.update(self.breaker.stats_export() if self.breaker is not None
+                   else {"tier_state": "closed", "tier_tripped": 0,
+                         "tier_denied_ops": 0})
         return out

@@ -52,6 +52,14 @@ class EngineMetrics:
     #                                      into the host tier at block bounds
     rec_snapshot_restores: int = 0       # admissions that resumed from a
     #                                      host-tier recurrent snapshot
+    requests_failed: int = 0             # requests finished with a
+    #                                      RequestError (quarantine/abort)
+    requests_cancelled: int = 0          # requests cancelled via cancel(uid)
+    requests_rejected: int = 0           # submit-time validation rejections
+    retries: int = 0                     # failed requests re-admitted
+    staging_errors: int = 0              # H2D staging runs aborted mid-ring
+    resume_recomputes: int = 0           # parked resumes rebuilt by cold
+    #                                      re-prefill (payload lost/corrupt)
 
     def observe_loop(self, window: int, rounds: int, active_row_rounds: int,
                      batch: int, accepted: int):
@@ -138,6 +146,12 @@ class EngineMetrics:
             "host_staged_blocks": self.host_staged_blocks,
             "rec_snapshot_captures": self.rec_snapshot_captures,
             "rec_snapshot_restores": self.rec_snapshot_restores,
+            "requests_failed": self.requests_failed,
+            "requests_cancelled": self.requests_cancelled,
+            "requests_rejected": self.requests_rejected,
+            "retries": self.retries,
+            "staging_errors": self.staging_errors,
+            "resume_recomputes": self.resume_recomputes,
         }
         if block_stats:
             out.update(block_stats)

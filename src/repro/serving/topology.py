@@ -96,15 +96,19 @@ class ServingTopology:
         return shard * blocks_per_shard
 
     # -- host cache tier (DESIGN.md §13) ------------------------------------
-    def host_tier(self, capacity_bytes: int, staging_depth: int = 2):
+    def host_tier(self, capacity_bytes: int, staging_depth: int = 2, *,
+                  integrity: bool = True, faults=None, breaker=None):
         """Build the engine's host cache tier for this topology: one arena
         (a single shared byte budget for the whole process — a hot shard may
         use headroom an idle one is not) partitioned into per-data-shard key
         namespaces, mirroring the per-shard device prefix caches (block
-        contents never cross shards, so neither do their host copies)."""
+        contents never cross shards, so neither do their host copies).
+        ``integrity``/``faults``/``breaker`` configure the §14 fault layer
+        (checksum verification, injection seams, circuit breaker)."""
         from repro.serving.hostcache import HostTier
         return HostTier(capacity_bytes, num_shards=self.data_size,
-                        staging_depth=staging_depth)
+                        staging_depth=staging_depth, integrity=integrity,
+                        faults=faults, breaker=breaker)
 
     # -- device placement ---------------------------------------------------
     def batch_spec(self) -> P:

@@ -74,11 +74,20 @@ def test_dedup_put_refreshes_and_optionally_pins():
     assert a.contains("k")
 
 
-def test_unpin_of_unpinned_key_asserts():
+def test_unpin_is_tolerant_of_missing_or_unpinned_entries():
+    """§14 contract: integrity failures drop corrupt entries even while
+    pinned, and the pin owner STILL unpins on its normal path afterwards —
+    so unpinning a missing or unpinned key is a silent no-op, never an
+    error, and never corrupts a live refcount."""
     a = HostArena(BLK_BYTES)
     a.put("k", [_blk(0)])
-    with pytest.raises(AssertionError):
-        a.unpin("k")
+    a.unpin("k")                             # unpinned entry: no-op
+    a.unpin("gone")                          # missing entry: no-op
+    a.put("p", [_blk(1)], pin=True)
+    a.unpin("p")
+    a.unpin("p")                             # double unpin: refs stay >= 0
+    assert a.pin("p")                        # entry still usable
+    a.unpin("p")
 
 
 def test_tier_kv_run_stops_at_first_gap():

@@ -15,8 +15,17 @@ from repro.engine import PredictiveSampler
 from repro.models.transformer import TransformerLM
 from repro.serving import Request, ServingEngine
 from repro.serving.blocks import BlockManager
+from repro.serving.faults import FaultPlan
 
 EPS_KEY = jax.random.PRNGKey(9)
+
+# The CI chaos job (DESIGN.md §14) re-runs this net under REPRO_FAULT_PLAN:
+# injected arena put-rejections / read-corruption / staging drops
+# legitimately eat the tier's CAPACITY advantage (spills lost, snapshots
+# recomputed, staged runs truncated), so counter asserts that prove the
+# tier paid off only run fault-free. Every bitwise exactness assert runs
+# regardless — faults must never cost correctness.
+FAULT_FREE = FaultPlan.from_env() is None
 
 
 @pytest.fixture(scope="module")
@@ -84,10 +93,11 @@ def test_spilled_prefix_blocks_restage_from_host(qwen):
         eng.submit(r)
     done = eng.run()
     m = eng.export_metrics()
-    assert m["blocks_spilled"] >= 2          # A's 2 full blocks went D2H
-    assert m["host_hits"] >= 1
-    assert m["host_staged_blocks"] >= 1      # ...and came back
-    assert reqs[2].prefix_hit_blocks >= 1
+    if FAULT_FREE:
+        assert m["blocks_spilled"] >= 2      # A's 2 full blocks went D2H
+        assert m["host_hits"] >= 1
+        assert m["host_staged_blocks"] >= 1  # ...and came back
+        assert reqs[2].prefix_hit_blocks >= 1
     _assert_all_exact(cfg, params, done, window=4, max_len=48)
 
     # A/B vs a tier-less engine on identical traffic: the tier must
@@ -100,7 +110,8 @@ def test_spilled_prefix_blocks_restage_from_host(qwen):
     eng_nt.run()
     m_nt = eng_nt.export_metrics()
     assert m_nt["blocks_dropped"] >= 2       # same evictions, nothing saved
-    assert m["prefill_calls"] < m_nt["prefill_calls"]
+    if FAULT_FREE:
+        assert m["prefill_calls"] < m_nt["prefill_calls"]
 
 
 def test_parked_payload_dedup_counts_arena_bytes(qwen):
@@ -124,9 +135,10 @@ def test_parked_payload_dedup_counts_arena_bytes(qwen):
     n1, b1 = len(arena), arena.bytes_resident
     eng.preempt_slot(1)
     n2, b2 = len(arena), arena.bytes_resident
-    assert n1 - n0 >= 4            # 3 shared KV blocks + 1 park payload
-    assert n2 - n1 == 1            # dedup: ONLY the park payload is new
-    assert b2 - b1 < b1 - b0       # second park is strictly cheaper
+    if FAULT_FREE:
+        assert n1 - n0 >= 4        # 3 shared KV blocks + 1 park payload
+        assert n2 - n1 == 1        # dedup: ONLY the park payload is new
+        assert b2 - b1 < b1 - b0   # second park is strictly cheaper
     done = eng.run()
     assert eng.metrics.preemptions == 2 and eng.metrics.resumes == 2
     assert len(done) == 2
@@ -155,13 +167,15 @@ def test_recurrent_prefix_reuse_via_snapshots(arch):
     assert eng.rec_prefix and not eng.kv_prefix
     eng.submit(r0)
     eng.run()
-    assert eng.metrics.rec_snapshot_captures >= 3    # boundaries 4, 8, 12
+    if FAULT_FREE:
+        assert eng.metrics.rec_snapshot_captures >= 3  # boundaries 4, 8, 12
     eng.submit(r1)
     done = eng.run()
     m = eng.export_metrics()
-    assert eng.metrics.rec_snapshot_restores >= 1
-    assert m["host_hits"] > 0
-    assert r1.prefix_hit_blocks >= 3                 # full shared prefix
+    if FAULT_FREE:
+        assert eng.metrics.rec_snapshot_restores >= 1
+        assert m["host_hits"] > 0
+        assert r1.prefix_hit_blocks >= 3             # full shared prefix
     _assert_all_exact(cfg, params, [r0] + done, window=4, max_len=48)
 
     # warm-path tokens must match a cold engine serving the same request
@@ -225,7 +239,8 @@ def test_interleaved_tiered_schedule_exact(qwen):
     eng = _interleaved_tiered(cfg, params, PLAN)
     assert eng.metrics.preemptions >= 1
     m = eng.export_metrics()
-    assert m["host_puts"] >= 1           # the tier actually saw traffic
+    if FAULT_FREE:
+        assert m["host_puts"] >= 1       # the tier actually saw traffic
 
 
 def test_interleaved_tiered_tiny_budget_exact(qwen):

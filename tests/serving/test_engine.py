@@ -208,14 +208,20 @@ def test_tight_pool_serializes_instead_of_crashing(qwen):
     _assert_all_exact(cfg, params, done, window=4, max_len=48)
 
 
-def test_admission_deadlock_raises(qwen):
+def test_unservable_request_rejected_at_submit(qwen):
+    """A request whose worst-case block need exceeds the whole pool is
+    rejected AT SUBMIT with a structured error (DESIGN.md §14) — the old
+    behaviour was an admission-deadlock MemoryError out of ``run()``."""
     cfg, params = qwen
     eng = ServingEngine(cfg, params, batch=1, window_max=4, max_len=64,
                         eps_key=EPS_KEY, block_size=4, num_blocks=4,
                         adaptive=False)
-    eng.submit(Request(uid=0, prompt=np.zeros(30, np.int64), new_tokens=20))
-    with pytest.raises(MemoryError):
-        eng.run()
+    req = Request(uid=0, prompt=np.zeros(30, np.int64), new_tokens=20)
+    assert eng.submit(req) is False
+    assert req.error is not None and req.error.code == "over_capacity"
+    assert req.result is None and not req.ok
+    assert eng.run() == [req]            # delivered through done; no crash
+    assert eng.export_metrics()["requests_rejected"] == 1
 
 
 def test_paged_attention_path_matches_dense_engine_and_solo(qwen):

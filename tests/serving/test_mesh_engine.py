@@ -114,8 +114,7 @@ MAIN_SCRIPT = textwrap.dedent("""
     from repro.launch.hlo_analysis import count_jaxpr_primitives
     W = eng.controller.window
     fn = eng._round_loop_fn(W, eng.rounds_per_sync)
-    args = (eng.params, eng.paged, eng._tables_device(), eng.tokens,
-            eng.n, eng.cand, eng.seq_ids, eng._target_device())
+    args = eng._round_args()
     txt = fn.lower(*args).compile().as_text()
     rec["collectives"] = {k: v["count"]
                          for k, v in parse_collective_bytes(txt).items()}
@@ -269,9 +268,7 @@ SCHED_SCRIPT = textwrap.dedent("""
     traffic(eng_h, True)
     W = eng_h.controller.window
     fn = eng_h._round_loop_fn(W, eng_h.rounds_per_sync)
-    args = (eng_h.params, eng_h.paged, eng_h._tables_device(),
-            eng_h.tokens, eng_h.n, eng_h.cand, eng_h.seq_ids,
-            eng_h._target_device())
+    args = eng_h._round_args()
     txt = fn.lower(*args).compile().as_text()
     rec["collectives"] = {k: v["count"]
                           for k, v in parse_collective_bytes(txt).items()}
@@ -298,6 +295,103 @@ def test_mesh_scheduling_migration_preemption_rebalance():
     assert not rec["rebalance"]["admitted_off"], rec
     assert rec["rebalance"]["migrations"] >= 1, rec
     assert rec["rebalance"]["tokens_equal"], rec
+    assert all(c == 0 for c in rec["collectives"].values()), rec
+    assert rec["pool_scatters"] == 0, rec
+
+
+FAULT_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.engine import PredictiveSampler
+    from repro.launch.hlo_analysis import (count_jaxpr_primitives,
+                                           parse_collective_bytes)
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import (FaultPlan, Request, ServingEngine,
+                               ServingTopology)
+
+    EPS = jax.random.PRNGKey(9)
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    from repro.models.transformer import TransformerLM
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    kw = dict(batch=4, window_max=4, max_len=48, eps_key=EPS,
+              block_size=4, adaptive=False, host_cache_mb=8)
+
+    def traffic(eng):
+        rng = np.random.default_rng(3)
+        for i in range(4):
+            eng.submit(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(3, 8))),
+                new_tokens=int(rng.integers(8, 12))))
+        eng.step()
+        # park a running slot so resume crosses the (corruptible) arena
+        occ = [b for b in range(eng.B) if eng.slots[b] is not None]
+        eng.preempt_slot(occ[0])
+        return {r.uid: r for r in eng.run()}, eng
+
+    ref, _ = traffic(ServingEngine(cfg, params, faults=FaultPlan(),
+                                   request_retries=1, **kw))
+    # scripted chaos on a data=2 mesh: first block alloc dies (retried on
+    # the same stream), arena reads corrupt at a seeded rate (cold-resume
+    # recompute), uid 2's noise stream is NaN-poisoned on device
+    # (quarantined, retried on a fresh stream)
+    plan = FaultPlan(schedule={"alloc": (0,)},
+                     rates={"arena_corrupt": 0.75},
+                     poison_streams=(2,), seed=13)
+    topo = ServingTopology(make_host_mesh(2, 1))
+    eng = ServingEngine(cfg, params, topology=topo, faults=plan,
+                        request_retries=1, **kw)
+    got, eng = traffic(eng)
+    m = eng.export_metrics()
+    rec = {
+        "all_ok": all(r.ok for r in got.values()),
+        "healthy_equal": all((got[u].result == ref[u].result).all()
+                             for u in (0, 1, 3)),
+        "poisoned_ok": got[2].ok,
+        "fresh_stream": got[2].seq_id not in plan.poison_streams,
+        "requests_failed": m["requests_failed"],
+        "retries": m["retries"],
+        "faults_injected": m["faults_injected"],
+        "checksum_failures": m["checksum_failures"]}
+    # the poisoned request's fresh stream is solo-exact under its NEW id
+    solo = PredictiveSampler(cfg, params, window=4, max_len=48, eps_key=EPS)
+    p = np.asarray(got[2].prompt)
+    t, _ = solo.generate(p[None].astype(np.int32), got[2].new_tokens,
+                         seq_ids=np.asarray([got[2].seq_id], np.int32))
+    rec["poisoned_solo_equal"] = bool(
+        (np.asarray(t[0, :len(p) + got[2].new_tokens])
+         == got[2].result).all())
+    # quarantine keeps the round HLO gates: zero collectives, zero
+    # pool-ranked scatters on the (now 9-arg, poison-carrying) round fn
+    fn = eng._round_loop_fn(eng.controller.window, eng.rounds_per_sync)
+    args = eng._round_args()
+    txt = fn.lower(*args).compile().as_text()
+    rec["collectives"] = {k: v["count"]
+                          for k, v in parse_collective_bytes(txt).items()}
+    rec["pool_scatters"] = count_jaxpr_primitives(
+        fn.trace(*args).jaxpr, ("scatter",), min_rank=3)["scatter"]
+    print(json.dumps(rec))
+""")
+
+
+def test_mesh_engine_scripted_faults_keep_healthy_rows_exact():
+    """§14 acceptance on the mesh: a scripted FaultPlan (alloc fault +
+    seeded arena corruption + one poisoned stream) on a data=2 engine —
+    every healthy request bitwise equal to the fault-free run, the
+    poisoned one recovered on a fresh stream (solo-exact under its new
+    id), nothing failed permanently, and the faulted round loop still
+    compiles to zero collectives / zero pool-ranked scatters."""
+    rec = _run(FAULT_SCRIPT)
+    assert rec["all_ok"], rec
+    assert rec["healthy_equal"], rec
+    assert rec["poisoned_ok"] and rec["fresh_stream"], rec
+    assert rec["poisoned_solo_equal"], rec
+    assert rec["requests_failed"] == 0, rec
+    assert rec["retries"] >= 2, rec
+    assert rec["faults_injected"] >= 2, rec
+    assert rec["checksum_failures"] >= 1, rec
     assert all(c == 0 for c in rec["collectives"].values()), rec
     assert rec["pool_scatters"] == 0, rec
 
