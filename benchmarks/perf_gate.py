@@ -1,0 +1,134 @@
+"""CI perf gate for the device-resident continuous-batching scenario
+(DESIGN.md §15).
+
+Compares a fresh ``serving_bench.continuous_batching`` run (the
+``continuous_batching`` rows of ``benchmarks/artifacts/BENCH_serving.json``,
+produced by ``python -m benchmarks.run --serving-only``) against the pinned
+``BENCH_baseline.json`` at the repo root and fails on regression. The gated
+counters are pure event counts under fixed seeds on the CPU backend —
+host syncs per token, device dispatches per token, under-backlog occupancy,
+in-loop adoptions — so they are deterministic across machines and a small
+tolerance only absorbs library-version scheduling jitter, not noise.
+
+Gates per (mode, batch) row:
+
+* ``syncs_per_token``      fresh <= baseline * (1 + REL_TOL)
+* ``dispatches_per_token`` fresh <= baseline * (1 + REL_TOL)
+* ``occupancy_under_backlog`` fresh >= baseline - ABS_TOL
+* staged rows keep ``in_loop_adoptions > 0``
+
+Plus the cross-mode §15 bar re-asserted on the fresh rows: the staged
+engine stays strictly below host-admission on both per-token counters at
+every batch size.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --serving-only
+    python -m benchmarks.perf_gate            # exits 1 on regression
+
+Refreshing the pin after an intentional perf change::
+
+    python -m benchmarks.perf_gate --update   # rewrites BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REL_TOL = 0.05    # relative slack on per-token event counts
+ABS_TOL = 0.02    # absolute slack on occupancy fractions
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "BENCH_baseline.json")
+FRESH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "artifacts", "BENCH_serving.json")
+
+KEYS = ("syncs_per_token", "dispatches_per_token",
+        "occupancy_under_backlog", "in_loop_adoptions")
+
+
+def _cb_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for r in rows:
+        if r.get("scenario") != "continuous_batching":
+            continue
+        out[(r["mode"], r["batch"])] = {k: r[k] for k in KEYS}
+    return out
+
+
+def check(baseline: dict, fresh: dict) -> list[str]:
+    errs = []
+    for key, base in sorted(baseline.items()):
+        mode, batch = key
+        got = fresh.get(key)
+        if got is None:
+            errs.append(f"missing fresh row for mode={mode} batch={batch}")
+            continue
+        for k in ("syncs_per_token", "dispatches_per_token"):
+            if got[k] > base[k] * (1 + REL_TOL):
+                errs.append(
+                    f"{mode}/B{batch} {k} regressed: "
+                    f"{got[k]:.5f} > {base[k]:.5f} * {1 + REL_TOL}")
+        k = "occupancy_under_backlog"
+        if got[k] < base[k] - ABS_TOL:
+            errs.append(f"{mode}/B{batch} {k} regressed: "
+                        f"{got[k]:.4f} < {base[k]:.4f} - {ABS_TOL}")
+        if mode == "staged" and got["in_loop_adoptions"] <= 0:
+            errs.append(f"staged/B{batch} lost in-loop adoption "
+                        f"(adoptions={got['in_loop_adoptions']})")
+    # the §15 cross-mode bar, independent of the pin
+    batches = sorted({b for (_, b) in fresh})
+    for b in batches:
+        on, off = fresh.get(("staged", b)), fresh.get(("host-admission", b))
+        if not on or not off:
+            continue
+        for k in ("syncs_per_token", "dispatches_per_token"):
+            if not on[k] < off[k]:
+                errs.append(f"B{b} staged {k} not below host-admission: "
+                            f"{on[k]:.5f} vs {off[k]:.5f}")
+    return errs
+
+
+def main() -> int:
+    fresh = _cb_rows(FRESH)
+    if not fresh:
+        print(f"perf_gate: no continuous_batching rows in {FRESH}",
+              file=sys.stderr)
+        return 1
+    if "--update" in sys.argv:
+        pinned = [dict(mode=m, batch=b, **v)
+                  for (m, b), v in sorted(fresh.items())]
+        with open(BASELINE, "w") as f:
+            json.dump({"scenario": "continuous_batching",
+                       "backend": "cpu", "rows": pinned}, f, indent=1)
+            f.write("\n")
+        print(f"perf_gate: pinned {len(pinned)} rows -> {BASELINE}")
+        return 0
+    with open(BASELINE) as f:
+        pin = json.load(f)
+    baseline = {(r["mode"], r["batch"]): {k: r[k] for k in KEYS}
+                for r in pin["rows"]}
+    errs = check(baseline, fresh)
+    for key in sorted(fresh):
+        mode, batch = key
+        g = fresh[key]
+        b = baseline.get(key, {})
+        print(f"{mode}/B{batch}: syncs/tok {g['syncs_per_token']:.5f} "
+              f"(pin {b.get('syncs_per_token', float('nan')):.5f}) "
+              f"disp/tok {g['dispatches_per_token']:.5f} "
+              f"occ_bk {g['occupancy_under_backlog']:.4f} "
+              f"adoptions {g['in_loop_adoptions']}")
+    if errs:
+        print("perf_gate: FAIL", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("perf_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

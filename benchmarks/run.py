@@ -111,6 +111,16 @@ def _csv_rows_table(rows):
                                 f"prefills={r['prefill_calls']};"
                                 f"p95={r['latency_p95_s']}s;"
                                 f"backend={r['backend']}"))
+            elif r.get("scenario") == "continuous_batching":
+                out.append((f"serving/continuous_batching/"
+                            f"{r['mode']}/b{r['batch']}",
+                            f"{r['time_s']*1e6:.0f}",
+                            f"syncs_per_tok={r['syncs_per_token']};"
+                            f"disp_per_tok={r['dispatches_per_token']};"
+                            f"occ_backlog={r['occupancy_under_backlog']};"
+                            f"adoptions={r['in_loop_adoptions']};"
+                            f"staged={r['staged_sequences']};"
+                            f"backend={r['backend']}"))
             elif r.get("scenario") == "mesh_serving":
                 out.append((f"serving/mesh/data{r['data']}",
                             f"{r['mesh_wall_us_per_round']}",
@@ -168,12 +178,15 @@ def serving_only() -> None:
     sweep, the donation live-bytes measurement, the mesh-serving equality
     row (when the host exposes >= 2 devices — the CI mesh job forces 8),
     the host-tier A/B (spill + H2D restage vs drop, with its hit-rate /
-    prefill acceptance bar), plus one mixed-traffic run (prefix hit rate,
-    latency percentiles) on untrained weights — no acceptance bar
-    asserted for the latter."""
+    prefill acceptance bar), the §15 continuous-batching A/B (staged vs
+    host-admission — its per-token counters are pure event counts under
+    fixed seeds, so ``perf_gate`` pins them against BENCH_baseline.json),
+    plus one mixed-traffic run (prefix hit rate, latency percentiles) on
+    untrained weights — no acceptance bar asserted for the latter."""
     import jax
 
-    from benchmarks.serving_bench import (donation_round_bytes,
+    from benchmarks.serving_bench import (continuous_batching,
+                                          donation_round_bytes,
                                           fused_writeback, host_tier,
                                           mesh_serving, mixed_traffic,
                                           paged_vs_dense, round_loop,
@@ -191,6 +204,7 @@ def serving_only() -> None:
     rows.extend(saturation(cfg, params))
     rows.extend(saturation_mesh(cfg, params))
     rows.extend(host_tier(cfg, params))
+    rows.extend(continuous_batching(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))
     print("name,us_per_call,derived")
     for row in _csv_rows_table(rows):

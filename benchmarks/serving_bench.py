@@ -151,6 +151,11 @@ def run(fast: bool = True):
     # mesh serving (needs >= 2 devices; skipped on a single-device host)
     rows.extend(mesh_serving(cfg, params_rep))
 
+    # device-resident continuous batching: in-loop slot adoption + staged
+    # prompts + adaptive rounds_per_sync vs the k=1 host-admission path
+    # (DESIGN.md §15) — this is the CI perf gate's data source
+    rows.extend(continuous_batching(cfg, params_rep))
+
     # saturation: lookahead + preemption (+ mesh rebalancing) vs the
     # static head-of-line router on a skewed-length request mix
     rows.extend(saturation(cfg, params_rep))
@@ -486,6 +491,92 @@ def mesh_serving(cfg, params, batch: int = 4, new_tokens: int = 12,
 # Saturation: lookahead + preemption + rebalancing vs the static router
 # (DESIGN.md §12)
 # ---------------------------------------------------------------------------
+
+def continuous_batching(cfg, params, batches=(8, 32), seed: int = 29,
+                        assert_bar: bool = True):
+    """Device-resident continuous batching (DESIGN.md §15): a deep queued
+    backlog served by the staged engine (pre-staged prompts, in-loop slot
+    adoption, adaptive rounds_per_sync) vs the host-admission baseline
+    (``staging_slots=0``, whose ``k = 1``-under-backlog heuristic syncs
+    every round). Both counters the perf gate pins — host syncs per token
+    and device dispatches per token — are pure event counts, so the rows
+    are deterministic across machines. Asserts the acceptance bar: both
+    strictly below the baseline at every batch size, under-backlog
+    occupancy saturated and within an adoption-latency allowance of the
+    baseline's 1.0-by-construction (the whole-run weighted mean would
+    instead rank engines by drain-tail composition noise), tokens bitwise
+    identical per uid."""
+    rows = []
+    rng = np.random.default_rng(seed)
+    for B in batches:
+        n_req = 3 * B                               # 3 requests per slot
+        prompts = [rng.integers(0, cfg.vocab, int(rng.integers(2, 7)))
+                   for _ in range(n_req)]
+        new_tok = [int(rng.integers(8, 17)) for _ in range(n_req)]
+        results, mets = {}, {}
+        for mode, slots in (("host-admission", 0), ("staged", 4)):
+            eng = ServingEngine(cfg, params, batch=B, window_max=4,
+                                max_len=64, eps_key=jax.random.PRNGKey(11),
+                                block_size=4, adaptive=False,
+                                rounds_per_sync=8, staging_slots=slots)
+            for i, (p, nt) in enumerate(zip(prompts, new_tok)):
+                eng.submit(Request(uid=i, prompt=p, new_tokens=nt))
+            t0 = time.time()
+            done = eng.run()
+            dt = time.time() - t0
+            assert len(done) == n_req, (mode, len(done))
+            results[mode] = {r.uid: r.result for r in done}
+            m = eng.export_metrics()
+            mets[mode] = m
+            rows.append({
+                "table": "serving", "scenario": "continuous_batching",
+                "mode": mode, "batch": B, "requests": n_req,
+                "backend": jax.default_backend(),
+                "tokens_generated": m["tokens_generated"],
+                "host_syncs": m["host_syncs"],
+                "device_dispatches": m["device_dispatches"],
+                "syncs_per_token": round(m["syncs_per_token"], 5),
+                "dispatches_per_token": round(m["dispatches_per_token"], 5),
+                "rounds_per_sync": round(m["rounds_per_sync"], 3),
+                "occupancy_under_backlog": round(
+                    m["occupancy_under_backlog"], 4),
+                "occupancy_weighted": round(m["occupancy_weighted"], 4),
+                "mean_batch_occupancy": round(m["mean_batch_occupancy"], 4),
+                "in_loop_adoptions": m["in_loop_adoptions"],
+                "staged_sequences": m["staged_sequences"],
+                "staging_occupancy": round(m["staging_occupancy"], 4),
+                "idle_row_rounds": m["idle_row_rounds"],
+                "rounds_per_sync_final": m["rounds_per_sync_final"],
+                "time_s": round(dt, 3),
+            })
+        for uid, toks in results["host-admission"].items():
+            assert (results["staged"][uid] == toks).all(), \
+                f"staging changed tokens (uid {uid})"
+        if assert_bar:
+            on, off = mets["staged"], mets["host-admission"]
+            assert on["syncs_per_token"] < off["syncs_per_token"], (
+                B, on["syncs_per_token"], off["syncs_per_token"])
+            assert on["dispatches_per_token"] < off["dispatches_per_token"], (
+                B, on["dispatches_per_token"], off["dispatches_per_token"])
+            # occupancy bar, measured where it means something: loops
+            # dispatched WITH backlog. The k=1 baseline is 1.0 there by
+            # construction (it syncs every round; refill is instant), so
+            # "no worse" carries an adoption-latency allowance: a freed
+            # row may idle <= 1 round before the adoption scan or the
+            # starvation exit reacts, i.e. idle fraction <= frees/(B*k)
+            # — up to ~5% at B=8, shrinking with batch. The real
+            # requirement is that occupancy stays SATURATED instead of
+            # cratering for k rounds per freed row, which is what an
+            # adoption-less long loop does.
+            assert on["occupancy_under_backlog"] >= 0.95, (
+                B, on["occupancy_under_backlog"])
+            assert (on["occupancy_under_backlog"]
+                    >= off["occupancy_under_backlog"] - 0.05), (
+                B, on["occupancy_under_backlog"],
+                off["occupancy_under_backlog"])
+            assert on["in_loop_adoptions"] > 0, B
+    return rows
+
 
 def saturation(cfg, params, n_small: int = 40, seed: int = 31,
                assert_bar: bool = True):

@@ -18,9 +18,10 @@ import numpy as np
 from repro import optim
 from repro.configs import get_config
 from repro.data.synthetic import repetitive_tokens
-from repro.engine import ContinuousBatcher, PredictiveSampler, Request
+from repro.engine import PredictiveSampler, Request
 from repro.models.losses import lm_loss
 from repro.models.transformer import TransformerLM
+from repro.serving import ServingEngine
 
 
 def main():
@@ -29,6 +30,17 @@ def main():
     ap.add_argument("--train-steps", type=int, default=250)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--rounds-per-sync", type=int, default=8,
+                    help="max verify rounds per device dispatch")
+    ap.add_argument("--staging-slots", type=int, default=4,
+                    help="pre-staged requests per shard for in-loop slot "
+                         "adoption (DESIGN.md §15); 0 disables staging and "
+                         "restores host-only admission")
+    ap.add_argument("--adaptive-rounds", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="retune rounds_per_sync from observed idle "
+                         "row-rounds (default: on exactly when staging is "
+                         "on; requires --staging-slots > 0)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -52,9 +64,12 @@ def main():
             params, state, jnp.asarray(data[rng.integers(0, 256, 16)]))
     print(f"  final loss {float(l):.3f}")
 
-    sampler = PredictiveSampler(cfg, params, window=args.window, max_len=128,
-                                eps_key=jax.random.PRNGKey(1))
-    batcher = ContinuousBatcher(sampler, batch=2)
+    batcher = ServingEngine(
+        cfg, params, batch=2, window_max=args.window, max_len=128,
+        eps_key=jax.random.PRNGKey(1), adaptive=False,
+        rounds_per_sync=args.rounds_per_sync,
+        staging_slots=args.staging_slots,
+        adaptive_rounds=args.adaptive_rounds)
     for i in range(args.requests):
         prompt = repetitive_tokens(1, int(rng.integers(4, 10)), cfg.vocab,
                                    seed=100 + i)[0]
@@ -72,11 +87,16 @@ def main():
     for r in done:
         print(f"  req {r.uid}: +{r.new_tokens} tok, "
               f"{r.calls_used} calls, tail={r.result[-8:]}")
-    m = batcher.export_metrics()   # ContinuousBatcher is a paged ServingEngine
+    m = batcher.export_metrics()
     print(f"telemetry: p50={m['latency_p50_s']:.2f}s "
           f"p95={m['latency_p95_s']:.2f}s "
           f"occupancy={m['mean_batch_occupancy']:.2f} "
           f"blocks_in_use={m['blocks_in_use']}")
+    print(f"residency: syncs/token={m['syncs_per_token']:.3f} "
+          f"rounds/sync={m['rounds_per_sync']:.2f} "
+          f"in-loop adoptions={m['in_loop_adoptions']} "
+          f"(staged {m['staged_sequences']}, "
+          f"k_final={m['rounds_per_sync_final']})")
 
 
 if __name__ == "__main__":

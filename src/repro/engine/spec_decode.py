@@ -158,7 +158,8 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
                  use_forecast_heads: bool = False,
                  use_verify_kernel: bool = False,
                  paged: Optional[PagedView] = None,
-                 poison=None):
+                 poison=None,
+                 prompt_len=None):
     """One verify round over ``state``. W is taken from
     ``state.cand.shape[1]`` so callers may vary the window round-to-round
     (adaptive speculation): candidates only gate acceptance, never token
@@ -182,7 +183,18 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     DESIGN.md §11). The ``nonfinite`` health column is always computed
     (one cheap ``isfinite`` reduce next to the vocab matmul): any NaN/inf
     in a row's logits — poisoned or genuinely numerically broken — reports
-    1 there, the engine's quarantine signal (§14)."""
+    1 there, the engine's quarantine signal (§14).
+
+    ``prompt_len`` (B,) int32, optional, enables *forced-acceptance
+    prefill* (DESIGN.md §15): rows whose accepted length ``n`` is still
+    inside their prompt (``n < prompt_len``) carry true prompt tokens in
+    their candidate window, so every window slot landing on a prompt
+    position is force-matched (the prompt is ground truth — no sampling
+    gate applies), token writes preserve the prompt region, and the next
+    window is overlaid with prompt tokens wherever it still covers the
+    prompt. A row with ``prompt_len <= n`` is bitwise unaffected (every
+    forced-match / mask / overlay predicate is False), so resident
+    sequences and the ``prompt_len=None`` solo path stay exact."""
     B, W = state.cand.shape
     max_len = state.tokens.shape[1]
     active = state.n < target_len
@@ -209,6 +221,12 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
 
     # accept length: slot t+1 valid while candidate c_{n+t} matched o_t
     match = state.cand[:, 1:] == out[:, :-1]               # (B, W-1)
+    if prompt_len is not None:
+        # forced-acceptance prefill: candidate c_{n+t} at a prompt position
+        # is the true prompt token — no gate applies
+        forced = (state.n[:, None] + jnp.arange(W - 1)[None, :]) \
+            <= (prompt_len[:, None] - 1)
+        match = match | forced
     a = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
     a = jnp.minimum(a, jnp.maximum(target_len - state.n, 1))
     a = jnp.where(active, a, 0)
@@ -216,6 +234,8 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
     # write accepted tokens
     pos = jnp.arange(max_len)[None, :]
     newly = (pos >= state.n[:, None]) & (pos < (state.n + a)[:, None])
+    if prompt_len is not None:
+        newly = newly & (pos >= prompt_len[:, None])   # preserve the prompt
     slot = jnp.clip(pos - state.n[:, None], 0, W - 1)
     tokens = jnp.where(newly, jnp.take_along_axis(out, slot, axis=1),
                        state.tokens)
@@ -268,6 +288,14 @@ def verify_round(params, cfg, eps_fn, state: GenState, target_len,
             eps_next)
         use_fc = (~valid_fpi) & (s_idx[None, :] < T)
         cand = jnp.where(use_fc, fc_tok, cand)
+
+    if prompt_len is not None:
+        # next-window slots still inside the prompt must carry the true
+        # prompt tokens (they source the K/V writes + the forced matches)
+        p = (n_new - 1)[:, None] + jnp.arange(W)[None, :]
+        prompt_tok = jnp.take_along_axis(
+            tokens, jnp.clip(p, 0, max_len - 1), axis=1)
+        cand = jnp.where(p <= prompt_len[:, None] - 1, prompt_tok, cand)
 
     # slot 0 must be the last accepted token
     last_tok = jnp.take_along_axis(tokens,

@@ -13,7 +13,10 @@ donation (A/B for the copy-per-round cost); ``--lookahead`` /
 ``--max-head-bypass`` / ``--no-preempt`` / ``--preempt-floor`` /
 ``--no-rebalance`` tune the saturation-safe scheduler (DESIGN.md §12:
 lookahead admission, priority preemption with exact resume, shard
-rebalancing by sequence migration).
+rebalancing by sequence migration); ``--staging-slots`` /
+``--adaptive-rounds`` turn on device-resident continuous batching
+(DESIGN.md §15: pre-staged prompts adopted into freed rows inside the
+round loop, rounds_per_sync retuned from idle row-rounds).
 
 Also exports ``make_serve_step`` — the W-token verify step the multi-pod
 dry-run lowers for the decode shapes (decode_32k / long_500k).
@@ -122,7 +125,20 @@ def main(argv=None):
                          "copy-per-round behaviour; for A/B measurement)")
     ap.add_argument("--rounds-per-sync", type=int, default=4,
                     help="device-resident verify rounds per host sync "
-                         "(lax.while_loop trip bound; 1 = host-driven)")
+                         "(lax.while_loop trip bound; 1 = host-driven; "
+                         "with --adaptive-rounds this is the k_max bound)")
+    ap.add_argument("--staging-slots", type=int, default=0,
+                    help="queued requests pre-staged per shard for "
+                         "in-loop slot adoption (DESIGN.md §15: freed "
+                         "rows adopt staged work mid-loop, no sync to "
+                         "refill); 0 = host-only admission, compiles the "
+                         "legacy round program byte-identically")
+    ap.add_argument("--adaptive-rounds", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="retune rounds_per_sync from the idle row-round "
+                         "EWMA the way W is retuned from acceptance "
+                         "(default: on exactly when staging is on; "
+                         "requires --staging-slots > 0)")
     ap.add_argument("--lookahead", type=int, default=8,
                     help="admission lookahead depth: queued requests "
                          "scanned past an unroutable head (1 = the old "
@@ -182,6 +198,8 @@ def main(argv=None):
                            prefix_cache=not args.no_prefix_cache,
                            topology=topo, donate=not args.no_donate,
                            rounds_per_sync=args.rounds_per_sync,
+                           staging_slots=args.staging_slots,
+                           adaptive_rounds=args.adaptive_rounds,
                            lookahead=args.lookahead,
                            max_head_bypass=args.max_head_bypass,
                            preempt=not args.no_preempt,

@@ -20,6 +20,7 @@ retune freely mid-request.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -40,9 +41,12 @@ class AdaptiveWindowController:
     headroom: float = 1.7        # W targets headroom * expected accept
     patience: int = 2            # rounds a proposal must persist
     enabled: bool = True
+    history_cap: int = 4096      # telemetry ring bound (a long-lived server
+    #                              syncs millions of times; never leak)
 
     def __post_init__(self):
         assert self.w_max >= 1
+        assert self.history_cap >= 1
         if self.w_init <= 0:
             self._w = self.w_max       # optimistic start at the bound
         else:
@@ -52,7 +56,7 @@ class AdaptiveWindowController:
         self._ewma = float(self._w)   # optimistic: assume the window fills
         self._pending = self._w
         self._streak = 0
-        self.history: list[int] = []
+        self.history: deque[int] = deque(maxlen=self.history_cap)
 
     @property
     def window(self) -> int:
@@ -97,3 +101,82 @@ class AdaptiveWindowController:
         if self._streak >= self.patience and prop != self._w:
             self._w = prop
         return self._w
+
+
+@dataclass
+class RoundsPerSyncController:
+    """Adaptive ``rounds_per_sync`` (DESIGN.md §15): retune the device-loop
+    length k from observed *idle row-rounds* the way W is retuned from
+    acceptance.
+
+    With in-loop slot adoption the old binary heuristic (``k = 1`` whenever
+    backlog is queued) inverts: a queued backlog is exactly when long loops
+    pay off, because freed rows adopt staged work without a sync. The
+    remaining cost of a long loop is idle tail — rows that finished and
+    found the staging area drained. The controller tracks an EWMA of the
+    per-loop idle fraction (idle row-rounds over total row-rounds) and
+    walks k on the pow2 grid up to ``k_max``: grow while loops run full
+    with negligible idle, shrink when the idle fraction says the host
+    should have synced earlier to restage. Hysteresis mirrors
+    :class:`AdaptiveWindowController` — a proposal must persist
+    ``patience`` syncs. k only gates WHEN the host syncs, never token
+    values, so exactness is indifferent to it.
+    """
+    k_max: int = 8
+    k_init: int = 0              # 0 -> start at 1 (sync-heavy, observe first)
+    alpha: float = 0.4           # EWMA weight of the newest loop
+    grow_below: float = 0.05     # idle_frac under which a full loop grows k
+    shrink_above: float = 0.25   # idle_frac above which k shrinks
+    patience: int = 2            # syncs a proposal must persist
+    enabled: bool = True
+    history_cap: int = 4096
+
+    def __post_init__(self):
+        assert self.k_max >= 1
+        assert self.history_cap >= 1
+        k = self.k_init if self.k_init > 0 else 1
+        k = min(k, self.k_max)
+        self._k = k if k == self.k_max else _pow2_at_most(k)
+        self._idle_ewma = 0.0
+        self._pending = self._k
+        self._streak = 0
+        self.history: deque[int] = deque(maxlen=self.history_cap)
+
+    @property
+    def k(self) -> int:
+        return self._k
+
+    @property
+    def ewma_idle(self) -> float:
+        return self._idle_ewma
+
+    def observe(self, loop_rounds: int, idle_row_rounds: int,
+                rows: int, backlog: int) -> int:
+        """Feed one sync's loop stats: rounds the loop actually executed,
+        row-rounds spent idle (row free, staging drained), batch rows, and
+        the host-side backlog still queued after restaging. Returns k for
+        the next dispatch."""
+        self.history.append(self._k)
+        if not self.enabled or loop_rounds <= 0 or rows <= 0:
+            return self._k
+        idle = float(idle_row_rounds) / float(rows * loop_rounds)
+        self._idle_ewma += self.alpha * (idle - self._idle_ewma)
+        ran_full = loop_rounds >= self._k
+        if self._idle_ewma > self.shrink_above:
+            prop = max(self._k // 2, 1)
+        elif ran_full and self._idle_ewma < self.grow_below:
+            prop = self._k * 2
+            prop = prop if prop <= self.k_max else self.k_max
+            if prop != self.k_max:
+                prop = _pow2_at_most(prop)
+        else:
+            prop = self._k
+        if backlog <= 0 and prop > self._k:
+            prop = self._k          # nothing to adopt: growth buys no refill
+        if prop == self._pending:
+            self._streak += 1
+        else:
+            self._pending, self._streak = prop, 1
+        if self._streak >= self.patience and prop != self._k:
+            self._k = prop
+        return self._k

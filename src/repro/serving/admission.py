@@ -124,6 +124,63 @@ def prefill_chunks(length: int, max_chunk: int = 64) -> list[int]:
     return out
 
 
+@dataclass
+class StagedEntry:
+    """One pre-staged request awaiting in-loop adoption (DESIGN.md §15).
+
+    Host admission builds these for queued requests while every slot is
+    occupied: worst-case blocks are allocated up front (run-to-completion —
+    an adopted row never allocates mid-loop), device/host prefix hits cover
+    the first ``n0 - 1`` positions, and the descriptor fields below are
+    what ``pack_staged_descriptors`` uploads for the device-side adoption
+    scan. ``key`` is the request's admission-queue rank — staging commits
+    strictly in queue order, and a higher-ranked arrival unstages the area
+    (``_reconcile_staging``) rather than jumping it."""
+    req: Request
+    shard: int
+    prompt: np.ndarray           # (L_p,) int32 — fills the staged row buffer
+    n0: int                      # adoption start: covered positions + 1
+    plen: int                    # prompt length (forced-accept boundary)
+    target: int                  # plen + new_tokens
+    blocks: list                 # shard-local ids, worst case, table order
+    table_row: np.ndarray        # (nb,) int32
+    poison: int                  # §14 poison-mask value for this stream
+    key: tuple                   # (priority, deadline_time, _seq)
+
+
+def pack_staged_descriptors(staged, slots_per_shard: int, nb: int,
+                            max_len: int) -> tuple:
+    """Pack per-shard staged-entry lists into the eight descriptor arrays
+    of the §15 round ABI, shard-major (``index = shard * S + i``, FIFO
+    within a shard — the order the device adoption scan consumes them):
+    ``(valid, tables, tokens, n, target, seq, poison, plen)``. Unused
+    descriptors are zero/invalid; an all-invalid pack is the bit-exact
+    no-op the adoption scan reduces to when nothing is staged."""
+    S = slots_per_shard
+    D = len(staged)
+    valid = np.zeros(D * S, np.int32)
+    tables = np.zeros((D * S, nb), np.int32)
+    tokens = np.zeros((D * S, max_len), np.int32)
+    n0 = np.ones(D * S, np.int32)
+    target = np.zeros(D * S, np.int32)
+    seq = np.zeros(D * S, np.int32)
+    poison = np.zeros(D * S, np.int32)
+    plen = np.zeros(D * S, np.int32)
+    for s, entries in enumerate(staged):
+        assert len(entries) <= S, (len(entries), S)
+        for i, e in enumerate(entries):
+            j = s * S + i
+            valid[j] = 1
+            tables[j] = e.table_row
+            tokens[j, :len(e.prompt)] = e.prompt
+            n0[j] = e.n0
+            target[j] = e.target
+            seq[j] = e.req.seq_id
+            poison[j] = e.poison
+            plen[j] = e.plen
+    return valid, tables, tokens, n0, target, seq, poison, plen
+
+
 class AdmissionQueue:
     """Priority + earliest-deadline + FCFS admission queue with bounded
     lookahead and exact-resume requeue."""

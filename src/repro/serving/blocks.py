@@ -215,6 +215,66 @@ class BlockManager:
         return len(blocks)
 
 
+class StagingLedger:
+    """Staged-block reservation accounting for in-loop adoption
+    (DESIGN.md §15).
+
+    Staging pre-allocates a queued request's worst-case block need *before*
+    the dispatch that may adopt it, so the device loop never allocates. The
+    ledger guards the pool from staging starving resident sequences: a
+    stage claim is granted only out of the headroom the caller computes
+    *net of resident reservations*, and is tracked per shard + per request
+    so reconciliation (unstage / adopt / cancel) releases exactly what was
+    claimed. The ledger never touches the ``BlockManager`` free lists — the
+    engine allocates/releases the actual blocks; the ledger is the
+    admission-side bookkeeping that says whether it may.
+    """
+
+    def __init__(self, slots_per_shard: int):
+        assert slots_per_shard >= 0
+        self.slots_per_shard = slots_per_shard
+        self._claims: dict[tuple[int, int], int] = {}   # (shard, uid) -> blocks
+        self._by_shard: dict[int, int] = {}             # shard -> blocks claimed
+        self._count: dict[int, int] = {}                # shard -> staged entries
+
+    # -- queries -----------------------------------------------------------
+    def staged_blocks(self, shard: int) -> int:
+        return self._by_shard.get(shard, 0)
+
+    def staged_count(self, shard: int) -> int:
+        return self._count.get(shard, 0)
+
+    def has(self, shard: int, uid: int) -> bool:
+        return (shard, uid) in self._claims
+
+    # -- lifecycle ---------------------------------------------------------
+    def try_claim(self, shard: int, uid: int, need: int,
+                  headroom: int) -> bool:
+        """Claim ``need`` blocks of ``shard``'s pool for staged request
+        ``uid``. ``headroom`` is the caller's free-block count net of
+        resident worst-case reservations AND of this ledger's existing
+        claims on the shard. Refuses when the shard's staging slots are
+        full or the claim would eat into resident headroom."""
+        assert (shard, uid) not in self._claims, (shard, uid)
+        if self._count.get(shard, 0) >= self.slots_per_shard:
+            return False
+        if need > headroom:
+            return False
+        self._claims[(shard, uid)] = need
+        self._by_shard[shard] = self._by_shard.get(shard, 0) + need
+        self._count[shard] = self._count.get(shard, 0) + 1
+        return True
+
+    def release(self, shard: int, uid: int) -> int:
+        """Drop a claim (the request was unstaged, adopted — its blocks now
+        counted as resident — or cancelled). Returns the claimed size."""
+        need = self._claims.pop((shard, uid))
+        self._by_shard[shard] -= need
+        self._count[shard] -= 1
+        assert self._by_shard[shard] >= 0 and self._count[shard] >= 0
+        return need
+
+
 class ShardedBlockPool:
     """Per-data-shard ``BlockManager``s with pool-pressure routing on top
     (DESIGN.md §10).

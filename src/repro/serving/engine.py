@@ -106,10 +106,13 @@ import numpy as np
 from repro.engine.spec_decode import GenState, make_eps_fn, verify_round
 from repro.kernels import resolve_interpret
 from repro.models.transformer import PagedView, TransformerLM
-from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
+from repro.serving.admission import (AdmissionQueue, Request, StagedEntry,
+                                     pack_staged_descriptors, pow2_at_most,
                                      prefill_chunks)
-from repro.serving.adaptive import AdaptiveWindowController
-from repro.serving.blocks import ShardedBlockPool, chain_hashes
+from repro.serving.adaptive import (AdaptiveWindowController,
+                                    RoundsPerSyncController)
+from repro.serving.blocks import (ShardedBlockPool, StagingLedger,
+                                  chain_hashes)
 from repro.serving.faults import CircuitBreaker, FaultPlan, RequestError
 from repro.serving.metrics import EngineMetrics
 from repro.serving.topology import ServingTopology
@@ -174,10 +177,16 @@ class ServingEngine:
                  max_request_seconds: Optional[float] = None,
                  max_request_rounds: Optional[int] = None,
                  integrity_checks: bool = True,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 staging_slots: int = 0,
+                 adaptive_rounds: Optional[bool] = None,
+                 host_prefetch: Optional[bool] = None,
+                 prefetch_budget: int = 4):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         assert rounds_per_sync >= 1, rounds_per_sync
+        assert staging_slots >= 0, staging_slots
+        assert prefetch_budget >= 0, prefetch_budget
         assert lookahead >= 1, lookahead
         assert max_head_bypass >= 0, max_head_bypass
         assert 0.0 <= preempt_floor <= 1.0, preempt_floor
@@ -209,6 +218,28 @@ class ServingEngine:
         # device-resident rounds: up to this many verify rounds run inside
         # one dispatch (lax.while_loop) between host syncs; 1 = host-driven
         self.rounds_per_sync = rounds_per_sync
+        # device-resident continuous batching (DESIGN.md §15): admission
+        # pre-stages up to ``staging_slots`` queued requests PER SHARD into
+        # spare pool blocks; inside the round loop a freed (or quarantined)
+        # row adopts the next staged descriptor without a host sync.
+        # ``adaptive_rounds`` replaces the binary ``k = 1 if queue`` sync
+        # heuristic with a controller retuned from observed idle row-rounds;
+        # it defaults on exactly when staging is on (without adoption a long
+        # loop under backlog just strands freed rows).
+        self.staging_slots = staging_slots
+        # the controller's idle signal only exists in the staged stats ABI,
+        # so adaptivity is meaningful (and allowed) only with staging on
+        self.adaptive_rounds = (staging_slots > 0 if adaptive_rounds is None
+                                else bool(adaptive_rounds)
+                                and staging_slots > 0)
+        self.rounds_ctrl = RoundsPerSyncController(
+            k_max=rounds_per_sync, enabled=self.adaptive_rounds)
+        # host-tier prefix prefetch for QUEUED requests (§15 satellite):
+        # restage their host-resident prefix blocks through the staging
+        # ring while they wait instead of at admission
+        self.host_prefetch = (staging_slots > 0 if host_prefetch is None
+                              else bool(host_prefetch))
+        self.prefetch_budget = prefetch_budget
         # saturation-safe scheduling (DESIGN.md §12): admission lookahead
         # window, head-aging bound, priority preemption (+ progress floor:
         # slots past this generated fraction are never evicted), and
@@ -306,6 +337,13 @@ class ServingEngine:
         # parked (preempted) sequences by request uid, awaiting exact resume
         self.parked: dict[int, ParkedSequence] = {}
         self._last_rounds_exec = 0
+        # staging area (§15): per-shard FIFO of pre-staged entries, a
+        # ledger capping their block claims to spare headroom (staging can
+        # never starve resident reservations), and the prefetched host-tier
+        # rows of still-queued requests ``uid -> (shard, {key: dev rows})``
+        self.staged: list[list[StagedEntry]] = [[] for _ in range(D)]
+        self.ledger = StagingLedger(staging_slots)
+        self._prefetched: dict[int, tuple[int, dict]] = {}
 
         # ---- per-slot device state (slot dim sharded over "data") -------
         self.tokens = self.topo.put_batch(jnp.zeros((batch, max_len),
@@ -314,7 +352,14 @@ class ServingEngine:
         # ^ cleared-row sentinel n=1
         self.cand = self.topo.put_batch(jnp.zeros((batch, window_max),
                                                   jnp.int32))
-        self.seq_ids = self.topo.put_batch(jnp.zeros((batch,), jnp.int32))
+        # noise-stream ids: host mirror + cached upload (the staged round
+        # ABI loop-carries the device copy so in-loop adoption can swap a
+        # row's stream; the host mirror stays authoritative for admission)
+        self.seq_ids = np.zeros(batch, np.int32)
+        # per-slot prompt length: rows at n >= plen behave identically to
+        # the legacy engine (forced-acceptance prefill is a provable no-op
+        # there); only rows adopted mid-loop ever see n < plen
+        self.plen = np.zeros(batch, np.int64)
         # per-slot poison mask (§14): rows whose noise stream is scripted in
         # ``faults.poison_streams`` get their verify-round logits
         # NaN-replaced on device — the injection point of the quarantine
@@ -326,6 +371,8 @@ class ServingEngine:
         self._tables_dev = None
         self._target_dev = None
         self._poison_dev = None
+        self._seq_dev = None
+        self._plen_dev = None
 
         self._round_fns: dict[tuple[int, int], callable] = {}
         self._prefill_fns: dict[int, callable] = {}
@@ -408,6 +455,23 @@ class ServingEngine:
         bad row leaves every healthy row bitwise identical to a fault-free
         run, and inactive rows remain no-ops as before.
 
+        With ``staging_slots > 0`` the loop additionally performs **in-loop
+        slot adoption** (DESIGN.md §15): the body opens with a device-side
+        free-row scan — rows done or quarantined — that adopts the next
+        staged descriptors (FIFO) into those rows: table-row swap, staged
+        prompt buffer, fresh noise stream, and forced-acceptance prefill at
+        the same verify widths (``prompt_len``), so occupancy stays
+        saturated with ZERO extra host pulls. The ABI grows to loop-carry
+        everything adoption mutates (tables/seq_ids/target/poison/plen) and
+        returns per-descriptor episode stats plus the displaced token rows;
+        the packed stats widen to (R, 7) ``[..., gen_rounds, idle_rounds]``.
+        Every adoption-scan write is a rank-2 scatter into the small
+        descriptor-keyed outputs — the pool itself is only ever touched by
+        the same verify-round writeback, so the zero-pool-ranked-scatter and
+        zero-collective HLO gates hold unchanged. With ``staging_slots ==
+        0`` the legacy 9-arg program below is built bit-for-bit unchanged
+        (cached host uploads stay identity-stable across steps).
+
         Under a mesh topology the whole loop runs shard_map-manual over
         "data": each shard sees its local rows, its local tables, and its
         local block sub-pool, and — crucially — its while_loop stops on its
@@ -417,6 +481,9 @@ class ServingEngine:
         after the loop), so XLA updates the pool in place round over round
         instead of copying it."""
         if (W, k) not in self._round_fns:
+            if self.staging_slots > 0:
+                self._round_fns[(W, k)] = self._build_staged_round(W, k)
+                return self._round_fns[(W, k)]
             cfg = self.cfg
 
             def fn(params, paged, tables, tokens, n, cand, seq_ids, target,
@@ -489,13 +556,202 @@ class ServingEngine:
             self._round_fns[(W, k)] = jax.jit(wrapped, donate_argnums=donate)
         return self._round_fns[(W, k)]
 
+    def _build_staged_round(self, W: int, k: int):
+        """The ``staging_slots > 0`` round-loop program (DESIGN.md §15).
+
+        ABI: ``fn(params, paged, tables, tokens, n, cand, seq_ids, target,
+        poison, plen, d_valid, d_tables, d_tokens, d_n, d_target, d_seq,
+        d_poison, d_plen, q_more) -> (paged, tables, tokens, n, cand,
+        seq_ids, target, poison, plen, stats, adopt_stats, out_tokens)``.
+        The d_* descriptor arrays hold this dispatch's staged entries,
+        shard-major ``[shard * S + i]`` (S = staging_slots per shard, FIFO
+        within a shard); they are uploaded fresh per dispatch and consumed
+        in order by the in-loop adoption scan. ``q_more`` is the per-shard
+        starvation-exit flag: 1 while the host holds backlog beyond the
+        staged set, letting the cond sync early once a row frees with the
+        area drained (see ``cond``). Outputs keyed by descriptor:
+        ``adopt_stats`` (S, 6) int32 ``[local_row, n, accepted,
+        rounds_active, bad, gen_rounds]`` of the episode the adoption
+        DISPLACED (-1 rows = descriptor not adopted), and ``out_tokens``
+        (S, max_len) the displaced token row — the finished sequence whose
+        slot was recycled mid-loop. The loop keeps running while any row is
+        live OR descriptors remain unconsumed (adopted rows always start at
+        ``n < target``, so every iteration makes progress toward one of the
+        two bounds; ``r < k`` caps the trip count regardless)."""
+        cfg = self.cfg
+
+        def fn(params, paged, tables, tokens, n, cand, seq_ids, target,
+               poison, plen, d_valid, d_tables, d_tokens, d_n, d_target,
+               d_seq, d_poison, d_plen, q_more):
+            R = tokens.shape[0]          # rows on this shard (B/D)
+            S = d_valid.shape[0]         # staged descriptors on this shard
+            max_len = tokens.shape[1]
+            Wm = cand.shape[1]
+            rows = jnp.arange(R)
+            count = jnp.sum(d_valid)     # shard-local, no collective
+
+            def one_round(paged, tokens, n, cand, tables, seq_ids, target,
+                          poison, plen):
+                if self.paged_attention:
+                    cache = paged
+                    pv = PagedView(tables, rows, self.use_attention_kernel)
+                else:
+                    cache = TransformerLM.gather_paged(cfg, paged,
+                                                       tables, rows)
+                    pv = None
+                st = GenState(tokens, n, cand[:, :W], cache,
+                              jnp.zeros((), jnp.int32),
+                              jnp.zeros((R,), jnp.int32),
+                              jnp.zeros((R,), jnp.int32), seq_ids)
+                st2, rstats = verify_round(
+                    params, cfg, self.eps_fn, st, target,
+                    use_forecast_heads=self.use_forecast_heads,
+                    use_verify_kernel=self.use_verify_kernel, paged=pv,
+                    poison=poison, prompt_len=plen)
+                if self.paged_attention:
+                    paged2 = st2.cache
+                else:
+                    active = n < target
+                    paged2 = TransformerLM.scatter_paged(
+                        cfg, paged, st2.cache, tables, rows,
+                        jnp.maximum(n - 1, 0), W, active)
+                cand2 = jnp.zeros_like(cand).at[:, :W].set(st2.cand)
+                return paged2, st2.tokens, st2.n, cand2, rstats
+
+            def cond(carry):
+                n_c, target_c, bad = carry[3], carry[6], carry[11]
+                m, r = carry[14], carry[15]
+                live = jnp.any((n_c < target_c) & (bad == 0))
+                # starvation exit: a freed row with the staging area drained
+                # while the host still holds backlog (q_more) means the
+                # right move is to sync NOW and let the host restage —
+                # idling to the k bound is the one cost adoption can't fix.
+                # (After at least one round, so a dispatch always makes
+                # progress even when admission is stuck on capacity.)
+                free_now = (n_c >= target_c) | (bad > 0)
+                starve = ((q_more[0] > 0) & (m >= count)
+                          & jnp.any(free_now) & (r > 0))
+                return (r < k) & (live | (m < count)) & ~starve
+
+            def body(carry):
+                (paged_c, tables_c, tokens_c, n_c, cand_c, seq_c, target_c,
+                 poison_c, plen_c, acc, act, bad, gen, idle, m, r, astats,
+                 otok) = carry
+                # ---- in-loop adoption scan: freed/quarantined rows pull
+                # the next staged descriptors, FIFO, without a sync -------
+                free = (n_c >= target_c) | (bad > 0)
+                rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+                desc = m + rank              # FIFO: row order breaks ties
+                take = free & (desc < count)
+                di = jnp.where(take, desc, S)    # S = scatter-drop sentinel
+                # displaced episodes, keyed by descriptor (rank-2 scatters:
+                # the pool never appears on the left of an adoption write)
+                otok = otok.at[di].set(tokens_c, mode="drop")
+                ep = jnp.stack([rows.astype(jnp.int32), n_c, acc, act, bad,
+                                gen], axis=1)
+                astats = astats.at[di].set(ep, mode="drop")
+                src = jnp.clip(desc, 0, S - 1)
+                tk = take[:, None]
+                tokens_c = jnp.where(tk, d_tokens[src], tokens_c)
+                tables_c = jnp.where(tk, d_tables[src], tables_c)
+                n_c = jnp.where(take, d_n[src], n_c)
+                seq_c = jnp.where(take, d_seq[src], seq_c)
+                target_c = jnp.where(take, d_target[src], target_c)
+                poison_c = jnp.where(take, d_poison[src], poison_c)
+                plen_c = jnp.where(take, d_plen[src], plen_c)
+                # adopted verify window: slots inside the prompt carry the
+                # true prompt tokens (they source the K/V writes and the
+                # forced matches); slot 0 = token at n0-1 is always covered
+                p = (d_n[src] - 1)[:, None] + jnp.arange(Wm)[None, :]
+                ptok = jnp.take_along_axis(
+                    d_tokens[src], jnp.clip(p, 0, max_len - 1), axis=1)
+                a_cand = jnp.where((p <= (d_plen[src] - 1)[:, None])
+                                   & (jnp.arange(Wm)[None, :] < W), ptok, 0)
+                cand_c = jnp.where(tk, a_cand, cand_c)
+                # fresh episode accumulators + a zeroed recurrent row (the
+                # adopted sequence replays its prompt from scratch there)
+                acc = jnp.where(take, 0, acc)
+                act = jnp.where(take, 0, act)
+                bad = jnp.where(take, 0, bad)
+                gen = jnp.where(take, 0, gen)
+                idle = idle + (free & ~take).astype(jnp.int32)
+                m = m + jnp.sum(take.astype(jnp.int32))
+                if _has_recurrent(cfg):
+                    def zrec(stacked, leaf):
+                        shp = [1] * leaf.ndim
+                        shp[1 if stacked else 0] = R
+                        return jnp.where(take.reshape(shp),
+                                         jnp.zeros((), leaf.dtype), leaf)
+
+                    paged_c = TransformerLM._map_paged(
+                        cfg, (paged_c,), lambda stacked, leaf: leaf, zrec)
+                # ---- verify round (adopted rows prefill-by-window via
+                # forced acceptance; resident rows are bit-identical to the
+                # legacy body) -------------------------------------------
+                active = (n_c < target_c).astype(jnp.int32)
+                n_prev = n_c
+                paged_c, tokens_c, n_c, cand_c, rstats = one_round(
+                    paged_c, tokens_c, n_c, cand_c, tables_c, seq_c,
+                    target_c, poison_c, plen_c)
+                stuck = active * (n_c == n_prev).astype(jnp.int32)
+                bad = bad | (active * rstats[:, 3]) | (stuck << 1)
+                # accepted counts GENERATED tokens only (forced prompt
+                # accepts are prefill throughput, not generation)
+                acc = acc + jnp.maximum(n_c - jnp.maximum(n_prev, plen_c), 0)
+                act = act + active
+                gen = gen + active * (n_c > plen_c).astype(jnp.int32)
+                return (paged_c, tables_c, tokens_c, n_c, cand_c, seq_c,
+                        target_c, poison_c, plen_c, acc, act, bad, gen,
+                        idle, m, r + 1, astats, otok)
+
+            z = jnp.zeros((R,), jnp.int32)
+            init = (paged, tables, tokens, n, cand, seq_ids, target,
+                    poison, plen, z, z, z, z, z, jnp.zeros((), jnp.int32),
+                    jnp.zeros((), jnp.int32),
+                    jnp.full((S, 6), -1, jnp.int32),
+                    jnp.zeros((S, max_len), jnp.int32))
+            (paged2, tables2, tokens2, n2, cand2, seq2, target2, poison2,
+             plen2, acc, act, bad, gen, idle, m, r, astats, otok) = \
+                jax.lax.while_loop(cond, body, init)
+            stats = jnp.stack(
+                [acc, act, n2, jnp.broadcast_to(r, (R,)), bad, gen, idle],
+                axis=1)
+            return (paged2, tables2, tokens2, n2, cand2, seq2, target2,
+                    poison2, plen2, stats, astats, otok)
+
+        wrapped = self.topo.wrap_round(fn, self._paged_specs,
+                                       n_batch_in=17, n_batch_out=11)
+        # everything loop-carried is dead after the loop; descriptor
+        # uploads (10..17) are rebuilt per dispatch but tiny — not donated
+        donate = tuple(range(1, 10)) if self.donate else ()
+        return jax.jit(wrapped, donate_argnums=donate)
+
     def _round_args(self) -> tuple:
         """Positional args of the jitted round loop, in ABI order — the one
         place that order is written down (tests and benches that drive the
-        round fn directly build their calls through this)."""
-        return (self.params, self.paged, self._tables_device(), self.tokens,
-                self.n, self.cand, self.seq_ids, self._target_device(),
+        round fn directly build their calls through this). With staging
+        enabled the tuple grows to the §15 ABI: ``plen`` plus the eight
+        descriptor arrays of the current staging area."""
+        base = (self.params, self.paged, self._tables_device(), self.tokens,
+                self.n, self.cand, self._seq_device(), self._target_device(),
                 self._poison_device())
+        if self.staging_slots == 0:
+            return base
+        return base + (self._plen_device(),) + self._staged_args()
+
+    def _staged_args(self) -> tuple:
+        """Upload this dispatch's staging area as the eight shard-major
+        descriptor arrays of the §15 ABI (data-sharded like the batch dim;
+        rebuilt fresh per dispatch — entries come and go between syncs)."""
+        packed = pack_staged_descriptors(
+            self.staged, self.staging_slots, self.nb, self.max_len)
+        # q_more: the starvation-exit signal — 1 while the host holds MORE
+        # backlog beyond the staged set (a starved loop should sync so the
+        # host can restage); 0 on the drain tail (nothing to restage, run
+        # the loop out). One flag per shard (admission routes globally)
+        q_more = np.full((self.topo.data_size,),
+                         int(len(self.queue) > 0), np.int32)
+        return tuple(self.topo.put_batch(a) for a in packed + (q_more,))
 
     def _prefill_fn(self, C: int):
         """Row-local chunked prefill. Runs as a plain (GSPMD) jit even under
@@ -614,10 +870,15 @@ class ServingEngine:
         if self.poison[b]:
             self.poison[b] = 0
             self._poison_dev = None
+        if self.plen[b]:
+            self.plen[b] = 0
+            self._plen_dev = None
+        if self.seq_ids[b]:
+            self.seq_ids[b] = 0
+            self._seq_dev = None
         self.tokens = self.tokens.at[b].set(0)
         self.n = self.n.at[b].set(1)
         self.cand = self.cand.at[b].set(0)
-        self.seq_ids = self.seq_ids.at[b].set(0)
 
     def _reset_recurrent_row(self, b: int):
         def rec(stacked, leaf):
@@ -641,6 +902,17 @@ class ServingEngine:
         if self._poison_dev is None:
             self._poison_dev = self.topo.put_batch(self.poison)
         return self._poison_dev
+
+    def _seq_device(self):
+        if self._seq_dev is None:
+            self._seq_dev = self.topo.put_batch(self.seq_ids)
+        return self._seq_dev
+
+    def _plen_device(self):
+        if self._plen_dev is None:
+            self._plen_dev = self.topo.put_batch(
+                self.plen.astype(np.int32))
+        return self._plen_dev
 
     def _set_poison(self, b: int, req: Request):
         """Refresh slot ``b``'s poison-mask entry for its new occupant."""
@@ -730,7 +1002,8 @@ class ServingEngine:
 
         return hook
 
-    def _stage_host_blocks(self, b: int, mgr, host_keys, pos0: int) -> int:
+    def _stage_host_blocks(self, b: int, mgr, host_keys, pos0: int,
+                           prefetched: Optional[dict] = None) -> int:
         """Re-admit host-resident KV blocks into slot ``b``'s table
         positions ``[pos0, pos0 + len(host_keys))`` through the async
         staging ring: upload ``k+1`` dispatches while ``k``'s merge is
@@ -748,22 +1021,69 @@ class ServingEngine:
         is a pure optimization, truncation is always safe). Returns the
         number of blocks staged."""
         shard = self.topo.shard_of_slot(b, self.B)
-        off = self._table_offset(b)
-        ring = self.tier.staging
         pinned = []
         for key in host_keys:
+            if prefetched is not None and key in prefetched:
+                pinned.append(key)   # device-resident copy: no pin needed
+                continue
             if not self.tier.pin_kv(shard, key):
                 break
             pinned.append(key)
-        staged = 0
         try:
             self._ensure_capacity(
                 b, (pos0 + len(pinned)) * self.block_size)
-            for j, key in enumerate(pinned):
+        except Exception:
+            for key in pinned:
+                if prefetched is None or key not in prefetched:
+                    self.tier.unpin_kv(shard, key)
+            raise
+        try:
+            staged = self._restage_host_blocks(
+                shard, mgr, pinned,
+                self.owned[b][pos0:pos0 + len(pinned)],
+                prefetched=prefetched)
+        finally:
+            for key in pinned:
+                if prefetched is None or key not in prefetched:
+                    self.tier.unpin_kv(shard, key)
+        return staged
+
+    def _restage_host_blocks(self, shard: int, mgr, host_keys, block_ids,
+                             prefetched: Optional[dict] = None) -> int:
+        """The slot-less core of host-tier restaging (§13/§15): merge the
+        tier entries under ``host_keys`` into the already-allocated
+        shard-local ``block_ids`` (1:1, key order) through the async
+        staging ring, registering each completed block. Callers own
+        pinning and capacity. ``prefetched`` maps chain keys to device
+        rows uploaded while the request was still queued (§15 prefetch):
+        those merge directly — no pull, no H2D wait — and count
+        ``prefetch_hits``; the ring is drained first so completed merges
+        always form a key-order prefix (the contiguity every caller's
+        coverage math depends on). Returns the number of blocks merged."""
+        off = self.topo.block_offset(shard, self.pool.blocks_per_shard)
+        ring = self.tier.staging
+        staged = 0
+        try:
+            for j, key in enumerate(host_keys):
+                if prefetched is not None and key in prefetched:
+                    while True:          # keep commitment in key order
+                        item = ring.take()
+                        if item is None:
+                            break
+                        (blk, k2), devs = item
+                        self._merge_block_rows(blk + off, devs)
+                        mgr.register(blk, k2)
+                        staged += 1
+                    self._merge_block_rows(block_ids[j] + off,
+                                           prefetched[key])
+                    mgr.register(block_ids[j], key)
+                    staged += 1
+                    self.metrics.prefetch_hits += 1
+                    continue
                 rows = self.tier.get_kv(shard, key)   # counts the host hit
                 if rows is None:     # corrupt/tripped mid-run: truncate
                     break
-                ring.stage((self.owned[b][pos0 + j], key), rows)
+                ring.stage((block_ids[j], key), rows)
                 if len(ring) >= ring.depth:           # drain behind the ring
                     (blk, k2), devs = ring.take()
                     self._merge_block_rows(blk + off, devs)
@@ -783,9 +1103,6 @@ class ServingEngine:
             ring.clear()
             self.metrics.staging_errors += 1
             self.tier.record_failure()
-        finally:
-            for key in pinned:
-                self.tier.unpin_kv(shard, key)
         self.metrics.host_staged_blocks += staged
         return staged
 
@@ -941,7 +1258,8 @@ class ServingEngine:
             jnp.asarray(parked.tokens, jnp.int32))
         self.n = self.n.at[b].set(parked.n)
         self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
-        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.seq_ids[b] = req.seq_id
+        self._seq_dev = None
         self.n_host[b] = parked.n
 
         # re-publish the freshly uploaded full prompt blocks
@@ -953,6 +1271,9 @@ class ServingEngine:
         self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
+        if self.plen[b] != L_p:
+            self.plen[b] = L_p
+            self._plen_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.metrics.resumes += 1
 
@@ -1031,7 +1352,8 @@ class ServingEngine:
             jnp.asarray(parked.tokens, jnp.int32))
         self.n = self.n.at[b].set(parked.n)
         self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
-        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.seq_ids[b] = req.seq_id
+        self._seq_dev = None
         self.n_host[b] = parked.n
 
         # re-publish the rebuilt full prompt blocks, drop the park pins
@@ -1045,6 +1367,9 @@ class ServingEngine:
         self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
+        if self.plen[b] != L_p:
+            self.plen[b] = L_p
+            self._plen_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.metrics.resumes += 1
 
@@ -1100,13 +1425,17 @@ class ServingEngine:
             jnp.asarray(parked.tokens, jnp.int32))
         self.n = self.n.at[b].set(n)
         self.cand = self.cand.at[b].set(jnp.asarray(parked.cand, jnp.int32))
-        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.seq_ids[b] = req.seq_id
+        self._seq_dev = None
         self.n_host[b] = n
 
         self.slots[b] = req
         self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
+        if self.plen[b] != L_p:
+            self.plen[b] = L_p
+            self._plen_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.metrics.resumes += 1
 
@@ -1167,10 +1496,16 @@ class ServingEngine:
 
         # per-slot device rows ride along (the recurrent state row moved
         # inside the copy step)
-        for name in ("tokens", "cand", "seq_ids"):
+        for name in ("tokens", "cand"):
             arr = getattr(self, name)
             setattr(self, name, arr.at[b_dst].set(arr[b_src]))
         self.n = self.n.at[b_dst].set(self.n[b_src])
+        if self.seq_ids[b_dst] != self.seq_ids[b_src]:
+            self.seq_ids[b_dst] = self.seq_ids[b_src]
+            self._seq_dev = None
+        if self.plen[b_dst] != self.plen[b_src]:
+            self.plen[b_dst] = self.plen[b_src]
+            self._plen_dev = None
 
         # host-side bookkeeping moves, then the source row is cleared
         # WITHOUT releasing (ownership moved, it was not freed)
@@ -1189,6 +1524,220 @@ class ServingEngine:
         self._clear_row(b_src, release=False)
         req.migrations += 1
         self.metrics.migrations += 1
+
+    # -- staging area / in-loop adoption (DESIGN.md §15) ---------------------
+    def _staged_total(self) -> int:
+        return sum(len(entries) for entries in self.staged)
+
+    def _unstage_all(self):
+        """Return every staged entry to the queue (``requeue`` preserves
+        the original arrival rank) and its worst-case blocks to the pool
+        (registered restaged blocks drop to cached-free — still hittable)."""
+        for s in range(self.topo.data_size):
+            mgr = self.pool.manager(s)
+            for e in self.staged[s]:
+                mgr.release_all(e.blocks)
+                self.ledger.release(s, e.req.uid)
+                self.queue.requeue(e.req)
+            self.staged[s] = []
+
+    def _reconcile_staging(self):
+        """Re-assert the staging invariants at every sync boundary: staged
+        entries exist ONLY while every slot is occupied (a free slot hands
+        the backlog back to full lookahead/preempt/rebalance admission,
+        which the device adoption scan cannot replicate), and the area
+        never outranks the queue head (a higher-priority arrival unstages
+        it instead of waiting behind committed descriptors)."""
+        if self._staged_total() == 0:
+            return
+        if any(s is None for s in self.slots):
+            self._unstage_all()
+            return
+        head = self.queue.peek()
+        if head is not None:
+            hk = (head.priority, head.deadline_time, head._seq)
+            if any(hk < e.key for entries in self.staged for e in entries):
+                self._unstage_all()
+
+    def _build_staged(self, req: Request, shard: int,
+                      need: int) -> StagedEntry:
+        """Build one staged entry on ``shard``: worst-case blocks up front
+        (an adopted row never allocates mid-loop — the same run-to-
+        completion guarantee admission reserves), with device prefix hits
+        and host-tier restaged blocks covering the leading prompt
+        positions. Recurrent stacks stage from scratch: their un-paged
+        state row is zeroed at adoption, so a KV prefix without its
+        boundary snapshot would desynchronize. Freshly allocated blocks
+        are NOT registered in the prefix cache — their contents only
+        become valid as the in-loop forced prefill writes them."""
+        mgr = self.pool.manager(shard)
+        prompt = np.asarray(req.prompt, np.int64)
+        L_p = len(prompt)
+        hits, keys, host_keys = [], [], []
+        nb_full = (L_p - 1) // self.block_size
+        if self._kv_share and nb_full and not _has_recurrent(self.cfg):
+            hits, keys, host_keys = mgr.lookup_prefix_tiered(
+                prompt, nb_full, tier=self.tier, shard=shard)
+        try:
+            fresh = mgr.alloc(need - len(hits))
+        except Exception:
+            mgr.release_all(hits)
+            raise
+        blocks = list(hits) + fresh
+        try:
+            staged_host = 0
+            if host_keys and self.tier is not None:
+                pre = self._take_prefetched(req.uid, shard)
+                pinned = []
+                for key in host_keys:
+                    if pre is not None and key in pre:
+                        pinned.append(key)    # device copy: no pin needed
+                        continue
+                    if not self.tier.pin_kv(shard, key):
+                        break
+                    pinned.append(key)
+                try:
+                    staged_host = self._restage_host_blocks(
+                        shard, mgr, pinned,
+                        blocks[len(hits):len(hits) + len(pinned)],
+                        prefetched=pre)
+                finally:
+                    for key in pinned:
+                        if pre is None or key not in pre:
+                            self.tier.unpin_kv(shard, key)
+        except Exception:
+            mgr.release_all(blocks)
+            raise
+        cov = len(hits) + staged_host
+        req.prefix_hit_blocks = cov
+        table_row = np.zeros(self.nb, np.int32)
+        table_row[:len(blocks)] = blocks
+        poison = int(self.faults is not None
+                     and req.seq_id in self.faults.poison_streams)
+        return StagedEntry(
+            req=req, shard=shard, prompt=prompt.astype(np.int32),
+            n0=cov * self.block_size + 1, plen=L_p,
+            target=L_p + req.new_tokens, blocks=blocks,
+            table_row=table_row, poison=poison,
+            key=(req.priority, req.deadline_time, req._seq))
+
+    def _stage_pending(self):
+        """Fill the staging area from the queue, strictly in queue order
+        (§15): runs after host admission, only while every slot is
+        occupied. Stops at the first request that cannot stage — skipping
+        it would let a later request adopt first and invert the committed
+        order. Block claims go through the ``StagingLedger``, so staging
+        only ever consumes headroom net of resident reservations."""
+        if self.staging_slots == 0 or not self.queue:
+            return
+        if any(s is None for s in self.slots):
+            return
+        D = self.topo.data_size
+        capacity = sum(self.staging_slots - len(self.staged[s])
+                       for s in range(D))
+        if capacity <= 0:
+            return
+        for req in self.queue.lookahead(capacity):
+            if req.uid in self.parked:
+                break       # parked resumes need the host admission path
+            need = self._worst_case_blocks(req)
+            best = None
+            for s in range(D):
+                if len(self.staged[s]) >= self.staging_slots:
+                    continue
+                h = self._headroom(s)
+                if h >= need and (best is None or h > best[1]):
+                    best = (s, h)
+            if best is None:
+                break
+            s, h = best
+            if not self.ledger.try_claim(s, req.uid, need, h):
+                break
+            try:
+                entry = self._build_staged(req, s, need)
+            except Exception:
+                # staging is a pure optimization: leave the request queued
+                # (host admission will retry it) and stop the pass
+                self.ledger.release(s, req.uid)
+                break
+            self.queue.remove(req)
+            self._drop_prefetched(req.uid)
+            self.staged[s].append(entry)
+            self.metrics.staged_sequences += 1
+
+    def _take_prefetched(self, uid: int, shard: int) -> Optional[dict]:
+        """Claim ``uid``'s prefetched device rows for an admission or
+        staging on ``shard`` — None when nothing was prefetched or the
+        copies live under another shard's key partition."""
+        ent = self._prefetched.pop(uid, None)
+        if ent is None:
+            return None
+        p_shard, rows = ent
+        return rows if p_shard == shard else None
+
+    def _drop_prefetched(self, uid: int):
+        self._prefetched.pop(uid, None)
+
+    def _prefetch_queued(self):
+        """Proactive host-tier prefetch (§15 satellite): while a request
+        waits in the queue, push its host-resident prefix blocks through
+        the async staging ring ahead of time; admission/staging later
+        merges the device-resident copies (``prefetch_hits``) instead of
+        paying the pull + H2D wait inline. Copies are content-addressed
+        and immutable, so no pins are held; entries for requests that left
+        the queue are dropped here."""
+        if (not self.host_prefetch or self.tier is None
+                or not self.kv_prefix or self.prefetch_budget == 0):
+            return
+        queued = {r.uid for r in self.queue.requests()}
+        for uid in list(self._prefetched):
+            if uid not in queued:
+                self._drop_prefetched(uid)
+        budget = self.prefetch_budget
+        for req in self.queue.lookahead(max(self.lookahead, 1)):
+            if budget <= 0:
+                break
+            if req.uid in self._prefetched or req.uid in self.parked:
+                continue
+            prompt = np.asarray(req.prompt, np.int64)
+            nb_full = (len(prompt) - 1) // self.block_size
+            if nb_full <= 0:
+                continue
+            keys = chain_hashes(prompt, self.block_size, nb_full)
+            # route guess: the max-headroom shard an admission would pick;
+            # a different landing shard just wastes the copies
+            shard = max(range(self.topo.data_size), key=self._headroom)
+            ring = self.tier.staging
+            rows_by_key = {}
+            try:
+                for key in keys:
+                    if budget <= 0:
+                        break
+                    if not self.tier.has_kv(shard, key):
+                        break           # contiguous leading run only
+                    rows = self.tier.get_kv(shard, key)
+                    if rows is None:
+                        break
+                    # private host copies: prefetch holds no pins, and the
+                    # ring's device_put is async — a slab view could be
+                    # evicted and rewritten under an in-flight upload
+                    ring.stage((key,), [np.array(a) for a in rows])
+                    budget -= 1
+                    if len(ring) >= ring.depth:
+                        (k2,), devs = ring.take()
+                        rows_by_key[k2] = devs
+                while True:
+                    item = ring.take()
+                    if item is None:
+                        break
+                    (k2,), devs = item
+                    rows_by_key[k2] = devs
+            except Exception:
+                ring.clear()
+                self.metrics.staging_errors += 1
+                self.tier.record_failure()
+            if rows_by_key:
+                self._prefetched[req.uid] = (shard, rows_by_key)
 
     # -- admission -----------------------------------------------------------
     def _worst_case_blocks(self, req: Request) -> int:
@@ -1432,7 +1981,9 @@ class ServingEngine:
         self.tables[b] = 0
         self.tables[b, :len(hits)] = hits
         self._tables_dev = None
-        staged = self._stage_host_blocks(b, mgr, host_keys, len(hits)) \
+        pre = self._take_prefetched(req.uid, shard)
+        staged = self._stage_host_blocks(b, mgr, host_keys, len(hits),
+                                         prefetched=pre) \
             if host_keys else 0
         self._ensure_capacity(b, L_p)
 
@@ -1455,7 +2006,8 @@ class ServingEngine:
             jnp.asarray(prompt, jnp.int32))
         self.n = self.n.at[b].set(L_p)
         self.cand = self.cand.at[b].set(0).at[b, 0].set(int(prompt[-1]))
-        self.seq_ids = self.seq_ids.at[b].set(req.seq_id)
+        self.seq_ids[b] = req.seq_id
+        self._seq_dev = None
         if _has_recurrent(self.cfg):
             self._reset_recurrent_row(b)
             if rec_rows is not None and start_blocks > 0:
@@ -1508,6 +2060,9 @@ class ServingEngine:
         self._set_poison(b, req)
         self.target[b] = L_p + req.new_tokens
         self._target_dev = None
+        if self.plen[b] != L_p:
+            self.plen[b] = L_p
+            self._plen_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.n_host[b] = L_p
 
@@ -1566,11 +2121,24 @@ class ServingEngine:
         for req in self.queue.requests():
             if req.uid == uid:
                 self.queue.remove(req)
+                self._drop_prefetched(uid)
                 parked = self.parked.pop(uid, None)
                 if parked is not None:
                     self._discard_park(uid, parked)
                 self._finalize_cancel(req)
                 return True
+        for s in range(self.topo.data_size):
+            for i, e in enumerate(self.staged[s]):
+                if e.req.uid == uid:
+                    # staged but not yet adopted: the device has only a
+                    # descriptor copy, and the next dispatch re-packs from
+                    # these lists — dropping the entry here is exact
+                    self.pool.manager(s).release_all(e.blocks)
+                    self.ledger.release(s, uid)
+                    del self.staged[s][i]
+                    self._drop_prefetched(uid)
+                    self._finalize_cancel(e.req)
+                    return True
         for b in range(self.B):
             req = self.slots[b]
             if req is not None and req.uid == uid:
@@ -1589,20 +2157,99 @@ class ServingEngine:
         self.done.append(req)
 
     # -- main loop -----------------------------------------------------------
+    def _harvest_adoptions(self, adopt: np.ndarray, out_tok: np.ndarray,
+                           now: float) -> tuple[int, int, int]:
+        """Reconstruct the in-loop adoption chain from the packed
+        ``adopt_stats`` array and replay it on the host mirrors.
+
+        The device adopts staged descriptors in shard-major FIFO order, so
+        walking descriptors ascending per shard replays adoptions in
+        chronological order: at descriptor ``i`` the slot's host-side
+        occupant is exactly the request the device displaced (the original
+        occupant for the first adoption into a row, the previously adopted
+        entry for a chain). Each displaced episode carries its terminal
+        ``(n, acc, act, bad, gen)`` snapshot — finished episodes deliver
+        their tokens from ``out_tokens`` (captured at displacement, before
+        the buffer was overwritten), quarantined ones route through
+        :meth:`_fail_request`. Mirrors for the adopted entry are installed
+        WITHOUT invalidating the device caches: the device row already
+        switched inside the loop, and the returned arrays are authoritative.
+        Returns ``(accepted, active_row_rounds, generating_row_rounds)``
+        credited to displaced episodes (the final stats array only covers
+        each row's current occupant)."""
+        acc_extra = act_extra = gen_extra = 0
+        S = self.staging_slots
+        for s in range(self.topo.data_size):
+            mgr = self.pool.manager(s)
+            n_adopted = 0
+            for i in range(len(self.staged[s])):
+                row = adopt[s * S + i]
+                if row[0] < 0:
+                    break               # FIFO: adopted descriptors are a prefix
+                n_adopted += 1
+                entry = self.staged[s][i]
+                g = self.topo.global_slot(s, int(row[0]), self.B)
+                ep_n, ep_acc, ep_act = int(row[1]), int(row[2]), int(row[3])
+                ep_bad, ep_gen = int(row[4]), int(row[5])
+                prev = self.slots[g]
+                if prev is not None:
+                    prev.calls_used += ep_act
+                    acc_extra += ep_acc
+                    act_extra += ep_act
+                    gen_extra += ep_gen
+                    mgr.release_all(self.owned[g])
+                    self.owned[g] = []
+                    self.slots[g] = None
+                    if ep_bad:
+                        self._fail_request(
+                            prev, "nonfinite" if ep_bad & 1 else "stuck",
+                            f"health bits 0b{ep_bad:02b} at n={ep_n} "
+                            "(displaced in-loop)", retryable=True,
+                            fresh_stream=True)
+                    else:
+                        prev.result = out_tok[s * S + i, :ep_n].copy()
+                        prev.finish_time = now
+                        self.metrics.observe_finish(prev)
+                        self.done.append(prev)
+                req = entry.req
+                req.admit_time = now
+                self.ledger.release(s, req.uid)
+                self.slots[g] = req
+                self.owned[g] = list(entry.blocks)
+                self.tables[g] = entry.table_row
+                self.target[g] = entry.target
+                self.plen[g] = entry.plen
+                self.seq_ids[g] = req.seq_id
+                self.poison[g] = entry.poison
+                self.reserved[g] = len(entry.blocks)
+                self.metrics.in_loop_adoptions += 1
+            self.staged[s] = self.staged[s][n_adopted:]
+        return acc_extra, act_extra, gen_extra
+
     def step(self) -> bool:
         """Admit what fits (lookahead scan, pool-pressure routing, shard
         rebalancing, priority preemption), run one device dispatch of up to
         ``rounds_per_sync`` verify rounds, harvest finished requests. The
         host touches exactly ONE small packed stats array per step — no
-        ``n``/``cand`` pulls per round. While admission backlog is queued
-        the loop yields every round (``k = 1``) so freed slots refill
-        promptly; with no backlog it stays device-resident for the full
-        ``rounds_per_sync``. Returns True while there is (or may be) work
-        left."""
+        ``n``/``cand`` pulls per round.
+
+        Without staging (``staging_slots == 0``) the loop yields every
+        round (``k = 1``) while admission backlog is queued, so freed
+        slots refill promptly. With staging the inversion of §15 applies:
+        backlog is exactly when long loops pay off (freed rows adopt
+        staged descriptors WITHOUT a sync), so ``k`` comes from the
+        adaptive :class:`RoundsPerSyncController` (or stays at
+        ``rounds_per_sync`` when adaptivity is off and the backlog is
+        staged). Returns True while there is (or may be) work left."""
         self._poll_queue_deadlines()
+        self._reconcile_staging()
         self._admit_pending()
+        self._stage_pending()
+        self._prefetch_queued()
 
         if not any(s is not None for s in self.slots):
+            # _reconcile_staging unstages whenever a slot is free, so an
+            # empty engine implies an empty staging area
             if self.queue:
                 raise MemoryError(
                     "admission deadlock: queued request cannot fit an empty "
@@ -1610,7 +2257,19 @@ class ServingEngine:
             return False
 
         W = self.controller.window
-        k = 1 if self.queue else self.rounds_per_sync
+        staged_now = self._staged_total()
+        backlog_now = len(self.queue) + staged_now
+        if self.staging_slots:
+            if self.adaptive_rounds:
+                k = min(self.rounds_ctrl.k, self.rounds_per_sync)
+            else:
+                # static staging policy: stay resident while the backlog is
+                # fully staged (adoption refills in-loop); an UNstaged
+                # backlog still needs the host every round
+                k = self.rounds_per_sync if (staged_now or not self.queue) \
+                    else 1
+        else:
+            k = 1 if self.queue else self.rounds_per_sync
         for b in range(self.B):
             if self.slots[b] is not None:
                 try:
@@ -1620,10 +2279,24 @@ class ServingEngine:
                     # an injected alloc fault fails ONLY this slot (§14)
                     self._fail_slot(b, "capacity", str(e), retryable=True)
         if not any(s is not None for s in self.slots):
-            return bool(self.queue)
-        (self.paged, self.tokens, self.n, self.cand, stats_dev) = \
-            self._round_loop_fn(W, k)(*self._round_args())
-        # THE host sync: one (B, 5) int32 pull per loop
+            return bool(self.queue) or self._staged_total() > 0
+        adopt = otok_dev = None
+        if self.staging_slots == 0:
+            (self.paged, self.tokens, self.n, self.cand, stats_dev) = \
+                self._round_loop_fn(W, k)(*self._round_args())
+        else:
+            # staged ABI: row state comes BACK as outputs (adoption mutates
+            # tables/seq/target/poison/plen in-loop) and becomes the new
+            # device cache; host mirrors for adopted rows are updated in
+            # the harvest walk below WITHOUT invalidating these caches
+            (self.paged, self._tables_dev, self.tokens, self.n, self.cand,
+             self._seq_dev, self._target_dev, self._poison_dev,
+             self._plen_dev, stats_dev, adopt_dev, otok_dev) = \
+                self._round_loop_fn(W, k)(*self._round_args())
+            adopt = np.asarray(adopt_dev)
+            self.metrics.staging_occupancy_hist.append(
+                staged_now / (self.topo.data_size * self.staging_slots))
+        # THE host sync: one small packed int32 pull per loop
         stats = np.asarray(stats_dev)
         accepted, rounds_active, n_host = stats[:, 0], stats[:, 1], stats[:, 2]
         bad = stats[:, 4]                      # §14 quarantine health bits
@@ -1631,17 +2304,38 @@ class ServingEngine:
         self.n_host[:] = n_host                # preemption progress mirror
         self._last_rounds_exec = rounds_exec   # run()'s convergence budget
 
+        now = time.monotonic()
+        acc_extra = act_extra = gen_extra = 0
+        if adopt is not None and bool((adopt[:, 0] >= 0).any()):
+            acc_extra, act_extra, gen_extra = self._harvest_adoptions(
+                adopt, np.asarray(otok_dev), now)
+
         slot_rows = [b for b in range(self.B) if self.slots[b] is not None]
+        # accumulators reset at adoption, so a row's final stats belong to
+        # its CURRENT occupant; displaced episodes were credited above
         for b in slot_rows:
             self.slots[b].calls_used += int(rounds_active[b])
-        act_row_rounds = int(rounds_active[slot_rows].sum()) \
-            if slot_rows else 0
-        acc_total = int(accepted[slot_rows].sum()) if slot_rows else 0
+        act_row_rounds = act_extra + (int(rounds_active[slot_rows].sum())
+                                      if slot_rows else 0)
+        acc_total = acc_extra + (int(accepted[slot_rows].sum())
+                                 if slot_rows else 0)
         self.metrics.observe_loop(W, rounds_exec, act_row_rounds, self.B,
-                                  acc_total)
-        self.controller.observe_aggregate(acc_total, act_row_rounds)
+                                  acc_total, backlog=backlog_now)
+        if self.staging_slots:
+            # W retunes from GENERATING row-rounds: forced-prefill rounds
+            # accept at the prompt rate, not the stream's accept rate, and
+            # would bias the window signal
+            gen_total = gen_extra + (int(stats[slot_rows, 5].sum())
+                                     if slot_rows else 0)
+            idle_total = int(stats[:, 6].sum())
+            self.metrics.idle_row_rounds += idle_total
+            self.controller.observe_aggregate(acc_total, gen_total)
+            self.rounds_ctrl.observe(
+                rounds_exec, idle_total, self.B,
+                len(self.queue) + self._staged_total())
+        else:
+            self.controller.observe_aggregate(acc_total, act_row_rounds)
 
-        now = time.monotonic()
         for b in slot_rows:
             req = self.slots[b]
             if bad[b]:
@@ -1682,11 +2376,12 @@ class ServingEngine:
         = 4`` a per-step count would silently allow 4x the documented
         convergence budget."""
         budget = int(max_rounds)
-        while self.queue or any(s is not None for s in self.slots):
+        while (self.queue or self._staged_total()
+               or any(s is not None for s in self.slots)):
             if not self.step():
                 break
             budget -= self._last_rounds_exec
-            if budget <= 0 and (self.queue
+            if budget <= 0 and (self.queue or self._staged_total()
                                 or any(s is not None for s in self.slots)):
                 raise RuntimeError(
                     f"serving engine did not converge within {max_rounds} "
@@ -1702,6 +2397,11 @@ class ServingEngine:
         out["blocks_available"] = self.pool.available()
         out["parked_requests"] = len(self.parked)
         out["queue_depth"] = len(self.queue)
+        out["staged_requests"] = self._staged_total()
+        out["prefetched_requests"] = len(self._prefetched)
+        out["rounds_per_sync_final"] = (self.rounds_ctrl.k
+                                        if self.staging_slots
+                                        else self.rounds_per_sync)
         # §14 failure counters are always present (chaos-job assertions):
         # tier-backed ones default to 0 when no tier is configured
         out.setdefault("checksum_failures", 0)

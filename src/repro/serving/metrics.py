@@ -29,6 +29,11 @@ class EngineMetrics:
     tokens_generated: int = 0
     tokens_accepted_hist: list = field(default_factory=list)  # per-loop sums
     occupancy_hist: list = field(default_factory=list)  # row-rounds/(rounds*B)
+    active_row_rounds: int = 0           # (row, round) pairs active, total
+    row_rounds: int = 0                  # rounds * batch, total — the
+    #                                      duration-weighted occupancy
+    #                                      denominator (the per-loop hist
+    #                                      mean overweights short loops)
     window_hist: list = field(default_factory=list)           # W per loop
     requests_finished: int = 0
     request_latencies: list = field(default_factory=list)
@@ -60,16 +65,46 @@ class EngineMetrics:
     staging_errors: int = 0              # H2D staging runs aborted mid-ring
     resume_recomputes: int = 0           # parked resumes rebuilt by cold
     #                                      re-prefill (payload lost/corrupt)
+    in_loop_adoptions: int = 0           # sequences adopted by a freed row
+    #                                      inside the device loop (no sync)
+    staged_sequences: int = 0            # requests ever staged for adoption
+    staging_occupancy_hist: list = field(default_factory=list)  # staged/S
+    #                                      per dispatch (drain-rate signal)
+    prefetch_hits: int = 0               # queued requests whose host-tier
+    #                                      prefix was restaged before admit
+    idle_row_rounds: int = 0             # (row, round) pairs a freed row sat
+    #                                      with the staging area drained
+    active_rr_backlog: int = 0           # the two counters above, restricted
+    row_rr_backlog: int = 0              # to loops DISPATCHED with host
+    #                                      backlog (queued or staged work
+    #                                      waiting) — the §15 saturation
+    #                                      claim is about these loops; the
+    #                                      drain tail idles identically for
+    #                                      every engine and only adds noise
+
+    def _per_token(self, value: float) -> float:
+        """All ``*_per_token`` exports divide here: 0.0 before the first
+        generated token instead of ZeroDivisionError (a server exporting
+        telemetry right after boot has tokens_generated == 0)."""
+        return value / self.tokens_generated if self.tokens_generated else 0.0
 
     def observe_loop(self, window: int, rounds: int, active_row_rounds: int,
-                     batch: int, accepted: int):
+                     batch: int, accepted: int, backlog: int = 0):
         """One device-resident round loop (one dispatch, one host sync)
         covering ``rounds`` verify rounds; ``active_row_rounds`` counts
-        (row, round) pairs in which the row was active."""
+        (row, round) pairs in which the row was active. ``backlog`` is the
+        host-side work (queued + staged) waiting when the loop was
+        dispatched — loops with ``backlog > 0`` feed the under-backlog
+        occupancy split."""
         self.rounds += int(rounds)
         self.host_syncs += 1
         self.device_dispatches += 1
         self.window_hist.append(int(window))
+        self.active_row_rounds += int(active_row_rounds)
+        self.row_rounds += max(1, int(rounds)) * batch
+        if backlog > 0:
+            self.active_rr_backlog += int(active_row_rounds)
+            self.row_rr_backlog += max(1, int(rounds)) * batch
         denom = max(1, int(rounds)) * batch
         self.occupancy_hist.append(active_row_rounds / denom if batch
                                    else 0.0)
@@ -105,12 +140,10 @@ class EngineMetrics:
             # per host pull (1.0 = host-driven; rounds_per_sync at best)
             "rounds_per_sync": (self.rounds / self.host_syncs
                                 if self.host_syncs else 0.0),
-            "dispatches_per_token": (
-                self.device_dispatches / self.tokens_generated
-                if self.tokens_generated else 0.0),
-            "host_syncs_per_token": (
-                self.host_syncs / self.tokens_generated
-                if self.tokens_generated else 0.0),
+            "dispatches_per_token": self._per_token(self.device_dispatches),
+            "host_syncs_per_token": self._per_token(self.host_syncs),
+            "syncs_per_token": self._per_token(self.host_syncs),
+            "rounds_per_token": self._per_token(self.rounds),
             "tokens_generated": self.tokens_generated,
             "requests_finished": self.requests_finished,
             # hist entries are per-LOOP sums since the device-resident
@@ -121,6 +154,21 @@ class EngineMetrics:
             "mean_batch_occupancy": (
                 float(np.mean(self.occupancy_hist))
                 if self.occupancy_hist else 0.0),
+            # duration-weighted occupancy: active row-rounds over ALL row-
+            # rounds executed — the per-loop mean above weights a 1-round
+            # loop equally with an 8-round one, which misranks engines that
+            # run different loop lengths for the same work
+            "occupancy_weighted": (self.active_row_rounds / self.row_rounds
+                                   if self.row_rounds else 0.0),
+            # saturation while work waits (§15): 1.0 means no (row, round)
+            # pair was wasted while the host held adoptable work. The k=1
+            # host-admission baseline is 1.0 here BY CONSTRUCTION (it syncs
+            # every round, so refill is instant); a device-resident loop
+            # can only approach it, paying <= 1 round of idle per freed row
+            # before adoption or the starvation exit kicks in
+            "occupancy_under_backlog": (
+                self.active_rr_backlog / self.row_rr_backlog
+                if self.row_rr_backlog else 0.0),
             "mean_window": (float(np.mean(self.window_hist))
                             if self.window_hist else 0.0),
             "window_final": self.window_hist[-1] if self.window_hist else 0,
@@ -152,6 +200,13 @@ class EngineMetrics:
             "retries": self.retries,
             "staging_errors": self.staging_errors,
             "resume_recomputes": self.resume_recomputes,
+            "in_loop_adoptions": self.in_loop_adoptions,
+            "staged_sequences": self.staged_sequences,
+            "staging_occupancy": (
+                float(np.mean(self.staging_occupancy_hist))
+                if self.staging_occupancy_hist else 0.0),
+            "prefetch_hits": self.prefetch_hits,
+            "idle_row_rounds": self.idle_row_rounds,
         }
         if block_stats:
             out.update(block_stats)

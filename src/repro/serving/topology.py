@@ -91,6 +91,18 @@ class ServingTopology:
         per = self.slots_per_shard(batch)
         return range(shard * per, (shard + 1) * per)
 
+    def global_slot(self, shard: int, local_row: int, batch: int) -> int:
+        """Inverse of the shard-local row numbering the round program sees:
+        the global batch slot of ``local_row`` on ``shard``. The in-loop
+        adoption scan (DESIGN.md §15) reports displaced episodes by local
+        row; the harvest walk maps them back through here. Same contract
+        for the shard-major staged-descriptor arrays: descriptor ``i`` of
+        ``shard`` lives at flat index ``shard * S + i``, matching how
+        ``put_batch`` splits a leading dimension across the data axis."""
+        per = self.slots_per_shard(batch)
+        assert 0 <= local_row < per, (local_row, per)
+        return shard * per + local_row
+
     def block_offset(self, shard: int, blocks_per_shard: int) -> int:
         """Global pool id of a shard's local block 0 (its reserved sink)."""
         return shard * blocks_per_shard

@@ -287,3 +287,43 @@ def test_serve_help_lists_host_cache_flags(capsys):
     out = capsys.readouterr().out
     assert "--host-cache-mb" in out
     assert "--no-host-cache" in out
+
+
+def test_queued_request_prefetches_spilled_prefix(qwen):
+    """§15 prefetch satellite: while a request WAITS in the queue (slot
+    occupied, no headroom to stage it), its host-resident prefix blocks are
+    pushed through the async staging ring ahead of time; admission then
+    merges the already-device-resident copies (``prefetch_hits``) instead
+    of paying the host pull + H2D wait inline. Tokens stay bitwise equal
+    to solo runs."""
+    cfg, params = qwen
+    kw = dict(batch=1, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False, num_blocks=8,
+              staging_slots=1)                  # prefetch defaults on
+    rng = np.random.default_rng(11)
+    pre_a = rng.integers(0, cfg.vocab, 8)
+    pre_b = rng.integers(0, cfg.vocab, 9)
+
+    eng = ServingEngine(cfg, params, **kw)
+    eng.submit(Request(uid=0, prompt=np.concatenate([pre_a, [3]]),
+                       new_tokens=8))
+    eng.run()                       # publishes A's 2 full prefix blocks
+    # worst-case filler: reserves the whole 7-block pool up front, so A's
+    # cached-free blocks are evicted (spilled D2H) on its FIRST dispatch
+    # and the follow-up request below can be neither admitted nor staged
+    eng.submit(Request(uid=1, prompt=pre_b, new_tokens=15))
+    eng.step()
+    late = Request(uid=2, prompt=np.concatenate([pre_a, [5]]), new_tokens=8)
+    eng.submit(late)
+    for _ in range(4):              # queued steps: prefetch window
+        eng.step()
+    if FAULT_FREE:
+        assert late.uid in eng._prefetched or eng.metrics.prefetch_hits >= 1
+    done = eng.run()
+    m = eng.export_metrics()
+    if FAULT_FREE:
+        assert m["blocks_spilled"] >= 2
+        assert m["prefetch_hits"] >= 1
+        assert late.prefix_hit_blocks >= 1
+    assert not eng._prefetched      # claimed at admission, never leaked
+    _assert_all_exact(cfg, params, done, window=4, max_len=48)

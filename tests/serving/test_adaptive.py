@@ -61,3 +61,106 @@ def test_prefill_chunks_cover_exactly():
         assert all(c & (c - 1) == 0 for c in chunks)
     assert prefill_chunks(0) == []
     assert len(set(prefill_chunks(199, 64))) <= 7   # bounded compile shapes
+
+
+def test_window_history_is_bounded():
+    """A long-lived server syncs millions of times; the telemetry ring
+    must not leak (§15 satellite: history capped)."""
+    c = AdaptiveWindowController(w_max=8, history_cap=16)
+    for _ in range(100):
+        c.observe(np.ones(2))
+    assert len(c.history) == 16
+
+
+def test_rounds_ctrl_grows_on_full_quiet_loops_with_backlog():
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    c = RoundsPerSyncController(k_max=8)
+    assert c.k == 1                          # sync-heavy start: observe first
+    for _ in range(12):
+        c.observe(loop_rounds=c.k, idle_row_rounds=0, rows=4, backlog=6)
+    assert c.k == 8
+
+
+def test_rounds_ctrl_backlog_gate_blocks_growth():
+    """Without backlog there is nothing for a freed row to adopt, so a
+    longer loop buys no refill — k must hold."""
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    c = RoundsPerSyncController(k_max=8)
+    for _ in range(12):
+        c.observe(loop_rounds=c.k, idle_row_rounds=0, rows=4, backlog=0)
+    assert c.k == 1
+
+
+def test_rounds_ctrl_shrinks_on_idle_and_holds_floor():
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    c = RoundsPerSyncController(k_max=8, k_init=8)
+    assert c.k == 8
+    for _ in range(20):                      # half of every loop idle
+        c.observe(loop_rounds=c.k, idle_row_rounds=2 * c.k, rows=4,
+                  backlog=6)
+    assert c.k == 1                          # floor, never 0
+
+
+def test_rounds_ctrl_hysteresis_resists_single_loop_noise():
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    c = RoundsPerSyncController(k_max=8, k_init=4, patience=2)
+    c.observe(loop_rounds=4, idle_row_rounds=16, rows=4, backlog=6)
+    assert c.k == 4                          # one bad loop: no move yet
+
+
+def test_rounds_ctrl_pow2_grid_and_bounds():
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    rng = np.random.default_rng(0)
+    c = RoundsPerSyncController(k_max=8)
+    seen = set()
+    for _ in range(60):
+        seen.add(c.observe(loop_rounds=c.k,
+                           idle_row_rounds=int(rng.integers(0, 3 * c.k)),
+                           rows=4, backlog=int(rng.integers(0, 4))))
+    assert all(1 <= k <= 8 and (k & (k - 1)) == 0 for k in seen)
+    assert len(c.history) <= c.history_cap
+
+
+def test_rounds_ctrl_disabled_pins_k():
+    from repro.serving.adaptive import RoundsPerSyncController
+
+    c = RoundsPerSyncController(k_max=8, k_init=4, enabled=False)
+    for _ in range(10):
+        c.observe(loop_rounds=4, idle_row_rounds=0, rows=4, backlog=9)
+    assert c.k == 4
+
+
+def test_metrics_per_token_guard_and_occupancy_splits():
+    """Exports divide by tokens_generated in exactly one place; a server
+    exporting right after boot must see 0.0, not ZeroDivisionError. The
+    duration-weighted and under-backlog occupancies aggregate row-rounds,
+    unlike the per-loop mean (which weights a 1-round loop equally with an
+    8-round one)."""
+    import pytest
+
+    from repro.serving.metrics import EngineMetrics
+
+    m = EngineMetrics()
+    out = m.export()
+    assert out["syncs_per_token"] == 0.0
+    assert out["dispatches_per_token"] == 0.0
+    assert out["rounds_per_token"] == 0.0
+    assert out["occupancy_weighted"] == 0.0
+    assert out["occupancy_under_backlog"] == 0.0
+
+    # loop A: 1 round, 4/4 rows active, dispatched with backlog
+    m.observe_loop(window=4, rounds=1, active_row_rounds=4, batch=4,
+                   accepted=4, backlog=3)
+    # loop B: 8 rounds, half the row-rounds active, no backlog (drain tail)
+    m.observe_loop(window=4, rounds=8, active_row_rounds=16, batch=4,
+                   accepted=20, backlog=0)
+    out = m.export()
+    assert out["mean_batch_occupancy"] == pytest.approx((1.0 + 0.5) / 2)
+    assert out["occupancy_weighted"] == pytest.approx(20 / 36)
+    assert out["occupancy_under_backlog"] == pytest.approx(1.0)
+    assert out["syncs_per_token"] == pytest.approx(2 / 24)

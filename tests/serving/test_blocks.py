@@ -116,3 +116,32 @@ def test_pool_migration_accounting():
         pool.begin_migration(1, 1, 1)       # same-shard move is not a copy
     with pytest.raises(MemoryError):
         pool.begin_migration(0, 1, 3)       # destination sub-pool is full
+
+
+def test_staging_ledger_claims_and_refusals():
+    """StagingLedger (DESIGN.md §15): claims are granted only within the
+    caller's headroom and per-shard slot budget, tracked per (shard, uid),
+    and release returns exactly what was claimed."""
+    from repro.serving.blocks import StagingLedger
+
+    led = StagingLedger(slots_per_shard=2)
+    assert led.try_claim(0, uid=10, need=3, headroom=8)
+    assert led.staged_blocks(0) == 3 and led.staged_count(0) == 1
+    assert led.has(0, 10) and not led.has(0, 11)
+    # headroom refusal: the caller already netted out resident
+    # reservations AND existing claims; need must fit what is left
+    assert not led.try_claim(0, uid=11, need=6, headroom=5)
+    assert led.try_claim(0, uid=11, need=5, headroom=5)
+    # slot refusal: the shard's staging area is full
+    assert not led.try_claim(0, uid=12, need=1, headroom=100)
+    # shards are independent
+    assert led.try_claim(1, uid=12, need=4, headroom=4)
+    assert led.staged_blocks(1) == 4 and led.staged_blocks(0) == 8
+    assert led.release(0, 10) == 3
+    assert led.staged_blocks(0) == 5 and led.staged_count(0) == 1
+    assert led.try_claim(0, uid=13, need=1, headroom=1)
+    # double-claiming a staged uid is a bookkeeping bug, not a refusal
+    with pytest.raises(AssertionError):
+        led.try_claim(0, uid=11, need=1, headroom=10)
+    with pytest.raises(KeyError):
+        led.release(0, 99)                  # never claimed

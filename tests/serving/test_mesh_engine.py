@@ -396,6 +396,89 @@ def test_mesh_engine_scripted_faults_keep_healthy_rows_exact():
     assert rec["pool_scatters"] == 0, rec
 
 
+STAGED_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.launch.hlo_analysis import (count_jaxpr_primitives,
+                                           parse_collective_bytes)
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import TransformerLM
+    from repro.serving import Request, ServingEngine, ServingTopology
+
+    EPS = jax.random.PRNGKey(9)
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    kw = dict(batch=4, window_max=4, max_len=48, eps_key=EPS,
+              block_size=4, adaptive=False, rounds_per_sync=8)
+
+    def traffic(eng):
+        rng = np.random.default_rng(3)
+        for i in range(10):
+            eng.submit(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(2, 7))),
+                new_tokens=int(rng.integers(8, 13))))
+        return {r.uid: r.result for r in eng.run()}
+
+    # single-device HOST-ADMISSION reference vs the data=2 STAGED engine:
+    # equality crosses the sharding AND the continuous-batching mode
+    ref = traffic(ServingEngine(cfg, params, staging_slots=0, **kw))
+    topo = ServingTopology(make_host_mesh(2, 1))
+    eng = ServingEngine(cfg, params, topology=topo, staging_slots=2,
+                        adaptive_rounds=False, **kw)
+    got = traffic(eng)
+    rec = {"equal": all((got[u] == ref[u]).all() for u in ref),
+           "adoptions": eng.metrics.in_loop_adoptions,
+           "staged": eng.metrics.staged_sequences}
+
+    # HLO gates on the STAGED round program (the 19-arg §15 ABI: plen +
+    # eight descriptor arrays + the q_more starvation flag): the in-loop
+    # adoption scan is rank<=2 row bookkeeping per shard, so the hot path
+    # must STILL lower with zero cross-shard collectives and zero
+    # pool-ranked scatter eqns — staged entries present in the args
+    eng2 = ServingEngine(cfg, params, topology=topo, staging_slots=2,
+                         adaptive_rounds=False, **kw)
+    rng = np.random.default_rng(5)
+    for i in range(8):
+        eng2.submit(Request(uid=i,
+                            prompt=rng.integers(0, cfg.vocab, 4),
+                            new_tokens=20))
+    eng2.step()
+    rec["staged_now"] = eng2._staged_total()
+    fn = eng2._round_loop_fn(eng2.controller.window, eng2.rounds_per_sync)
+    args = eng2._round_args()
+    rec["n_args"] = len(args)
+    txt = fn.lower(*args).compile().as_text()
+    rec["collectives"] = {k: v["count"]
+                          for k, v in parse_collective_bytes(txt).items()}
+    jaxpr = fn.trace(*args).jaxpr
+    rec["pool_scatters"] = count_jaxpr_primitives(
+        jaxpr, ("scatter",), min_rank=3)["scatter"]
+    rec["pallas_calls"] = count_jaxpr_primitives(
+        jaxpr, ("pallas_call",))["pallas_call"]
+    print(json.dumps(rec))
+""")
+
+
+def test_mesh_staged_engine_bit_exact_and_hot_path_gates():
+    """Device-resident continuous batching under the mesh (DESIGN.md §15):
+    a data=2 staged engine (pre-staged prompts + in-loop adoption) emits
+    the single-device host-admission token streams bit-for-bit while
+    actually adopting in-loop, and the staged round program — with live
+    staged descriptors in its arguments — holds the existing CI gates:
+    zero cross-shard collectives, zero pool-ranked scatters."""
+    rec = _run(STAGED_SCRIPT)
+    assert rec["equal"], rec
+    assert rec["adoptions"] >= 1 and rec["staged"] >= 1, rec
+    assert rec["staged_now"] >= 1, rec
+    assert rec["n_args"] == 19, rec
+    assert all(c == 0 for c in rec["collectives"].values()), rec
+    assert rec["pool_scatters"] == 0, rec
+    assert rec["pallas_calls"] >= 1, rec
+
+
 TP_SCRIPT = textwrap.dedent("""
     import json
     import jax, numpy as np

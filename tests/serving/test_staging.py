@@ -1,0 +1,320 @@
+"""Device-resident continuous batching system tests (DESIGN.md §15).
+
+The acceptance bar: the staged engine (pre-staged prompts + in-loop slot
+adoption + adaptive ``rounds_per_sync``) must emit tokens bitwise equal to
+BOTH the host-admission engine (``staging_slots=0``, PR 4 behavior) on the
+same traffic AND per-request solo ``PredictiveSampler.generate`` runs —
+across attention, sliding-window local, MLA, and recurrent-hybrid mixers,
+and under every scheduling disturbance the runtime supports (priority
+arrivals, forced migration, cancellation of a staged request, injected
+faults on an adopted row). Adoption must also actually pay: strictly fewer
+host syncs than the ``k = 1``-under-backlog baseline on the same backlog.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import PredictiveSampler
+from repro.models.transformer import TransformerLM
+from repro.serving import FaultPlan, Request, ServingEngine
+
+EPS_KEY = jax.random.PRNGKey(9)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo(cfg, params, req, window, max_len):
+    s = PredictiveSampler(cfg, params, window=window, max_len=max_len,
+                          eps_key=EPS_KEY)
+    t, _ = s.generate(np.asarray(req.prompt)[None].astype(np.int32),
+                      req.new_tokens,
+                      seq_ids=np.asarray([req.seq_id], np.int32))
+    return np.asarray(t[0, :len(req.prompt) + req.new_tokens])
+
+
+def _assert_all_exact(cfg, params, done, window, max_len):
+    assert done, "no requests completed"
+    for req in done:
+        np.testing.assert_array_equal(
+            req.result, _solo(cfg, params, req, window, max_len),
+            err_msg=f"request {req.uid} diverged from its solo run")
+
+
+def _traffic(cfg, seed=3, n=8, lo=2, hi=7, new_lo=8, new_hi=13):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(lo, hi))),
+                    new_tokens=int(rng.integers(new_lo, new_hi)))
+            for i in range(n)]
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    return {r.uid: r for r in eng.run()}
+
+
+def _staged_uids(eng):
+    return [e.req.uid for entries in eng.staged for e in entries]
+
+
+KW = dict(batch=2, window_max=4, max_len=48, eps_key=EPS_KEY, block_size=4,
+          adaptive=False, rounds_per_sync=8)
+
+
+def test_staged_adoption_bit_exact_and_fewer_syncs(qwen):
+    """Deep backlog through both engines: tokens identical per uid (and to
+    solo), the staged engine adopts in-loop and syncs strictly less than
+    the baseline's sync-every-round-under-backlog heuristic."""
+    cfg, params = qwen
+    base = ServingEngine(cfg, params, staging_slots=0, **KW)
+    ref = _drain(base, _traffic(cfg))
+
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        **KW)
+    got = _drain(eng, _traffic(cfg))
+    assert set(got) == set(ref)
+    for uid in ref:
+        np.testing.assert_array_equal(
+            got[uid].result, ref[uid].result,
+            err_msg=f"request {uid}: staging changed tokens")
+    assert eng.metrics.staged_sequences > 0
+    assert eng.metrics.in_loop_adoptions > 0
+    assert eng.metrics.host_syncs < base.metrics.host_syncs, \
+        (eng.metrics.host_syncs, base.metrics.host_syncs)
+    # adoption leaves nothing behind: staging area + ledger fully drained
+    assert eng._staged_total() == 0
+    assert all(eng.ledger.staged_count(s) == 0
+               for s in range(eng.topo.data_size))
+    _assert_all_exact(cfg, params, list(got.values()), 4, KW["max_len"])
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma3-1b",
+                                  "deepseek-v3-671b",
+                                  "jamba-1.5-large-398b"])
+def test_staged_adoption_bit_exact_across_mixers(arch):
+    """In-loop adoption (forced-acceptance prefill + table-row swap + fresh
+    noise stream + recurrent-row zeroing) is integer bookkeeping: bitwise
+    exactness must hold for every mixer family, including the recurrent
+    hybrid whose adopted rows must restart their un-paged state from
+    zero."""
+    cfg = get_config(arch, reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        **KW)
+    got = _drain(eng, _traffic(cfg, n=6))
+    assert eng.metrics.in_loop_adoptions > 0, \
+        "workload never exercised in-loop adoption"
+    _assert_all_exact(cfg, params, list(got.values()), 4, KW["max_len"])
+
+
+def test_priority_arrival_unstages_lower_priority(qwen):
+    """Staging commits strictly in queue order: a higher-priority arrival
+    must not queue behind already-staged lower-priority requests — the
+    area is unstaged, the newcomer re-ranks, and staging rebuilds with it
+    at the head (DESIGN.md §15 reconciliation)."""
+    cfg, params = qwen
+    # k = 1 keeps the setup steps deterministic (the running request must
+    # not finish and adopt mid-setup); reconciliation order is k-invariant
+    kw = dict(batch=1, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False, rounds_per_sync=1)
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        preempt=False, **kw)
+    rng = np.random.default_rng(5)
+    running = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                      new_tokens=24, priority=5)
+    eng.submit(running)
+    eng.step()
+    lows = [Request(uid=1 + i, prompt=rng.integers(0, cfg.vocab, 3),
+                    new_tokens=6, priority=5) for i in range(2)]
+    for r in lows:
+        eng.submit(r)
+    eng.step()                          # no free slot -> both staged
+    assert _staged_uids(eng) == [1, 2]
+    hi = Request(uid=9, prompt=rng.integers(0, cfg.vocab, 3), new_tokens=6,
+                 priority=0)
+    eng.submit(hi)
+    eng.step()                          # reconcile: hi outranks the area
+    assert _staged_uids(eng)[0] == 9
+    done = eng.run()
+    order = [r.uid for r in done]
+    assert order.index(9) < order.index(1)
+    assert order.index(9) < order.index(2)
+    _assert_all_exact(cfg, params, done, 4, kw["max_len"])
+
+
+def test_adoption_with_forced_migration(qwen):
+    """A mid-flight slot migration must compose with staging: the moved
+    row keeps decoding exactly and later frees into the adoption scan like
+    any other row."""
+    cfg, params = qwen
+
+    def traffic(eng, disturb):
+        rng = np.random.default_rng(70)
+        # long enough to survive the first k=8 dispatch (<= 8 rounds x
+        # (W+1) tokens = 40 < 44), so there is still a row to migrate
+        first = Request(uid=50, prompt=rng.integers(0, cfg.vocab, 3),
+                        new_tokens=44)
+        reqs = _traffic(cfg, seed=7, n=5)
+        eng.submit(first)
+        eng.step()
+        if disturb:
+            occ = [b for b in range(2) if eng.slots[b] is not None]
+            free = [b for b in range(2) if eng.slots[b] is None]
+            assert occ and free
+            eng.migrate_slot(occ[0], free[0])
+        for r in reqs:
+            eng.submit(r)
+        return {r.uid: r for r in eng.run()}
+
+    kw = dict(staging_slots=2, adaptive_rounds=False, **{**KW,
+                                                         "max_len": 64})
+    ref = traffic(ServingEngine(cfg, params, **kw), False)
+    eng = ServingEngine(cfg, params, **kw)
+    got = traffic(eng, True)
+    assert eng.metrics.migrations == 1
+    assert eng.metrics.in_loop_adoptions > 0
+    for uid in ref:
+        np.testing.assert_array_equal(
+            got[uid].result, ref[uid].result,
+            err_msg=f"request {uid}: migration + staging diverged")
+    _assert_all_exact(cfg, params, list(got.values()), 4, 64)
+
+
+def test_cancel_staged_request_releases_claim(qwen):
+    """``cancel(uid)`` must find a request in the staging area: its blocks
+    and ledger claim are released immediately, it finishes with the
+    structured 'cancelled' error, and the remaining traffic is unaffected
+    bit-for-bit."""
+    cfg, params = qwen
+    kw = dict(batch=1, window_max=4, max_len=48, eps_key=EPS_KEY,
+              block_size=4, adaptive=False, rounds_per_sync=1)
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        **kw)
+    rng = np.random.default_rng(11)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                       new_tokens=24))
+    eng.step()
+    eng.submit(Request(uid=1, prompt=rng.integers(0, cfg.vocab, 3),
+                       new_tokens=6))
+    eng.submit(Request(uid=2, prompt=rng.integers(0, cfg.vocab, 3),
+                       new_tokens=6))
+    eng.step()
+    assert _staged_uids(eng) == [1, 2]
+    free_before = eng._mgr(0).available()
+    assert eng.cancel(1)
+    assert _staged_uids(eng) == [2]
+    assert eng.ledger.staged_count(0) == 1
+    assert eng._mgr(0).available() > free_before     # blocks back in pool
+    done = {r.uid: r for r in eng.run()}
+    assert set(done) == {0, 1, 2}
+    assert done[1].error.code == "cancelled" and done[1].result is None
+    assert eng.ledger.staged_count(0) == 0
+    _assert_all_exact(cfg, params, [done[0], done[2]], 4, kw["max_len"])
+
+
+def test_poisoned_adopted_row_quarantined_then_retried(qwen):
+    """A staged request whose noise stream is NaN-poisoned (§14) is adopted
+    in-loop, trips the health bit, and is failed through the displaced-
+    episode harvest path; with a retry budget it re-runs on a fresh stream
+    and every request — including the retried one — matches solo."""
+    cfg, params = qwen
+    reqs = _traffic(cfg, n=6)
+    poisoned_stream = reqs[4].seq_id          # deep enough to be staged
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        request_retries=1,
+                        faults=FaultPlan(poison_streams=(poisoned_stream,)),
+                        **KW)
+    done = list(_drain(eng, reqs).values())
+    assert all(r.ok for r in done), \
+        [str(r.error) for r in done if r.error]
+    assert reqs[4].retries == 1
+    assert reqs[4].seq_id != poisoned_stream   # fresh stream on retry
+    assert eng.metrics.in_loop_adoptions > 0
+    _assert_all_exact(cfg, params, done, 4, KW["max_len"])
+
+
+def test_staged_engine_leaves_rows_clean(qwen):
+    """After draining, adopted rows are as clean as admitted ones: seq_ids
+    zeroed, positions reset — the §12 slot-hygiene contract extended to the
+    adoption path."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                        **KW)
+    _drain(eng, _traffic(cfg, n=6))
+    assert eng.metrics.in_loop_adoptions > 0
+    assert np.asarray(eng.seq_ids).tolist() == [0] * eng.B
+    assert np.asarray(eng.n).tolist() == [1] * eng.B
+    assert all(s is None for s in eng.slots)
+
+
+def test_staged_interleavings_hypothesis(qwen):
+    """Property net: random interleavings of submit / step / migrate /
+    cancel through the staged engine stay bitwise-equal to solo runs and
+    drain the staging ledger."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = qwen
+
+    op = st.one_of(
+        st.tuples(st.just("submit"),
+                  st.tuples(st.integers(1, 8), st.integers(2, 10))),
+        st.tuples(st.just("step"), st.none()),
+        st.tuples(st.just("migrate"), st.integers(0, 3)),
+        st.tuples(st.just("cancel"), st.integers(0, 5)),
+    )
+
+    @hyp.settings(max_examples=8, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(st.lists(op, min_size=2, max_size=10),
+               st.integers(1, 2), st.booleans())
+    def run_plan(plan, slots, adaptive_k):
+        if sum(1 for p in plan if p[0] == "submit") < 3:
+            plan = [("submit", (2, 4)), ("submit", (3, 6)),
+                    ("submit", (2, 5))] + plan
+        eng = ServingEngine(cfg, params, staging_slots=slots,
+                            adaptive_rounds=adaptive_k, **KW)
+        uid, cancelled = 0, set()
+        for op_name, arg in plan:
+            if op_name == "submit":
+                L_p, new = arg
+                rng = np.random.default_rng(100 + uid)
+                eng.submit(Request(uid=uid,
+                                   prompt=rng.integers(0, cfg.vocab, L_p),
+                                   new_tokens=new))
+                uid += 1
+            elif op_name == "step":
+                if (eng.queue or eng._staged_total()
+                        or any(s is not None for s in eng.slots)):
+                    eng.step()
+            elif op_name == "migrate":
+                occ = [b for b in range(eng.B) if eng.slots[b] is not None]
+                free = [b for b in range(eng.B) if eng.slots[b] is None]
+                if occ and free:
+                    eng.migrate_slot(occ[arg % len(occ)],
+                                     free[arg % len(free)])
+            elif op_name == "cancel" and uid:
+                target = arg % uid
+                if eng.cancel(target):
+                    cancelled.add(target)
+        done = eng.run()
+        assert len(done) == uid
+        assert eng._staged_total() == 0
+        assert all(eng.ledger.staged_count(s) == 0
+                   for s in range(eng.topo.data_size))
+        for r in done:
+            if r.uid in cancelled:
+                assert r.error.code == "cancelled"
+            else:
+                np.testing.assert_array_equal(
+                    r.result, _solo(cfg, params, r, 4, KW["max_len"]),
+                    err_msg=f"request {r.uid} diverged from its solo run")
+
+    run_plan()
