@@ -21,6 +21,19 @@ Plus the cross-mode §15 bar re-asserted on the fresh rows: the staged
 engine stays strictly below host-admission on both per-token counters at
 every batch size.
 
+The §16 ``recovery`` rows are gated too — crash-restart economics must not
+silently rot:
+
+* per mode (warm/cold): ``prefill_calls`` fresh <= pinned (re-prefilling
+  more chunks after restart is a durability regression), and the
+  deterministic recovery census (``recovered_requests``,
+  ``recovered_parked``) stays exactly at the pin;
+* warm keeps ``disk_hits >= 1`` (the disk tier actually served blocks)
+  and ``pool_scatter_eqns == 0`` (the restored engine's round loop stays
+  scatter-free);
+* cross-mode: warm ``prefill_calls`` strictly below cold — the whole
+  point of the durable tier.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run --serving-only
@@ -46,16 +59,34 @@ FRESH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 KEYS = ("syncs_per_token", "dispatches_per_token",
         "occupancy_under_backlog", "in_loop_adoptions")
+REC_KEYS = ("prefill_calls", "recovered_requests", "recovered_parked",
+            "disk_hits")
 
 
-def _cb_rows(path: str) -> dict:
+def _load_rows(path: str) -> list:
     with open(path) as f:
-        rows = json.load(f)
+        data = json.load(f)
+    return data["rows"] if isinstance(data, dict) else data
+
+
+def _cb_rows(rows: list) -> dict:
     out = {}
     for r in rows:
         if r.get("scenario") != "continuous_batching":
             continue
         out[(r["mode"], r["batch"])] = {k: r[k] for k in KEYS}
+    return out
+
+
+def _recovery_rows(rows: list) -> dict:
+    out = {}
+    for r in rows:
+        if r.get("scenario") != "recovery":
+            continue
+        keep = {k: r[k] for k in REC_KEYS}
+        if "pool_scatter_eqns" in r:
+            keep["pool_scatter_eqns"] = r["pool_scatter_eqns"]
+        out[r["mode"]] = keep
     return out
 
 
@@ -92,8 +123,42 @@ def check(baseline: dict, fresh: dict) -> list[str]:
     return errs
 
 
+def check_recovery(baseline: dict, fresh: dict) -> list[str]:
+    errs = []
+    for mode, base in sorted(baseline.items()):
+        got = fresh.get(mode)
+        if got is None:
+            errs.append(f"missing fresh recovery row for mode={mode}")
+            continue
+        if got["prefill_calls"] > base["prefill_calls"]:
+            errs.append(
+                f"recovery/{mode} prefill_calls regressed: "
+                f"{got['prefill_calls']} > pinned {base['prefill_calls']}")
+        for k in ("recovered_requests", "recovered_parked"):
+            if got[k] != base[k]:
+                errs.append(f"recovery/{mode} {k} drifted: "
+                            f"{got[k]} != pinned {base[k]}")
+    warm = fresh.get("warm")
+    if warm:
+        if warm.get("disk_hits", 0) < 1:
+            errs.append("recovery/warm disk tier served no blocks "
+                        f"(disk_hits={warm.get('disk_hits')})")
+        if warm.get("pool_scatter_eqns", 0) != 0:
+            errs.append("recovery/warm restored round loop grew pool "
+                        f"scatters ({warm['pool_scatter_eqns']})")
+    # the §16 cross-mode bar, independent of the pin
+    cold = fresh.get("cold")
+    if warm and cold and not warm["prefill_calls"] < cold["prefill_calls"]:
+        errs.append(
+            f"warm restart prefill_calls not below cold: "
+            f"{warm['prefill_calls']} vs {cold['prefill_calls']}")
+    return errs
+
+
 def main() -> int:
-    fresh = _cb_rows(FRESH)
+    rows = _load_rows(FRESH)
+    fresh = _cb_rows(rows)
+    fresh_rec = _recovery_rows(rows)
     if not fresh:
         print(f"perf_gate: no continuous_batching rows in {FRESH}",
               file=sys.stderr)
@@ -101,17 +166,23 @@ def main() -> int:
     if "--update" in sys.argv:
         pinned = [dict(mode=m, batch=b, **v)
                   for (m, b), v in sorted(fresh.items())]
+        pinned_rec = [dict(mode=m, **v)
+                      for m, v in sorted(fresh_rec.items())]
         with open(BASELINE, "w") as f:
             json.dump({"scenario": "continuous_batching",
-                       "backend": "cpu", "rows": pinned}, f, indent=1)
+                       "backend": "cpu", "rows": pinned,
+                       "recovery": pinned_rec}, f, indent=1)
             f.write("\n")
-        print(f"perf_gate: pinned {len(pinned)} rows -> {BASELINE}")
+        print(f"perf_gate: pinned {len(pinned)} cb + "
+              f"{len(pinned_rec)} recovery rows -> {BASELINE}")
         return 0
     with open(BASELINE) as f:
         pin = json.load(f)
     baseline = {(r["mode"], r["batch"]): {k: r[k] for k in KEYS}
                 for r in pin["rows"]}
-    errs = check(baseline, fresh)
+    baseline_rec = {r["mode"]: {k: r[k] for k in REC_KEYS}
+                    for r in pin.get("recovery", [])}
+    errs = check(baseline, fresh) + check_recovery(baseline_rec, fresh_rec)
     for key in sorted(fresh):
         mode, batch = key
         g = fresh[key]
@@ -121,6 +192,15 @@ def main() -> int:
               f"disp/tok {g['dispatches_per_token']:.5f} "
               f"occ_bk {g['occupancy_under_backlog']:.4f} "
               f"adoptions {g['in_loop_adoptions']}")
+    for mode in sorted(fresh_rec):
+        g = fresh_rec[mode]
+        b = baseline_rec.get(mode, {})
+        print(f"recovery/{mode}: prefills {g['prefill_calls']} "
+              f"(pin {b.get('prefill_calls', '-')}) "
+              f"recovered {g['recovered_requests']}"
+              f"(parked={g['recovered_parked']}) "
+              f"disk_hits {g.get('disk_hits', 0)} "
+              f"scatters {g.get('pool_scatter_eqns', '-')}")
     if errs:
         print("perf_gate: FAIL", file=sys.stderr)
         for e in errs:

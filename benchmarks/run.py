@@ -111,6 +111,18 @@ def _csv_rows_table(rows):
                                 f"prefills={r['prefill_calls']};"
                                 f"p95={r['latency_p95_s']}s;"
                                 f"backend={r['backend']}"))
+            elif r.get("scenario") == "recovery":
+                extra = (f"disk_hits={r['disk_hits']};"
+                         f"staged={r['host_staged_blocks']};"
+                         f"pool_scatters={r['pool_scatter_eqns']};"
+                         if r["mode"] == "warm" else "")
+                out.append((f"serving/recovery/{r['mode']}",
+                            f"{r['restart_time_s']*1e6:.0f}",
+                            f"prefills={r['prefill_calls']};"
+                            f"recovered={r['recovered_requests']}"
+                            f"(parked={r['recovered_parked']});"
+                            f"{extra}"
+                            f"backend={r['backend']}"))
             elif r.get("scenario") == "continuous_batching":
                 out.append((f"serving/continuous_batching/"
                             f"{r['mode']}/b{r['batch']}",
@@ -189,8 +201,9 @@ def serving_only() -> None:
                                           donation_round_bytes,
                                           fused_writeback, host_tier,
                                           mesh_serving, mixed_traffic,
-                                          paged_vs_dense, round_loop,
-                                          saturation, saturation_mesh)
+                                          paged_vs_dense, recovery,
+                                          round_loop, saturation,
+                                          saturation_mesh)
     from repro.configs import get_config
     from repro.models.transformer import TransformerLM
 
@@ -205,6 +218,7 @@ def serving_only() -> None:
     rows.extend(saturation_mesh(cfg, params))
     rows.extend(host_tier(cfg, params))
     rows.extend(continuous_batching(cfg, params))
+    rows.extend(recovery(cfg, params))
     rows.append(mixed_traffic(cfg, params, assert_bar=False))
     print("name,us_per_call,derived")
     for row in _csv_rows_table(rows):

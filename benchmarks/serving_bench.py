@@ -168,6 +168,9 @@ def run(fast: bool = True):
     # fault isolation: scripted FaultPlan vs fault-free on identical
     # traffic — healthy requests bitwise equal, counters visible (§14)
     rows.extend(chaos(cfg, params_rep))
+
+    # crash recovery: journal + checkpoint restart, cold vs warm (§16)
+    rows.extend(recovery(cfg, params_rep))
     return rows
 
 
@@ -824,6 +827,128 @@ def host_tier(cfg, params, families: int = 4, blocks_per_prefix: int = 4,
                 < by["no-tier"]["prefill_calls"]), rows
         assert by["tiered"]["host_staged_blocks"] >= 1, rows
         assert by["tiered"]["pool_scatter_eqns"] == 0, rows
+    return rows
+
+
+def recovery(cfg, params, seed: int = 53, assert_bar: bool = True):
+    """Crash/restart scenario (DESIGN.md §16): cold vs warm restart cost.
+
+    A batch=1 engine admits one long low-priority request, parks it under
+    three high-priority arrivals, and is then abandoned mid-run without
+    ``close()`` — exactly the state a SIGKILLed process leaves (the journal
+    and per-step checkpoints are already durable; nothing else is). A
+    fresh engine over the same durable directory ``restore()``s and drains
+    the remaining work. Two modes:
+
+    * ``cold`` — ``disk_tier=False``: the journal re-admits everything,
+      but every recovered prompt block must re-prefill from scratch.
+    * ``warm`` — disk tier on: the parked snapshot's chain keys were
+      ``flush_to_disk``-ed at the crash-preceding checkpoint, so the cold
+      resume pulls its prefix blocks back through the arena/disk
+      fall-through instead of recomputing them.
+
+    Acceptance bar (asserted): both modes bitwise-match the uninterrupted
+    reference; the warm restart pays strictly fewer prefill chunks than
+    the cold one and serves >= 1 block from disk; the restored engine's
+    round loop still compiles with zero pool-ranked scatters (the
+    durability layer is host-side only)."""
+    import shutil
+    import tempfile
+
+    from repro.launch.hlo_analysis import count_jaxpr_primitives
+
+    kw = dict(batch=1, window_max=4, max_len=64, block_size=4,
+              eps_key=jax.random.PRNGKey(11), adaptive=False,
+              preempt_floor=1.0)
+    rng = np.random.default_rng(seed)
+    low_prompt = rng.integers(0, cfg.vocab, size=24)
+    highs = [rng.integers(0, cfg.vocab, size=6) for _ in range(3)]
+
+    def make():
+        out = [Request(uid=0, prompt=low_prompt.copy(), new_tokens=10,
+                       priority=5)]
+        out += [Request(uid=1 + i, prompt=p.copy(), new_tokens=6,
+                        priority=0) for i, p in enumerate(highs)]
+        return out
+
+    def drive_to_crash(eng):
+        """Admit the low-pri request, pile on the high-pri ones, and stop
+        one sync boundary after the preemption lands — the checkpoint now
+        holds the parked snapshot."""
+        reqs = make()
+        eng.submit(reqs[0])
+        eng.step()
+        for r in reqs[1:]:
+            eng.submit(r)
+        steps = 0
+        while eng.metrics.preemptions == 0 and steps < 50:
+            eng.step()
+            steps += 1
+        eng.step()
+        assert 0 in eng.parked, "workload failed to park the long request"
+
+    # uninterrupted reference (volatile) on identical traffic
+    ref_eng = ServingEngine(cfg, params, **kw)
+    reqs = make()
+    ref_eng.submit(reqs[0])
+    ref_eng.step()
+    for r in reqs[1:]:
+        ref_eng.submit(r)
+    ref = {r.uid: r.result for r in ref_eng.run() if r.result is not None}
+
+    rows, results = [], {}
+    for mode, disk in (("warm", True), ("cold", False)):
+        ddir = tempfile.mkdtemp(prefix=f"repro-recovery-{mode}-")
+        try:
+            e1 = ServingEngine(cfg, params, durable_dir=ddir,
+                               disk_tier=disk, **kw)
+            drive_to_crash(e1)       # abandoned: no close(), no final sync
+            e2 = ServingEngine(cfg, params, durable_dir=ddir,
+                               disk_tier=disk, **kw)
+            t0 = time.time()
+            recovered = e2.restore()
+            done = e2.run()
+            dt = time.time() - t0
+            m = e2.export_metrics()
+            # pre-crash deliveries re-arrive via journal re-delivery, so
+            # e2.done alone is the complete result set
+            results[mode] = {r.uid: r.result for r in done
+                             if r.result is not None}
+            row = {"table": "serving", "scenario": "recovery", "mode": mode,
+                   "backend": jax.default_backend(),
+                   "requests": len(results[mode]),
+                   "restart_time_s": round(dt, 3),
+                   "recovered_requests": recovered,
+                   "recovered_parked": m["recovered_parked"],
+                   "prefill_calls": m["prefill_calls"],
+                   "host_staged_blocks": m["host_staged_blocks"],
+                   "disk_hits": m["disk_hits"],
+                   "disk_promotes": m["disk_promotes"],
+                   "resume_recomputes": m["resume_recomputes"],
+                   "checkpoints_written": m["checkpoints_written"],
+                   "journal_appends": m["journal_appends"]}
+            if mode == "warm":
+                # hot-path gate on the RESTORED engine: durability stays
+                # host-side, the compiled round loop is scatter-free (§11)
+                fn = e2._round_loop_fn(4, e2.rounds_per_sync)
+                row["pool_scatter_eqns"] = count_jaxpr_primitives(
+                    fn.trace(*e2._round_args()).jaxpr, ("scatter",),
+                    min_rank=3)["scatter"]
+            rows.append(row)
+        finally:
+            shutil.rmtree(ddir, ignore_errors=True)
+    for mode, res in results.items():
+        assert set(res) == set(ref), (mode, sorted(res), sorted(ref))
+        for uid, toks in ref.items():
+            assert (res[uid] == toks).all(), \
+                f"{mode} restart changed tokens (uid {uid})"
+    if assert_bar:
+        by = {r["mode"]: r for r in rows}
+        assert (by["warm"]["prefill_calls"]
+                < by["cold"]["prefill_calls"]), rows
+        assert by["warm"]["disk_hits"] >= 1, rows
+        assert by["warm"]["recovered_parked"] >= 1, rows
+        assert by["warm"]["pool_scatter_eqns"] == 0, rows
     return rows
 
 

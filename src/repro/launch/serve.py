@@ -16,7 +16,11 @@ lookahead admission, priority preemption with exact resume, shard
 rebalancing by sequence migration); ``--staging-slots`` /
 ``--adaptive-rounds`` turn on device-resident continuous batching
 (DESIGN.md §15: pre-staged prompts adopted into freed rows inside the
-round loop, rounds_per_sync retuned from idle row-rounds).
+round loop, rounds_per_sync retuned from idle row-rounds);
+``--durable-dir`` / ``--journal-fsync-every`` / ``--no-disk-tier`` turn on
+crash-safe serving (DESIGN.md §16: write-ahead request journal, scheduler
+checkpoints, disk tier below the host arena — a relaunched engine with the
+same ``--durable-dir`` recovers every accepted request bitwise-exactly).
 
 Also exports ``make_serve_step`` — the W-token verify step the multi-pod
 dry-run lowers for the decode shapes (decode_32k / long_500k).
@@ -183,6 +187,25 @@ def main(argv=None):
                     help="deterministic fault-injection plan, e.g. "
                          "'seed=7,alloc=@2;5,arena_corrupt=0.05,poison=3' "
                          "(default: REPRO_FAULT_PLAN env)")
+    ap.add_argument("--durable-dir", default=None, metavar="DIR",
+                    help="crash-safety root (DESIGN.md §16): write-ahead "
+                         "request journal, scheduler checkpoints at sync "
+                         "boundaries, and the disk tier below the host "
+                         "arena live here; a restarted engine with the "
+                         "same DIR recovers every accepted request "
+                         "bitwise-exactly. Default: volatile engine")
+    ap.add_argument("--journal-fsync-every", type=int, default=1,
+                    metavar="N",
+                    help="fsync the request journal every N records "
+                         "(1 = an accepted submit is durable before "
+                         "submit() returns; larger batches the fsync cost "
+                         "with an exposure window of at most N-1 records "
+                         "past the last sync boundary)")
+    ap.add_argument("--no-disk-tier", action="store_true",
+                    help="with --durable-dir: keep journal + checkpoint "
+                         "but skip the disk tier (arena LRU victims drop "
+                         "instead of spilling; restarts re-prefill every "
+                         "prefix instead of re-hitting it on disk)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -211,7 +234,15 @@ def main(argv=None):
                            request_retries=args.request_retries,
                            integrity_checks=not args.no_integrity_checks,
                            faults=(FaultPlan.parse(args.fault_plan)
-                                   if args.fault_plan else None))
+                                   if args.fault_plan else None),
+                           durable_dir=args.durable_dir,
+                           journal_fsync_every=args.journal_fsync_every,
+                           disk_tier=not args.no_disk_tier)
+    if args.durable_dir:
+        recovered = engine.restore()
+        if recovered:
+            print(f"recovered {recovered} journaled requests from "
+                  f"{args.durable_dir}")
     if topo.mesh is not None:
         print(f"serving on {topo}")
     rng = np.random.default_rng(0)
@@ -223,6 +254,7 @@ def main(argv=None):
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
+    engine.close()
     m = engine.export_metrics()
     total_new = sum(r.new_tokens for r in done)
     print(f"served {len(done)} requests / {total_new} tokens "

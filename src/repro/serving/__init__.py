@@ -11,16 +11,21 @@ parking + bitwise-exact resume, ``ParkedSequence``), and shard rebalancing
 (§12); fault isolation (§14) quarantines failures per request
 (``RequestError``), integrity-checks the host cache tiers behind a
 ``CircuitBreaker``, and scripts every failure path deterministically
-through a ``FaultPlan``.
+through a ``FaultPlan``; durability (§16) journals the request lifecycle
+(``RequestJournal``), spills arena victims to a ``DiskTier``, and
+checkpoints the scheduler so a SIGKILLed engine restarts bitwise-exact
+(``REPRO_KILL_POINT`` crash harness).
 """
 from repro.serving.admission import (AdmissionQueue, Request, pow2_at_most,
                                      prefill_chunks)
 from repro.serving.adaptive import AdaptiveWindowController
 from repro.serving.blocks import BlockManager, ShardedBlockPool, chain_hashes
 from repro.serving.engine import ParkedSequence, ServingEngine
-from repro.serving.faults import (CircuitBreaker, FaultPlan, RequestError,
-                                  StagingFault)
-from repro.serving.hostcache import HostArena, HostTier, StagingRing
+from repro.serving.faults import (KILL_POINTS, CircuitBreaker, FaultPlan,
+                                  RequestError, StagingFault, kill_point)
+from repro.serving.hostcache import (DiskTier, HostArena, HostTier,
+                                     StagingRing)
+from repro.serving.journal import RequestJournal
 from repro.serving.metrics import EngineMetrics, percentile
 from repro.serving.topology import ServingTopology
 
@@ -28,5 +33,6 @@ __all__ = ["AdmissionQueue", "Request", "prefill_chunks", "pow2_at_most",
            "AdaptiveWindowController", "BlockManager", "ShardedBlockPool",
            "chain_hashes", "ParkedSequence", "ServingEngine",
            "EngineMetrics", "percentile", "ServingTopology",
-           "HostArena", "HostTier", "StagingRing",
+           "HostArena", "HostTier", "StagingRing", "DiskTier",
+           "RequestJournal", "KILL_POINTS", "kill_point",
            "CircuitBreaker", "FaultPlan", "RequestError", "StagingFault"]

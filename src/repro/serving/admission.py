@@ -95,6 +95,32 @@ class Request:
     def missed_deadline(self) -> bool:
         return self.deadline is not None and self.finish_time > self.deadline_time
 
+    # -- restart-safe clocks (DESIGN.md §16) --------------------------------
+    def clock_export(self, now: Optional[float] = None) -> dict:
+        """Elapsed-duration snapshot of this request's clocks. Raw
+        ``time.monotonic`` stamps are meaningless in another process (the
+        clock origin is per-boot/per-process), so checkpoints durable-ize
+        *how long* the request has been waiting/running, never *when* it
+        started."""
+        if now is None:
+            now = time.monotonic()
+        return {"elapsed": (now - self.submit_time
+                            if self.submit_time else 0.0),
+                "admit_elapsed": (now - self.admit_time
+                                  if self.admit_time else None)}
+
+    def clock_rebase(self, clocks: dict,
+                     now: Optional[float] = None) -> None:
+        """Re-anchor exported durations on *this* process's monotonic clock
+        (the restore-side inverse of ``clock_export``): afterwards
+        ``max_request_seconds``, ``deadline_time`` and the latency metrics
+        keep counting from where the dead process left off."""
+        if now is None:
+            now = time.monotonic()
+        self.submit_time = now - float(clocks.get("elapsed") or 0.0)
+        admit = clocks.get("admit_elapsed")
+        self.admit_time = (now - float(admit)) if admit is not None else 0.0
+
 
 def pow2_at_most(x: int) -> int:
     """Largest power of two <= x (x >= 1)."""
@@ -226,6 +252,13 @@ class AdmissionQueue:
                 heapq.heapify(self._heap)
                 return True
         return False
+
+    def advance_seq(self, past: int) -> None:
+        """Restore path (DESIGN.md §16): restart the arrival counter past
+        the highest recovered rank, so requests submitted *after* the
+        restart sort behind every request recovered with its original
+        ``_seq`` pinned."""
+        self._seq = itertools.count(max(int(past) + 1, 0))
 
     def requests(self) -> list[Request]:
         """All queued requests, unordered (deadline-expiry polling)."""

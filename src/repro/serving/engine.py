@@ -93,6 +93,7 @@ mesh paths, tests/serving/test_mesh_engine.py.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from dataclasses import dataclass
@@ -113,7 +114,10 @@ from repro.serving.adaptive import (AdaptiveWindowController,
                                     RoundsPerSyncController)
 from repro.serving.blocks import (ShardedBlockPool, StagingLedger,
                                   chain_hashes)
-from repro.serving.faults import CircuitBreaker, FaultPlan, RequestError
+from repro.serving.faults import (CircuitBreaker, FaultPlan, RequestError,
+                                  kill_point)
+from repro.serving.hostcache import DiskTier
+from repro.serving.journal import RequestJournal
 from repro.serving.metrics import EngineMetrics
 from repro.serving.topology import ServingTopology
 
@@ -155,6 +159,11 @@ class ParkedSequence:
     private: Optional[list] = None   # raw fallback when the arena was full
     shard: int = 0               # tier kv partition the pins live under
     #                              (resume may land on a different shard)
+    cold: bool = False           # checkpoint-restored park (DESIGN.md §16):
+    #                              no live payload or pins exist in THIS
+    #                              process — resume rebuilds through the
+    #                              disk-tier fall-through + re-prefill and
+    #                              never consumes a payload
 
 
 class ServingEngine:
@@ -181,7 +190,11 @@ class ServingEngine:
                  staging_slots: int = 0,
                  adaptive_rounds: Optional[bool] = None,
                  host_prefetch: Optional[bool] = None,
-                 prefetch_budget: int = 4):
+                 prefetch_budget: int = 4,
+                 durable_dir: Optional[str] = None,
+                 journal_fsync_every: int = 1,
+                 disk_tier: bool = True,
+                 disk_cache_mb: Optional[float] = None):
         assert block_size >= 1, f"block_size must be >= 1, got {block_size}"
         assert window_max >= 1, f"window_max must be >= 1, got {window_max}"
         assert rounds_per_sync >= 1, rounds_per_sync
@@ -284,6 +297,29 @@ class ServingEngine:
         self.tables = np.zeros((batch, self.nb), np.int32)
         self.owned: list[list[int]] = [[] for _ in range(batch)]
 
+        # ---- durability layer (DESIGN.md §16) ---------------------------
+        # ``durable_dir`` roots the crash-safety state: ``disk/`` (the tier
+        # below the arena), ``journal.wal`` (the write-ahead request
+        # journal), ``checkpoint.json`` (the scheduler snapshot written at
+        # sync boundaries). None = volatile engine, byte-for-byte the old
+        # behaviour. ``disk_tier=False`` (--no-disk-tier) keeps journal +
+        # checkpoint but drops the prefix spill (restarts re-prefill).
+        assert journal_fsync_every >= 1, journal_fsync_every
+        self.durable_dir = durable_dir
+        self.journal = None
+        self._ckpt_path = None
+        self.disk = None
+        if durable_dir is not None:
+            if disk_tier:
+                dmb = 1024.0 if disk_cache_mb is None else float(disk_cache_mb)
+                self.disk = DiskTier(os.path.join(durable_dir, "disk"),
+                                     int(dmb * 2 ** 20), faults=self.faults,
+                                     breaker=CircuitBreaker())
+            self.journal = RequestJournal(
+                os.path.join(durable_dir, "journal.wal"),
+                fsync_every=journal_fsync_every, faults=self.faults)
+            self._ckpt_path = os.path.join(durable_dir, "checkpoint.json")
+
         # ---- host cache tier (DESIGN.md §13) ----------------------------
         # One byte-budgeted arena behind the device prefix cache: spilled
         # KV blocks, parked-sequence payloads, recurrent-state snapshots.
@@ -297,7 +333,8 @@ class ServingEngine:
                 mb = float(os.environ.get("REPRO_HOST_CACHE_MB", 256))
             self.tier = (self.topo.host_tier(
                 int(mb * 2 ** 20), integrity=integrity_checks,
-                faults=self.faults, breaker=CircuitBreaker())
+                faults=self.faults, breaker=CircuitBreaker(),
+                disk=self.disk)
                 if mb > 0 else None)
         if self.faults is not None:
             # the 'alloc' seam: injected block-allocation failures surface
@@ -430,7 +467,22 @@ class ServingEngine:
             self.done.append(req)
             return False
         self.queue.push(req)
+        # journal AFTER push: the queue pinned the arrival rank the record
+        # durable-izes; with fsync_every=1 the submit is on media before
+        # this returns — an accepted request survives any later crash
+        self._journal("submit", uid=int(req.uid),
+                      prompt=[int(t) for t in
+                              np.asarray(req.prompt).ravel()],
+                      new_tokens=int(req.new_tokens),
+                      priority=int(req.priority), deadline=req.deadline,
+                      noise_seed=req.noise_seed, rank=int(req._seq))
         return True
+
+    def _journal(self, type: str, **fields):
+        """Append one lifecycle record when a journal is configured
+        (DESIGN.md §16); a no-op for volatile engines."""
+        if self.journal is not None:
+            self.journal.append(type, **fields)
 
     # -- jitted steps -------------------------------------------------------
     def _round_loop_fn(self, W: int, k: int):
@@ -1154,6 +1206,7 @@ class ServingEngine:
         self.slots[b] = None
         self._clear_row(b, release=False)
         self.queue.requeue(req)
+        self._journal("park", uid=int(req.uid))
         req.preemptions += 1
         self.metrics.preemptions += 1
         self.metrics.blocks_parked += nb_live
@@ -1208,6 +1261,12 @@ class ServingEngine:
         the rest (host tier or legacy payload), restore the per-slot
         n/cand/tokens snapshot."""
         req.admit_time = time.monotonic()
+        if parked.cold:
+            # checkpoint-restored park (§16): no payload or pins exist in
+            # this process — rebuild through the disk-tier fall-through +
+            # re-prefill (bitwise-exact either way)
+            self.metrics.resume_recomputes += 1
+            return self._resume_cold(req, b, parked)
         if parked.payload is None:
             return self._resume_tiered(req, b, parked)
         prompt = np.asarray(req.prompt, np.int64)
@@ -1391,21 +1450,31 @@ class ServingEngine:
         toks = np.asarray(parked.tokens, np.int64)
         # recurrent archs would need the state snapshot at any reuse
         # boundary — gone with the payload — so they rebuild from zero;
-        # attention archs may still re-hit device-cached prompt blocks
-        hits, keys = [], []
+        # attention archs re-hit device-cached prompt blocks AND fall
+        # through to the host/disk tiers (§16: after a restart the device
+        # cache is empty but the chain keys still resolve on disk — this
+        # is exactly where a warm restart earns its fewer prefill chunks)
+        hits, keys, host_keys = [], [], []
         nb_full = min((L_p - 1) // self.block_size, nb_live)
         if self._kv_share and nb_full and not _has_recurrent(self.cfg):
-            hits, keys = mgr.lookup_prefix(prompt, nb_full)
-        req.prefix_hit_blocks += len(hits)
+            if self.tier is not None:
+                hits, keys, host_keys = mgr.lookup_prefix_tiered(
+                    prompt, nb_full, tier=self.tier,
+                    shard=self.topo.shard_of_slot(b, self.B))
+            else:
+                hits, keys = mgr.lookup_prefix(prompt, nb_full)
         self.owned[b] = list(hits)
         self.tables[b] = 0
         self.tables[b, :len(hits)] = hits
         self._tables_dev = None
+        staged = (self._stage_host_blocks(b, mgr, host_keys, len(hits))
+                  if host_keys else 0)
+        req.prefix_hit_blocks += len(hits) + staged
         self._ensure_capacity(b, nb_live * self.block_size)
         if _has_recurrent(self.cfg):
             self._reset_recurrent_row(b)
 
-        start = len(hits) * self.block_size
+        start = (len(hits) + staged) * self.block_size
         table_row = jnp.asarray(self.tables[b:b + 1] + self._table_offset(b))
         row = jnp.asarray([b], jnp.int32)
         for C in prefill_chunks(n - 1 - start, self.prefill_chunk):
@@ -1417,7 +1486,7 @@ class ServingEngine:
             req.prefill_calls += 1
             self.metrics.prefill_calls += 1
         if self._kv_share and not _has_recurrent(self.cfg):
-            for j in range(len(hits), nb_full):
+            for j in range(len(hits) + staged, nb_full):
                 mgr.register(self.owned[b][j], keys[j])
 
         # per-slot state: the exact park-time snapshot
@@ -1444,7 +1513,10 @@ class ServingEngine:
         (cancel, failed resume): the park entry and the shared-kv pins.
         Tolerant of partial consumption — ``drop``/``unpin`` are no-ops on
         already-consumed entries."""
-        if self.tier is None:
+        if self.tier is None or parked.cold:
+            # a cold (checkpoint-restored) park holds no pins in THIS
+            # process — unpinning its keys could steal a pin a live park
+            # of the same prefix legitimately owns (§16)
             return
         if parked.in_arena:
             self.tier.drop_park(uid)
@@ -1928,13 +2000,16 @@ class ServingEngine:
         parked = self.parked.pop(req.uid, None)
         if parked is not None:            # preempted: exact resume path
             try:
-                return self._resume(req, b, parked)
+                self._resume(req, b, parked)
             except Exception:
                 # the park is consumed/unreliable after a failed resume:
                 # release its tier resources; a retry re-admits from the
                 # prompt (a full restart on the same stream is bit-exact)
                 self._discard_park(req.uid, parked)
                 raise
+            self._journal("admit", uid=int(req.uid))
+            kill_point("post_admit")
+            return
         req.admit_time = time.monotonic()
         prompt = np.asarray(req.prompt, np.int64)
         L_p = len(prompt)
@@ -2065,6 +2140,8 @@ class ServingEngine:
             self._plen_dev = None
         self.reserved[b] = self._worst_case_blocks(req)
         self.n_host[b] = L_p
+        self._journal("admit", uid=int(req.uid))
+        kill_point("post_admit")
 
     # -- failure / cancellation (DESIGN.md §14) ------------------------------
     def _fail_request(self, req: Request, code: str, detail: str = "", *,
@@ -2090,6 +2167,10 @@ class ServingEngine:
                         break
                 req.noise_seed = seed
             self.queue.requeue(req)
+            # the new stream id must survive a crash: replaying the retry
+            # record restores determinism (seq_id keys the eps stream)
+            self._journal("retry", uid=int(req.uid),
+                          noise_seed=req.noise_seed, retries=req.retries)
             return
         req.error = RequestError(code, detail, retryable=retryable,
                                  attempts=req.retries + 1)
@@ -2097,6 +2178,7 @@ class ServingEngine:
         req.finish_time = time.monotonic()
         self.metrics.requests_failed += 1
         self.done.append(req)
+        self._journal("fail", uid=int(req.uid), code=code)
 
     def _fail_slot(self, b: int, code: str, detail: str = "", *,
                    retryable: bool = False, fresh_stream: bool = False):
@@ -2155,6 +2237,7 @@ class ServingEngine:
         req.finish_time = time.monotonic()
         self.metrics.requests_cancelled += 1
         self.done.append(req)
+        self._journal("cancel", uid=int(req.uid), code="cancelled")
 
     # -- main loop -----------------------------------------------------------
     def _harvest_adoptions(self, adopt: np.ndarray, out_tok: np.ndarray,
@@ -2211,6 +2294,8 @@ class ServingEngine:
                         prev.finish_time = now
                         self.metrics.observe_finish(prev)
                         self.done.append(prev)
+                        self._journal("finish", uid=int(prev.uid),
+                                      tokens=[int(t) for t in prev.result])
                 req = entry.req
                 req.admit_time = now
                 self.ledger.release(s, req.uid)
@@ -2352,6 +2437,8 @@ class ServingEngine:
                 req.finish_time = now
                 self.metrics.observe_finish(req)
                 self.done.append(req)
+                self._journal("finish", uid=int(req.uid),
+                              tokens=[int(t) for t in req.result])
                 self.slots[b] = None
                 self._clear_row(b)
                 continue
@@ -2366,6 +2453,13 @@ class ServingEngine:
                 self._fail_slot(
                     b, "timeout", f"{now - req.submit_time:.3f}s "
                     f"> {self.max_request_seconds}s wall time")
+        # sync boundary (DESIGN.md §16): force the journal to media and
+        # snapshot the scheduler, so a crash from here on recovers to
+        # exactly this round's committed state
+        if self.journal is not None:
+            self.journal.sync()
+            self._checkpoint(now)
+            kill_point("post_sync")
         return True
 
     def run(self, max_rounds: int = 10_000) -> list[Request]:
@@ -2388,6 +2482,169 @@ class ServingEngine:
                     "verify rounds")
         return self.done
 
+    def close(self) -> None:
+        """Orderly shutdown of the durability layer: final checkpoint,
+        journal fsync, file handles closed. A no-op for volatile engines —
+        and never *required*: crash-safety is the whole point, so an
+        engine that simply dies recovers identically."""
+        if self.journal is not None:
+            self._checkpoint()
+            self.journal.close()
+
+    # -- checkpoint / restore (DESIGN.md §16) --------------------------------
+    def _checkpoint(self, now: Optional[float] = None) -> None:
+        """Snapshot the scheduler at a sync boundary, atomically (temp +
+        fsync + rename — a reader sees the whole snapshot or the previous
+        one, never a torn JSON). What goes in: every live request's clocks
+        as *elapsed durations* (``clock_export`` — monotonic stamps die
+        with the process), arrival rank, retry/stream counters; for each
+        parked sequence the resume snapshot (n, token row, cand row) and
+        its kv chain keys — which are first force-flushed to the disk tier
+        so the references are durable, not merely cached. Parked *private*
+        payloads and running rows are deliberately NOT here: they are
+        recomputed on restore (journaled identity + determinism makes that
+        bitwise-exact), which keeps the checkpoint small and the fsync
+        cheap."""
+        if self._ckpt_path is None:
+            return
+        if now is None:
+            now = time.monotonic()
+        live = list(self.queue.requests())
+        for s in range(self.topo.data_size):
+            live += [e.req for e in self.staged[s]]
+        live += [r for r in self.slots if r is not None]
+        reqs = [{"uid": int(r.uid),
+                 "rank": None if r._seq is None else int(r._seq),
+                 "retries": int(r.retries), "noise_seed": r.noise_seed,
+                 "bypassed": int(r.bypassed),
+                 "queue_deadline_missed": bool(r.queue_deadline_missed),
+                 "clocks": r.clock_export(now)} for r in live]
+        parked = {}
+        for uid, p in self.parked.items():
+            if self.tier is not None and p.kv_keys:
+                self.tier.flush_to_disk(p.shard, p.kv_keys)
+            parked[str(int(uid))] = {
+                "n": int(p.n),
+                "tokens": [int(t) for t in np.asarray(p.tokens).ravel()],
+                "cand": [int(t) for t in np.asarray(p.cand).ravel()],
+                "nb_live": int(p.nb_live),
+                "kv_keys": [int(k) for k in p.kv_keys],
+                "shard": int(p.shard)}
+        snap = {"version": 1, "requests": reqs, "parked": parked}
+        tmp = self._ckpt_path + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(snap, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(tmp, self._ckpt_path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return       # degraded to journal-only recovery, never an error
+        self.metrics.checkpoints_written += 1
+
+    def _load_checkpoint(self) -> dict:
+        """The latest snapshot, or {} when missing/corrupt — recovery then
+        runs journal-only (full re-prefill, clocks restart at zero
+        elapsed); it never errors."""
+        if self._ckpt_path is None:
+            return {}
+        try:
+            with open(self._ckpt_path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return {}
+
+    def restore(self) -> int:
+        """Recover accepted-but-unfinished requests after a crash (§16).
+
+        Replays the journal (repairing any torn tail), folds in the latest
+        checkpoint, and re-enqueues every pending request with its original
+        arrival rank and rebased clocks. Requests the checkpoint holds a
+        parked snapshot for get a *cold* :class:`ParkedSequence` — resume
+        pulls their prompt blocks back through the arena/disk fall-through
+        and re-prefills only ``[covered, n-1)``; everything else re-admits
+        from its journaled prompt. Either way tokens are bitwise those of
+        an uninterrupted run: out = f(context, eps), and both context
+        (prompt + accepted row) and eps identity (seq_id) were durable.
+
+        Journaled *terminal* outcomes are re-delivered through ``done``:
+        a crash can land between the finish record hitting the journal and
+        the client draining the result, so every journaled finish (tokens
+        travel in the record) and fail/cancel (error code) is surfaced
+        again — at-least-once delivery, deduped by uid on the client side,
+        and bitwise-identical on re-delivery by the determinism invariant.
+        Returns the number of requests re-enqueued (re-deliveries not
+        counted)."""
+        assert self.journal is not None, "restore() requires durable_dir"
+        records = RequestJournal.replay(self.journal.path,
+                                        faults=self.faults)
+        pending, _, delivered = RequestJournal.pending(records)
+        ckpt = self._load_checkpoint()
+        by_uid = {int(r["uid"]): r for r in ckpt.get("requests", [])}
+        snaps = {int(u): p for u, p in ckpt.get("parked", {}).items()}
+        now = time.monotonic()
+        max_rank = -1
+        recovered = 0
+        # original queue order: ranked submits first, by rank
+        for uid, rec in sorted(
+                pending.items(),
+                key=lambda kv: (kv[1].get("rank") is None,
+                                kv[1].get("rank") or 0)):
+            req = Request(uid=int(uid),
+                          prompt=np.asarray(rec["prompt"], np.int64),
+                          new_tokens=int(rec["new_tokens"]),
+                          priority=int(rec.get("priority", 0)),
+                          deadline=rec.get("deadline"),
+                          noise_seed=rec.get("noise_seed"))
+            req.retries = int(rec.get("retries", 0))
+            req._seq = None if rec.get("rank") is None else int(rec["rank"])
+            c = by_uid.get(req.uid)
+            if c is not None:
+                req.bypassed = int(c.get("bypassed", 0))
+                req.queue_deadline_missed = bool(
+                    c.get("queue_deadline_missed", False))
+                req.clock_rebase(c.get("clocks", {}), now)
+            else:
+                req.submit_time = now     # journal-only: clock restarts
+            if req._seq is None:
+                req._seq = max_rank + 1
+            max_rank = max(max_rank, req._seq)
+            snap = snaps.get(req.uid)
+            if snap is not None and rec.get("parked"):
+                self.parked[req.uid] = ParkedSequence(
+                    n=int(snap["n"]),
+                    tokens=np.asarray(snap["tokens"], np.int32),
+                    cand=np.asarray(snap["cand"], np.int32),
+                    nb_live=int(snap["nb_live"]),
+                    kv_keys=tuple(int(k) for k in snap["kv_keys"]),
+                    shard=int(snap["shard"]), cold=True)
+                self.metrics.recovered_parked += 1
+            self.queue.requeue(req)       # rank pinned: original order
+            recovered += 1
+        self.queue.advance_seq(max_rank)
+        self.metrics.recovered_requests += recovered
+        # re-deliver journaled outcomes whose pickup the crash may have
+        # swallowed (see docstring); no journal write — these records are
+        # already terminal, replaying them again is idempotent
+        for uid, rec in delivered.items():
+            req = Request(uid=int(uid),
+                          prompt=np.asarray(rec["prompt"], np.int64),
+                          new_tokens=int(rec["new_tokens"]),
+                          priority=int(rec.get("priority", 0)),
+                          deadline=rec.get("deadline"),
+                          noise_seed=rec.get("noise_seed"))
+            if rec["terminal"] == "finish" and "tokens" in rec:
+                req.result = np.asarray(rec["tokens"], np.int32)
+            else:
+                req.error = RequestError(
+                    rec.get("code", rec["terminal"]), "re-delivered (§16)")
+            self.done.append(req)
+        return recovered
+
     # -- telemetry -----------------------------------------------------------
     def export_metrics(self) -> dict:
         out = self.metrics.export(
@@ -2406,8 +2663,27 @@ class ServingEngine:
         # tier-backed ones default to 0 when no tier is configured
         out.setdefault("checksum_failures", 0)
         out.setdefault("tier_tripped", 0)
+        out.setdefault("tier_state", "closed")
+        out.setdefault("tier_denied_ops", 0)
         out["faults_injected"] = (self.faults.total_fired
                                   if self.faults is not None else 0)
+        if self.faults is not None:
+            # per-seam fired counts (zero-filled over every known seam) so
+            # a chaos run shows WHICH seams actually exercised (§14/§16)
+            out.update(self.faults.fired_export())
+        # durability observability (§16): disk breaker + journal counters
+        # present whenever configured; zero-filled defaults otherwise so
+        # the recovery CI job can assert on them unconditionally
+        if (self.disk is not None
+                and (self.tier is None or self.tier.disk is None)):
+            out.update(self.disk.stats_export())
+        out.setdefault("disk_state", "closed")
+        out.setdefault("disk_tripped", 0)
+        out.setdefault("disk_hits", 0)
+        out.setdefault("disk_promotes", 0)
+        out.setdefault("disk_spills", 0)
+        if self.journal is not None:
+            out.update(self.journal.stats_export())
         if self.topo.data_size > 1:
             out["blocks_available_by_shard"] = [
                 self.pool.available(s) for s in range(self.topo.data_size)]

@@ -19,6 +19,15 @@ seam                fires inside
                     *before* the integrity check reads it
 ``stage_drop``      ``StagingRing.stage`` — raises :class:`StagingFault`
                     mid-ring (H2D upload died)
+``disk_full``       ``DiskTier.put`` — the spill write is refused as if
+                    the filesystem returned ENOSPC (breaker failure)
+``disk_torn_write`` ``DiskTier.put`` — the frame is written truncated
+                    (a crash mid-write; the crc verify at read catches it)
+``disk_slow``       ``DiskTier.get`` — a small deterministic stall (a
+                    degraded device; latency only, never an error)
+``journal_truncate````RequestJournal.replay`` — the journal tail is torn
+                    off at the last record boundary before parsing (a
+                    crash mid-append; replay must truncate, not error)
 ==================  =====================================================
 
 plus ``poison_streams``: noise-stream ids whose verify-round logits are
@@ -34,11 +43,41 @@ processes, and the CI chaos job (``REPRO_FAULT_PLAN`` env).
 from __future__ import annotations
 
 import os
+import signal
+import sys
 import zlib
 from dataclasses import dataclass, field
 from typing import Optional
 
-SEAMS = ("alloc", "arena_put", "arena_corrupt", "stage_drop")
+SEAMS = ("alloc", "arena_put", "arena_corrupt", "stage_drop",
+         "disk_full", "disk_torn_write", "disk_slow", "journal_truncate")
+
+# -- kill-point crash harness (DESIGN.md §16) --------------------------------
+# Named host-side sites at which the recovery test harness SIGKILLs a
+# subprocess engine: ``REPRO_KILL_POINT=<point>`` dies at the first hit of
+# that site, ``<point>:<i>`` at the (i+1)-th. SIGKILL (not an exception) is
+# the point — no finally-blocks, no atexit, no buffered flushes: exactly the
+# state a power-cut process leaves behind, which is what checkpoint/restore
+# must recover from. Counters are per-process; the spec is re-read per call
+# so a test can arm/disarm points without re-importing.
+KILL_POINTS = ("post_admit", "mid_spill", "pre_fsync", "post_sync")
+_kill_hits: dict[str, int] = {}
+
+
+def kill_point(name: str) -> None:
+    """Die here (SIGKILL) iff ``REPRO_KILL_POINT`` names this site."""
+    spec = os.environ.get("REPRO_KILL_POINT", "")
+    if not spec:
+        return
+    point, _, idx = spec.partition(":")
+    if point != name:
+        return
+    i = _kill_hits.get(name, 0)
+    _kill_hits[name] = i + 1
+    if i == (int(idx) if idx else 0):
+        sys.stdout.flush()       # results already delivered stay delivered
+        sys.stderr.flush()
+        os.kill(os.getpid(), signal.SIGKILL)
 
 
 @dataclass
@@ -99,6 +138,13 @@ class FaultPlan:
     @property
     def total_fired(self) -> int:
         return sum(self.fired.values())
+
+    def fired_export(self) -> dict:
+        """Per-seam injected-fault counts for telemetry: one
+        ``faults_fired_<seam>`` entry per known seam (zero-filled so chaos
+        dashboards see every seam, fired or not)."""
+        return {f"faults_fired_{seam}": self.fired.get(seam, 0)
+                for seam in SEAMS}
 
     # -- parsing ------------------------------------------------------------
     @classmethod
@@ -182,6 +228,10 @@ class CircuitBreaker:
             self._cooldown_left = self.cooldown
             self.failures = 0
 
-    def stats_export(self) -> dict:
-        return {"tier_state": self.state, "tier_tripped": self.trips,
-                "tier_denied_ops": self.denied}
+    def stats_export(self, prefix: str = "tier") -> dict:
+        """Breaker observability (one breaker per cache tier — the host
+        arena's exports under ``tier_*``, the disk tier's under
+        ``disk_*``): current state plus trip/denial counters."""
+        return {f"{prefix}_state": self.state,
+                f"{prefix}_tripped": self.trips,
+                f"{prefix}_denied_ops": self.denied}

@@ -2,10 +2,14 @@
 
 See DESIGN.md §13. The tier sits between the device prefix cache and
 fresh prefill compute: spilled KV blocks, parked-sequence payloads, and
-recurrent-state snapshots share one byte-budgeted arena.
+recurrent-state snapshots share one byte-budgeted arena. Below it,
+``DiskTier`` (§16) makes arena LRU victims durable: crc-framed files keyed
+by the same chain hashes, so prefixes survive engine restarts.
 """
 from .arena import ArenaStats, HostArena
+from .disk import DiskTier, durable_name
 from .staging import StagingRing
 from .tier import HostTier
 
-__all__ = ["ArenaStats", "HostArena", "StagingRing", "HostTier"]
+__all__ = ["ArenaStats", "HostArena", "StagingRing", "HostTier",
+           "DiskTier", "durable_name"]

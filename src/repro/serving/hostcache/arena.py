@@ -107,15 +107,19 @@ class HostArena:
     ``faults`` is an optional :class:`~repro.serving.faults.FaultPlan`
     wired to the ``arena_put`` / ``arena_corrupt`` seams; ``on_corruption``
     is called (with the key) whenever a verify fails — the host tier points
-    it at its circuit breaker."""
+    it at its circuit breaker; ``on_evict`` is called with ``(key,
+    arrays)`` for every LRU victim *before* its buffers are recycled — the
+    tier points it at the disk spill (DESIGN.md §16), so an evicted entry's
+    bytes are still intact when the demotion hook sees them."""
 
     def __init__(self, capacity_bytes: int, *, integrity: bool = True,
-                 faults=None, on_corruption=None):
+                 faults=None, on_corruption=None, on_evict=None):
         assert capacity_bytes >= 0, capacity_bytes
         self.capacity_bytes = int(capacity_bytes)
         self.integrity = integrity
         self.faults = faults
         self.on_corruption = on_corruption
+        self.on_evict = on_evict
         # insertion/touch order IS the LRU order (oldest first)
         self._entries: "OrderedDict[object, _Entry]" = OrderedDict()
         self._slab: dict[tuple, list] = {}       # (shape, dtype) -> buffers
@@ -174,6 +178,8 @@ class HostArena:
                 continue
             del self._entries[key]
             self.bytes_resident -= e.nbytes
+            if self.on_evict is not None:
+                self.on_evict(key, e.arrays)
             self._slab_give(e.arrays)
             self.stats.evictions += 1
             self._trim_slab(want)

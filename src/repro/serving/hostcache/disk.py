@@ -1,0 +1,317 @@
+"""Durable disk tier below the host arena (DESIGN.md §16).
+
+The arena's LRU victims — spilled prefix blocks and recurrent-state
+snapshots, keyed by the same chained content hashes the device prefix
+cache registers — land here as crc32-framed files instead of vanishing, so
+``lookup_prefix_tiered`` falls through arena -> disk -> recompute and a
+*restarted* engine re-hits the prefixes a dead process computed. Chain
+keys survive restarts by construction: ``blocks.chain_hashes`` hashes
+tuples of ints, which Python hashes deterministically across processes
+(only str/bytes hashing is PYTHONHASHSEED-salted).
+
+File format (one entry per file, named by the caller's durable key)::
+
+    b"RDT1" | u32 crc32(payload) | u64 len(payload) | payload
+    payload = u32 n_arrays, then per array:
+              u16 len(dtype_str) | dtype_str | u8 ndim | u32 dims... | bytes
+
+Durability discipline:
+
+* **Atomic visibility.** Every put writes ``<name>.tmp``, flushes, fsyncs,
+  then renames over the final path — a reader (or a restarted process)
+  only ever sees complete frames or nothing; ``.tmp`` orphans from a crash
+  are swept at startup. The ``mid_spill`` kill point sits between the tmp
+  write and the rename: a process killed there leaves only the orphan.
+* **Byte-budgeted LRU.** ``capacity_bytes`` bounds the directory;
+  admission evicts oldest-touch entries first. The index is in-memory and
+  rebuilt at startup from a directory scan in mtime order (approximate LRU
+  across restarts — exactness never depends on it).
+* **Verified reads.** Every get re-checks the crc; a mismatch (torn write
+  that still got renamed by an injected ``disk_torn_write``, bit rot)
+  deletes the file and reports a miss — corrupt bytes never reach the
+  caller, exactly the arena's §14 demotion contract.
+* **Breaker-isolated.** The tier sits behind its own
+  :class:`~repro.serving.faults.CircuitBreaker`: ENOSPC (or the injected
+  ``disk_full`` seam), repeated checksum failures, any OSError — all
+  degrade the engine to host-only caching, never to an error.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import time
+import zlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.faults import CircuitBreaker, kill_point
+
+_MAGIC = b"RDT1"
+_HEADER = struct.Struct("<4sIQ")      # magic, crc32, payload length
+
+
+def encode_entry(arrays) -> bytes:
+    """Frame a flat list of ndarrays as one crc-checked payload."""
+    parts = [struct.pack("<I", len(arrays))]
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        dt = a.dtype.str.encode()
+        parts.append(struct.pack("<H", len(dt)) + dt)
+        parts.append(struct.pack("<B", a.ndim)
+                     + struct.pack(f"<{a.ndim}I", *a.shape))
+        parts.append(a.tobytes())
+    payload = b"".join(parts)
+    return _HEADER.pack(_MAGIC, zlib.crc32(payload), len(payload)) + payload
+
+
+def decode_entry(buf: bytes) -> Optional[list]:
+    """Parse a framed entry; None on any inconsistency (torn/corrupt)."""
+    if len(buf) < _HEADER.size:
+        return None
+    magic, crc, plen = _HEADER.unpack_from(buf)
+    payload = buf[_HEADER.size:]
+    if magic != _MAGIC or len(payload) != plen or zlib.crc32(payload) != crc:
+        return None
+    try:
+        off = 4
+        (n,) = struct.unpack_from("<I", payload)
+        out = []
+        for _ in range(n):
+            (dlen,) = struct.unpack_from("<H", payload, off)
+            off += 2
+            dt = np.dtype(payload[off:off + dlen].decode())
+            off += dlen
+            (ndim,) = struct.unpack_from("<B", payload, off)
+            off += 1
+            shape = struct.unpack_from(f"<{ndim}I", payload, off)
+            off += 4 * ndim
+            nb = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+            a = np.frombuffer(payload[off:off + nb], dt).reshape(shape)
+            off += nb
+            out.append(a)
+        return out if off == len(payload) else None
+    except (struct.error, ValueError, UnicodeDecodeError):
+        return None
+
+
+def durable_name(namespace: str, shard: int, key: int) -> str:
+    """Filesystem name of one namespaced chain key. The key is an int
+    (chained tuple hash — process-stable); masking to 64 bits keeps the
+    name fixed-width and is injective over Python's +-2**61 hash range."""
+    return f"{namespace}_{shard}_{key & 0xFFFFFFFFFFFFFFFF:016x}.blk"
+
+
+@dataclass
+class DiskStats:
+    puts: int = 0                # entries admitted (file renamed into place)
+    dedup_hits: int = 0          # puts of an already-resident name
+    hits: int = 0                # gets that returned verified arrays
+    misses: int = 0              # gets/probes that found nothing
+    evictions: int = 0           # LRU files deleted for space
+    rejections: int = 0          # puts refused (budget / breaker / ENOSPC)
+    checksum_failures: int = 0   # reads whose crc verify failed (file
+    #                              deleted, demoted to a miss — §14)
+    orphans_swept: int = 0       # crash-leftover .tmp files removed at boot
+    bytes_written: int = 0       # payload bytes fsynced to disk
+
+
+class DiskTier:
+    """Byte-budgeted directory of crc-framed spill files with LRU eviction,
+    behind its own circuit breaker. All methods are total: every failure
+    path (ENOSPC, torn frame, unreadable directory) is a miss or a refused
+    put, never an exception — a dead disk degrades the engine to host-only
+    caching."""
+
+    def __init__(self, root: str, capacity_bytes: int = 1 << 30, *,
+                 faults=None, breaker: Optional[CircuitBreaker] = None,
+                 fsync: bool = True):
+        assert capacity_bytes >= 0, capacity_bytes
+        self.root = root
+        self.capacity_bytes = int(capacity_bytes)
+        self.faults = faults
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.fsync = fsync
+        self.stats = DiskStats()
+        # name -> file size; insertion/touch order IS the LRU order
+        self._index: "OrderedDict[str, int]" = OrderedDict()
+        self.bytes_resident = 0
+        os.makedirs(root, exist_ok=True)
+        self._rebuild_index()
+
+    def _rebuild_index(self):
+        """Startup scan: sweep crash orphans, index entries in mtime order
+        (the best cross-restart LRU approximation the filesystem keeps)."""
+        entries = []
+        try:
+            for name in os.listdir(self.root):
+                path = os.path.join(self.root, name)
+                if name.endswith(".tmp"):
+                    try:
+                        os.unlink(path)
+                        self.stats.orphans_swept += 1
+                    except OSError:
+                        pass
+                    continue
+                if not name.endswith(".blk"):
+                    continue
+                try:
+                    st = os.stat(path)
+                except OSError:
+                    continue
+                entries.append((st.st_mtime, name, st.st_size))
+        except OSError:
+            return
+        for _, name, size in sorted(entries):
+            self._index[name] = size
+            self.bytes_resident += size
+
+    # -- breaker --------------------------------------------------------------
+    def _allow(self) -> bool:
+        return self.breaker.allow()
+
+    def _fail(self):
+        self.breaker.record_failure()
+
+    # -- capacity -------------------------------------------------------------
+    def _evict_for(self, want: int) -> bool:
+        if want > self.capacity_bytes:
+            return False
+        while self._index and self.bytes_resident + want > self.capacity_bytes:
+            name, size = self._index.popitem(last=False)     # oldest touch
+            self.bytes_resident -= size
+            try:
+                os.unlink(os.path.join(self.root, name))
+            except OSError:
+                pass
+            self.stats.evictions += 1
+        return self.bytes_resident + want <= self.capacity_bytes
+
+    def _forget(self, name: str):
+        size = self._index.pop(name, None)
+        if size is not None:
+            self.bytes_resident -= size
+        try:
+            os.unlink(os.path.join(self.root, name))
+        except OSError:
+            pass
+
+    # -- entry API ------------------------------------------------------------
+    def contains(self, name: str) -> bool:
+        """Presence probe (no accounting, no touch — planning passes)."""
+        return self.breaker.state != "open" and name in self._index
+
+    def put(self, name: str, arrays) -> bool:
+        """Spill ``arrays`` under ``name``: frame, write a temp file,
+        flush+fsync, rename into place. False — never an exception — when
+        the budget, the breaker, an injected ``disk_full``, or a real
+        OSError refuses it."""
+        if not self._allow():
+            self.stats.rejections += 1
+            return False
+        if name in self._index:
+            self._index.move_to_end(name)
+            self.stats.dedup_hits += 1
+            self.breaker.record_success()
+            return True
+        frame = encode_entry(arrays)
+        if self.faults is not None and self.faults.fire("disk_full"):
+            self.stats.rejections += 1
+            self._fail()                 # injected ENOSPC: breaker failure
+            return False
+        if not self._evict_for(len(frame)):
+            self.stats.rejections += 1
+            return False
+        torn = (self.faults is not None
+                and self.faults.fire("disk_torn_write"))
+        path = os.path.join(self.root, name)
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                # a torn write is a crash mid-frame that still reached the
+                # final name: half the frame, so the crc verify at the next
+                # get (or the restarted process's) demotes it to a miss
+                f.write(frame[:len(frame) // 2] if torn else frame)
+                f.flush()
+                if self.fsync:
+                    os.fsync(f.fileno())
+            kill_point("mid_spill")
+            os.rename(tmp, path)
+        except OSError:
+            self.stats.rejections += 1
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            self._fail()
+            return False
+        size = len(frame) // 2 if torn else len(frame)
+        self._index[name] = size
+        self.bytes_resident += size
+        self.stats.puts += 1
+        self.stats.bytes_written += size
+        self.breaker.record_success()
+        return True
+
+    def get(self, name: str) -> Optional[list]:
+        """Verified read. A frame that fails the crc (torn write, bit rot)
+        is deleted, counted, and reported as a miss; repeated failures trip
+        the breaker (§14) so a rotting disk stops being consulted."""
+        if not self._allow():
+            self.stats.misses += 1
+            return None
+        if name not in self._index:
+            self.stats.misses += 1
+            return None
+        if self.faults is not None and self.faults.fire("disk_slow"):
+            time.sleep(0.002)            # degraded device: latency, no error
+        try:
+            with open(os.path.join(self.root, name), "rb") as f:
+                buf = f.read()
+        except OSError:
+            self._forget(name)
+            self.stats.misses += 1
+            self._fail()
+            return None
+        arrays = decode_entry(buf)
+        if arrays is None:
+            self._forget(name)
+            self.stats.checksum_failures += 1
+            self.stats.misses += 1
+            self._fail()
+            return None
+        self._index.move_to_end(name)
+        self.stats.hits += 1
+        self.breaker.record_success()
+        return arrays
+
+    def drop(self, name: str) -> bool:
+        """Remove an entry outright (never breaker-gated — hygiene must run
+        even while tripped, like the arena's ``drop``/``unpin``)."""
+        if name not in self._index:
+            return False
+        self._forget(name)
+        return True
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def stats_export(self) -> dict:
+        out = {
+            "disk_puts": self.stats.puts,
+            "disk_dedup_hits": self.stats.dedup_hits,
+            "disk_hits": self.stats.hits,
+            "disk_misses": self.stats.misses,
+            "disk_evictions": self.stats.evictions,
+            "disk_rejections": self.stats.rejections,
+            "disk_checksum_failures": self.stats.checksum_failures,
+            "disk_orphans_swept": self.stats.orphans_swept,
+            "disk_bytes_written": self.stats.bytes_written,
+            "disk_bytes_resident": self.bytes_resident,
+            "disk_bytes_capacity": self.capacity_bytes,
+            "disk_entries": len(self._index),
+        }
+        out.update(self.breaker.stats_export(prefix="disk"))
+        return out

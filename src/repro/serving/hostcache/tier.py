@@ -32,6 +32,16 @@ tier answers every probe as a total miss (puts refused, gets None, runs 0)
 so the engine quietly recomputes instead of erroring each admission, then
 half-open re-probes after a deterministic op-count cooldown. ``unpin`` and
 ``drop`` stay ungated — refcount hygiene must run even while tripped.
+
+Durability (DESIGN.md §16): an optional :class:`DiskTier` sits below the
+arena. Arena LRU victims in the ``kv``/``rec`` namespaces demote to
+crc-framed files (the ``on_evict`` hook fires before the victim's buffers
+are slab-recycled); lookups fall through arena -> disk -> miss, promoting
+disk hits back into the arena. ``park`` payloads never spill — they are
+pinned (so never eviction victims) and private to a live process; a crash
+loses them by design and the journal re-admits the request instead.
+``flush_to_disk`` force-demotes still-resident keys at a checkpoint
+boundary so the snapshot's references are durable, not merely cached.
 """
 from __future__ import annotations
 
@@ -40,19 +50,73 @@ from typing import Optional
 from repro.serving.faults import CircuitBreaker
 
 from .arena import HostArena
+from .disk import DiskTier, durable_name
 from .staging import StagingRing
 
 
 class HostTier:
     def __init__(self, capacity_bytes: int, num_shards: int = 1,
                  staging_depth: int = 2, *, integrity: bool = True,
-                 faults=None, breaker: Optional[CircuitBreaker] = None):
+                 faults=None, breaker: Optional[CircuitBreaker] = None,
+                 disk: Optional[DiskTier] = None):
         self.breaker = breaker
+        self.disk = disk
         self.arena = HostArena(capacity_bytes, integrity=integrity,
                                faults=faults,
-                               on_corruption=lambda key: self.record_failure())
+                               on_corruption=lambda key: self.record_failure(),
+                               on_evict=(self._spill_to_disk
+                                         if disk is not None else None))
         self.num_shards = num_shards
         self.staging = StagingRing(depth=staging_depth, faults=faults)
+        self.disk_promotes = 0       # disk hits copied back into the arena
+        self.disk_spills = 0         # arena victims demoted to disk
+
+    # -- disk demotion/promotion (DESIGN.md §16) ----------------------------
+    def _spill_to_disk(self, key, arrays) -> None:
+        """Arena-eviction hook: demote ``kv``/``rec`` victims to the disk
+        tier (chain keys are process-stable ints, so the file outlives this
+        engine). ``park`` entries never arrive here — they are pinned."""
+        ns, shard, chain_key = key[0], key[1], key[-1]
+        if ns not in ("kv", "rec"):
+            return
+        if self.disk.put(durable_name(ns, shard, chain_key), arrays):
+            self.disk_spills += 1
+
+    def _disk_get(self, ns: str, shard: int, key, pin: bool = False):
+        """Arena-miss fall-through: verified disk read, promoted back into
+        the arena (so the next probe is a memory hit and ``pin`` has an
+        entry to hold). Returns the arrays or None."""
+        if self.disk is None:
+            return None
+        arrays = self.disk.get(durable_name(ns, shard, key))
+        if arrays is None:
+            return None
+        self.arena.put((ns, shard, key), arrays, pin=pin)
+        self.disk_promotes += 1
+        return arrays
+
+    def _disk_has(self, ns: str, shard: int, key) -> bool:
+        return (self.disk is not None
+                and self.disk.contains(durable_name(ns, shard, key)))
+
+    def flush_to_disk(self, shard: int, keys, ns: str = "kv") -> int:
+        """Force-demote still-resident arena entries to disk without
+        evicting them (checkpoint boundary: the snapshot references these
+        chain keys, so make them durable now, not at some future eviction).
+        Returns the number of keys durable on disk afterwards."""
+        if self.disk is None:
+            return 0
+        n = 0
+        for key in keys:
+            name = durable_name(ns, shard, key)
+            if self.disk.contains(name):
+                n += 1
+                continue
+            arrays = self.arena.get((ns, shard, key))
+            if arrays is not None and self.disk.put(name, arrays):
+                self.disk_spills += 1
+                n += 1
+        return n
 
     # -- circuit breaker (DESIGN.md §14) ------------------------------------
     def _allow(self) -> bool:
@@ -78,17 +142,25 @@ class HostTier:
     def has_kv(self, shard: int, key) -> bool:
         if not self._allow():
             return False
-        return self.arena.contains(("kv", shard, key))
+        return (self.arena.contains(("kv", shard, key))
+                or self._disk_has("kv", shard, key))
 
     def get_kv(self, shard: int, key) -> Optional[list]:
         if not self._allow():
             return None
-        return self._verified(self.arena.get(("kv", shard, key)))
+        arrays = self._verified(self.arena.get(("kv", shard, key)))
+        if arrays is None:
+            arrays = self._disk_get("kv", shard, key)
+        return arrays
 
     def pin_kv(self, shard: int, key) -> bool:
         if not self._allow():
             return False
-        return self.arena.pin(("kv", shard, key))
+        if self.arena.pin(("kv", shard, key)):
+            return True
+        # not in memory: a disk hit is promoted *pinned* so the pin has an
+        # arena entry to hold until the owner unpins
+        return self._disk_get("kv", shard, key, pin=True) is not None
 
     def unpin_kv(self, shard: int, key):
         self.arena.unpin(("kv", shard, key))      # never breaker-gated
@@ -102,7 +174,8 @@ class HostTier:
             return 0
         n = 0
         for k in keys:
-            if not self.arena.contains(("kv", shard, k), touch=True):
+            if not (self.arena.contains(("kv", shard, k), touch=True)
+                    or self._disk_has("kv", shard, k)):
                 break
             n += 1
         return n
@@ -116,12 +189,16 @@ class HostTier:
     def has_rec(self, shard: int, key) -> bool:
         if not self._allow():
             return False
-        return self.arena.contains(("rec", shard, key), touch=True)
+        return (self.arena.contains(("rec", shard, key), touch=True)
+                or self._disk_has("rec", shard, key))
 
     def get_rec(self, shard: int, key) -> Optional[list]:
         if not self._allow():
             return None
-        return self._verified(self.arena.get(("rec", shard, key)))
+        arrays = self._verified(self.arena.get(("rec", shard, key)))
+        if arrays is None:
+            arrays = self._disk_get("rec", shard, key)
+        return arrays
 
     # -- parked-sequence client ---------------------------------------------
     def put_park(self, uid: int, arrays) -> bool:
@@ -155,4 +232,8 @@ class HostTier:
         out.update(self.breaker.stats_export() if self.breaker is not None
                    else {"tier_state": "closed", "tier_tripped": 0,
                          "tier_denied_ops": 0})
+        if self.disk is not None:
+            out.update(self.disk.stats_export())
+            out["disk_promotes"] = self.disk_promotes
+            out["disk_spills"] = self.disk_spills
         return out

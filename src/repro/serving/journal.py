@@ -1,0 +1,195 @@
+"""Write-ahead request journal (DESIGN.md §16).
+
+Append-only log of request lifecycle transitions — submit / admit / park /
+retry / finish / cancel / fail — so a restarted engine knows exactly which
+requests were accepted and which of those already reached a terminal state.
+The journal records *intent, identity, and outcomes*, never device
+tensors: a replayed ``submit`` carries the full prompt and sampling
+identity (uid, noise seed, priority, deadline), which by the engine's
+determinism invariant (out = f(context, eps)) is sufficient to regenerate
+bitwise-identical tokens from scratch; cached state only makes that
+cheaper. ``finish`` records carry the delivered token ids (host-side ints,
+same order of magnitude as the journaled prompt), making the journal the
+durable delivery channel: a crash between journaling a finish and the
+client draining it re-delivers the exact same tokens on restore.
+
+Frame format (one record)::
+
+    u32 len(payload) | u32 crc32(payload) | payload (JSON, utf-8)
+
+Fsync discipline: ``append`` buffers; every ``fsync_every`` records (and on
+every explicit ``sync()``, which the engine calls at each round-sync
+boundary) the file is flushed and fsynced. With ``fsync_every=1`` (the
+default) an accepted submit is durable before ``submit()`` returns — a
+crash at *any* later instant loses no accepted request. Larger values
+batch the fsync cost; the exposure window is then at most
+``fsync_every - 1`` records past the last sync boundary.
+
+Replay discipline: records are read sequentially; the first frame whose
+length field runs past EOF or whose crc fails is a torn tail from a crash
+mid-append — replay stops there and **truncates** the file back to the
+last good frame boundary (never errors, never resurrects partial bytes),
+so the journal is again well-formed for appending. The
+``journal_truncate`` fault seam simulates exactly that crash by tearing
+off the last good record before parsing.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import json
+import zlib
+from typing import Optional
+
+from repro.serving.faults import kill_point
+
+_FRAME = struct.Struct("<II")            # payload length, crc32(payload)
+
+# Record types. ``submit`` is the only one carrying payload enough to
+# recreate a Request; the rest reference it by uid.
+TYPES = ("submit", "admit", "park", "retry", "finish", "cancel", "fail")
+TERMINAL = frozenset(("finish", "cancel", "fail"))
+
+
+def _encode(rec: dict) -> bytes:
+    payload = json.dumps(rec, separators=(",", ":"),
+                         sort_keys=True).encode()
+    return _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+class RequestJournal:
+    """Crc-framed append-only WAL with batched fsync and torn-tail repair."""
+
+    def __init__(self, path: str, fsync_every: int = 1, *, faults=None):
+        assert fsync_every >= 1, fsync_every
+        self.path = path
+        self.fsync_every = int(fsync_every)
+        self.faults = faults
+        self.appends = 0             # records appended this process
+        self.syncs = 0               # fsyncs issued
+        self._unsynced = 0
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # Repair a torn tail *before* opening for append, so new records
+        # land on a frame boundary, not on top of half a dead frame.
+        if os.path.exists(path):
+            self.replay(path)
+        self._f = open(path, "ab")
+
+    # -- writing --------------------------------------------------------------
+    def append(self, type: str, **fields) -> None:
+        """Buffer one record; fsyncs every ``fsync_every`` appends."""
+        assert type in TYPES, type
+        rec = {"type": type, **fields}
+        self._f.write(_encode(rec))
+        self.appends += 1
+        self._unsynced += 1
+        if self._unsynced >= self.fsync_every:
+            self.sync()
+
+    def sync(self) -> None:
+        """Flush + fsync the journal. The ``pre_fsync`` kill point sits
+        between the two: a process killed there has handed its records to
+        the OS (a SIGKILL does not lose flushed data — only power loss
+        does, which the torn-tail replay covers) but not forced them to
+        media."""
+        if self._f.closed:
+            return
+        self._f.flush()
+        kill_point("pre_fsync")
+        os.fsync(self._f.fileno())
+        self.syncs += 1
+        self._unsynced = 0
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.sync()
+            self._f.close()
+
+    def stats_export(self) -> dict:
+        return {"journal_appends": self.appends,
+                "journal_syncs": self.syncs,
+                "journal_unsynced": self._unsynced}
+
+    # -- replay ---------------------------------------------------------------
+    @classmethod
+    def replay(cls, path: str, *, faults=None) -> list:
+        """Read every intact record; truncate the file at the first torn
+        frame. Returns the records in append order ([] for a missing or
+        empty journal)."""
+        try:
+            with open(path, "rb") as f:
+                buf = f.read()
+        except OSError:
+            return []
+        records, offsets, off = [], [], 0
+        while off + _FRAME.size <= len(buf):
+            plen, crc = _FRAME.unpack_from(buf, off)
+            start = off + _FRAME.size
+            payload = buf[start:start + plen]
+            if len(payload) != plen or zlib.crc32(payload) != crc:
+                break                            # torn tail: crash mid-append
+            try:
+                rec = json.loads(payload)
+            except ValueError:
+                break
+            records.append(rec)
+            off = start + plen
+            offsets.append(off)
+        if faults is not None and faults.fire("journal_truncate") and records:
+            records.pop()                        # simulate losing the tail
+            offsets.pop()
+            off = offsets[-1] if offsets else 0
+        if off < len(buf):
+            try:
+                with open(path, "r+b") as f:
+                    f.truncate(off)
+            except OSError:
+                pass
+        return records
+
+    @staticmethod
+    def pending(records) -> "tuple[dict, dict, dict]":
+        """Fold replayed records into recovery state.
+
+        Returns ``(pending, parked, delivered)``: ``pending`` maps uid ->
+        its submit record with later ``retry`` fields (noise_seed, retries)
+        folded in and ``admitted``/``parked`` flags, for every accepted
+        request that never reached a terminal record; ``parked`` maps
+        uid -> the last park record for uids still pending (the checkpoint
+        may hold a resumable snapshot for these); ``delivered`` maps
+        uid -> its submit record with the terminal outcome folded in
+        (``terminal`` type plus the finish ``tokens`` or failure ``code``).
+        Terminal records are the *commit of the result*, not of its
+        pickup — a crash can land between journaling a finish and the
+        client draining it — so restore re-delivers every journaled
+        outcome (at-least-once; re-delivery is bitwise-identical by the
+        determinism invariant, so clients dedup by uid trivially)."""
+        pending: dict = {}
+        parked: dict = {}
+        delivered: dict = {}
+        for rec in records:
+            uid = rec.get("uid")
+            t = rec.get("type")
+            if t == "submit":
+                pending[uid] = dict(rec, admitted=False, parked=False)
+            elif uid not in pending:
+                continue                 # terminal already folded, or alien
+            elif t in TERMINAL:
+                delivered[uid] = dict(pending.pop(uid), terminal=t,
+                                      **{k: rec[k] for k in
+                                         ("tokens", "code") if k in rec})
+                parked.pop(uid, None)
+            elif t == "admit":
+                pending[uid]["admitted"] = True
+                pending[uid]["parked"] = False
+                parked.pop(uid, None)
+            elif t == "park":
+                pending[uid]["parked"] = True
+                parked[uid] = rec
+            elif t == "retry":
+                pending[uid]["noise_seed"] = rec.get(
+                    "noise_seed", pending[uid].get("noise_seed"))
+                pending[uid]["retries"] = rec.get(
+                    "retries", pending[uid].get("retries", 0))
+                pending[uid]["admitted"] = False
+        return pending, parked, delivered

@@ -74,6 +74,13 @@ class EngineMetrics:
     #                                      prefix was restaged before admit
     idle_row_rounds: int = 0             # (row, round) pairs a freed row sat
     #                                      with the staging area drained
+    recovered_requests: int = 0          # requests re-admitted from the
+    #                                      journal by restore() (§16)
+    recovered_parked: int = 0            # of those, resumed from a durable
+    #                                      parked-sequence checkpoint (the
+    #                                      rest re-prefill from scratch)
+    checkpoints_written: int = 0         # scheduler snapshots fsynced at
+    #                                      sync boundaries
     active_rr_backlog: int = 0           # the two counters above, restricted
     row_rr_backlog: int = 0              # to loops DISPATCHED with host
     #                                      backlog (queued or staged work
@@ -207,6 +214,9 @@ class EngineMetrics:
                 if self.staging_occupancy_hist else 0.0),
             "prefetch_hits": self.prefetch_hits,
             "idle_row_rounds": self.idle_row_rounds,
+            "recovered_requests": self.recovered_requests,
+            "recovered_parked": self.recovered_parked,
+            "checkpoints_written": self.checkpoints_written,
         }
         if block_stats:
             out.update(block_stats)

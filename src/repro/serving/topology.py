@@ -109,18 +109,21 @@ class ServingTopology:
 
     # -- host cache tier (DESIGN.md §13) ------------------------------------
     def host_tier(self, capacity_bytes: int, staging_depth: int = 2, *,
-                  integrity: bool = True, faults=None, breaker=None):
+                  integrity: bool = True, faults=None, breaker=None,
+                  disk=None):
         """Build the engine's host cache tier for this topology: one arena
         (a single shared byte budget for the whole process — a hot shard may
         use headroom an idle one is not) partitioned into per-data-shard key
         namespaces, mirroring the per-shard device prefix caches (block
         contents never cross shards, so neither do their host copies).
         ``integrity``/``faults``/``breaker`` configure the §14 fault layer
-        (checksum verification, injection seams, circuit breaker)."""
+        (checksum verification, injection seams, circuit breaker); ``disk``
+        is an optional §16 :class:`DiskTier` below the arena (one directory
+        for the process — keys carry the shard, like the arena)."""
         from repro.serving.hostcache import HostTier
         return HostTier(capacity_bytes, num_shards=self.data_size,
                         staging_depth=staging_depth, integrity=integrity,
-                        faults=faults, breaker=breaker)
+                        faults=faults, breaker=breaker, disk=disk)
 
     # -- device placement ---------------------------------------------------
     def batch_spec(self) -> P:

@@ -132,3 +132,55 @@ def test_staging_ring_depth_and_accounting():
     assert st["h2d_staged"] == 5
     assert st["h2d_staged_bytes"] == 5 * BLK_BYTES
     assert 0.0 <= st["h2d_overlap_frac"] <= 1.0
+
+
+def test_corrupt_pinned_get_leaks_no_pin_and_strands_no_bytes():
+    """§14/§16 edge: an integrity failure on a PINNED entry drops it like
+    any other corrupt entry — and must fully release its accounting: no
+    phantom pin survives (the arena can evict its way back to empty) and
+    every byte lands in the slab pool or the free budget, never stranded."""
+    fired = []
+    a = HostArena(4 * BLK_BYTES, on_corruption=fired.append)
+    assert a.put("k", [_blk(3)], pin=True)
+    # corrupt the stored copy in place, then read through the pin
+    a._entries["k"].arrays[0].view(np.uint8).flat[0] ^= 0xFF
+    assert a.get("k") is None
+    assert a.stats.checksum_failures == 1 and fired == ["k"]
+    assert not a.contains("k")
+    # accounting: resident bytes released to the slab, budget intact
+    assert a.bytes_resident == 0
+    assert a.bytes_slab == BLK_BYTES
+    assert a.bytes_resident + a.bytes_slab <= a.capacity_bytes
+    # the dead pin protects nothing: the arena fills back to capacity
+    for i in range(4):
+        assert a.put(i, [_blk(i)])
+    assert len(a) == 4 and a.stats.rejections == 0
+    # the pin owner's normal-path unpin is a harmless no-op (§14)
+    a.unpin("k")
+    assert a.put("again", [_blk(9)])          # still evictable, no refs leak
+    assert a.stats.slab_reuses >= 1           # corrupt buffer was recycled
+
+
+def test_tier_drop_park_ungated_during_half_open_probe():
+    """Refcount/payload hygiene must run in EVERY breaker state: a parked
+    payload discarded while the tier is open or mid-probe (half_open) still
+    frees its pinned bytes — otherwise a tripped tier slowly pins the arena
+    full."""
+    from repro.serving.faults import CircuitBreaker
+
+    br = CircuitBreaker(threshold=1, cooldown=4)
+    t = HostTier(capacity_bytes=4 * BLK_BYTES, breaker=br)
+    assert t.put_park(7, [_blk(7)])
+    assert t.put_park(8, [_blk(8)])
+    br.record_failure()                       # threshold=1: trips open
+    assert br.state == "open"
+    assert t.drop_park(7)                     # open: drop still runs
+    assert t.arena.bytes_resident == BLK_BYTES
+    br.state = "half_open"                    # mid-probe, verdict pending
+    assert t.drop_park(8)                     # half_open: drop still runs
+    assert br.state == "half_open"            # hygiene is not the probe
+    assert t.arena.bytes_resident == 0
+    # the actual probe (a verified get path) re-closes the breaker
+    assert t.put_kv(0, 11, [_blk(1)])
+    assert t.get_kv(0, 11) is not None
+    assert br.state == "closed"

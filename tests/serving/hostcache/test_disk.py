@@ -1,0 +1,157 @@
+"""Disk-tier units (DESIGN.md §16): frame codec, byte budget + LRU,
+atomic-visibility discipline, crc-verified reads, restart index rebuild,
+orphan sweep, breaker isolation, and the three disk fault seams."""
+import os
+
+import numpy as np
+
+from repro.serving import DiskTier, FaultPlan
+from repro.serving.faults import CircuitBreaker
+from repro.serving.hostcache import durable_name
+from repro.serving.hostcache.disk import decode_entry, encode_entry
+
+
+def _blk(fill, shape=(4, 8), dtype=np.float32):
+    return np.full(shape, fill, dtype)
+
+
+def test_encode_decode_roundtrip():
+    arrays = [_blk(3), np.arange(7, dtype=np.int64),
+              np.zeros((0,), np.float16), np.ones((2, 1, 3), np.int32)]
+    out = decode_entry(encode_entry(arrays))
+    assert out is not None and len(out) == len(arrays)
+    for a, b in zip(arrays, out):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_decode_rejects_any_inconsistency():
+    frame = encode_entry([_blk(1)])
+    assert decode_entry(frame[:-1]) is None          # truncated payload
+    assert decode_entry(frame[: len(frame) // 2]) is None
+    assert decode_entry(b"") is None
+    assert decode_entry(frame + b"x") is None        # trailing garbage
+    bad = bytearray(frame)
+    bad[-1] ^= 0xFF                                  # bit rot
+    assert decode_entry(bytes(bad)) is None
+    bad = bytearray(frame)
+    bad[0] ^= 0xFF                                   # wrong magic
+    assert decode_entry(bytes(bad)) is None
+
+
+def test_durable_name_is_process_stable_and_fixed_width():
+    assert durable_name("kv", 0, 0x1234) == "kv_0_0000000000001234.blk"
+    # negative hashes (Python tuple hashes are signed) mask cleanly
+    n = durable_name("rec", 3, -1)
+    assert n == "rec_3_ffffffffffffffff.blk" and n.endswith(".blk")
+
+
+def test_put_get_and_budget_lru(tmp_path):
+    frame_len = len(encode_entry([_blk(0)]))
+    d = DiskTier(str(tmp_path), capacity_bytes=3 * frame_len)
+    for i in range(5):
+        assert d.put(durable_name("kv", 0, i), [_blk(i)])
+    assert len(d) == 3 and d.stats.evictions == 2
+    assert d.bytes_resident <= d.capacity_bytes
+    # oldest two evicted, newest three readable and verified
+    assert d.get(durable_name("kv", 0, 0)) is None
+    got = d.get(durable_name("kv", 0, 4))
+    np.testing.assert_array_equal(got[0], _blk(4))
+    # an entry that can never fit is refused, not partially admitted
+    assert not d.put(durable_name("kv", 0, 99), [_blk(0, shape=(64, 64))])
+    assert d.stats.rejections == 1
+    # dedup put: no second file, recency refreshed
+    assert d.put(durable_name("kv", 0, 2), [_blk(2)])
+    assert d.stats.dedup_hits == 1 and len(d) == 3
+
+
+def test_index_rebuild_after_restart(tmp_path):
+    d = DiskTier(str(tmp_path))
+    for i in range(3):
+        d.put(durable_name("kv", 0, i), [_blk(i)])
+    resident = d.bytes_resident
+    # a new process over the same directory sees every entry, verified
+    d2 = DiskTier(str(tmp_path))
+    assert len(d2) == 3 and d2.bytes_resident == resident
+    for i in range(3):
+        np.testing.assert_array_equal(
+            d2.get(durable_name("kv", 0, i))[0], _blk(i))
+
+
+def test_orphan_tmp_swept_at_startup(tmp_path):
+    d = DiskTier(str(tmp_path))
+    d.put(durable_name("kv", 0, 1), [_blk(1)])
+    orphan = os.path.join(str(tmp_path), "kv_0_dead.blk.tmp")
+    with open(orphan, "wb") as f:
+        f.write(b"half a frame")               # crash between write and rename
+    d2 = DiskTier(str(tmp_path))
+    assert not os.path.exists(orphan)
+    assert d2.stats.orphans_swept == 1
+    assert len(d2) == 1                        # the real entry survived
+
+
+def test_torn_write_seam_demotes_to_miss(tmp_path):
+    plan = FaultPlan.parse("disk_torn_write=@0")
+    d = DiskTier(str(tmp_path), faults=plan)
+    assert d.put(durable_name("kv", 0, 7), [_blk(7)])   # write "succeeds"
+    assert plan.fired["disk_torn_write"] == 1
+    # the crc verify catches the tear, deletes the file, reports a miss
+    assert d.get(durable_name("kv", 0, 7)) is None
+    assert d.stats.checksum_failures == 1
+    assert not d.contains(durable_name("kv", 0, 7))
+    assert len(d) == 0
+
+
+def test_disk_full_seam_counts_breaker_failures(tmp_path):
+    plan = FaultPlan.parse("disk_full=@0;1;2")
+    br = CircuitBreaker(threshold=3, cooldown=4)
+    d = DiskTier(str(tmp_path), faults=plan, breaker=br)
+    for i in range(3):
+        assert not d.put(durable_name("kv", 0, i), [_blk(i)])
+    assert d.stats.rejections == 3
+    assert br.state == "open"                  # 3 consecutive ENOSPC: tripped
+    # open tier: probes miss, puts refuse, never an exception
+    assert not d.contains(durable_name("kv", 0, 0))
+    assert not d.put(durable_name("kv", 0, 9), [_blk(9)])
+    assert d.get(durable_name("kv", 0, 9)) is None
+    # past the cooldown the half-open probe succeeds and re-closes
+    for i in range(10, 16):
+        if d.put(durable_name("kv", 0, i), [_blk(i)]):
+            break
+    assert br.state == "closed"
+    st = d.stats_export()
+    assert st["disk_state"] == "closed" and st["disk_tripped"] == 1
+    assert st["disk_denied_ops"] > 0
+
+
+def test_disk_slow_seam_is_latency_only(tmp_path):
+    plan = FaultPlan.parse("disk_slow=1.0")
+    d = DiskTier(str(tmp_path), faults=plan)
+    d.put(durable_name("kv", 0, 1), [_blk(1)])
+    got = d.get(durable_name("kv", 0, 1))      # stalls, then verifies fine
+    np.testing.assert_array_equal(got[0], _blk(1))
+    assert plan.fired["disk_slow"] == 1
+    assert d.stats.checksum_failures == 0
+
+
+def test_drop_is_never_breaker_gated(tmp_path):
+    d = DiskTier(str(tmp_path))
+    d.put(durable_name("kv", 0, 1), [_blk(1)])
+    d.breaker.state = "open"
+    d.breaker._cooldown_left = 100
+    assert d.drop(durable_name("kv", 0, 1))    # hygiene runs while tripped
+    assert len(d) == 0
+    assert not d.drop(durable_name("kv", 0, 1))
+
+
+def test_oserror_put_degrades_not_raises(tmp_path):
+    d = DiskTier(str(tmp_path))
+    os.chmod(str(tmp_path), 0o500)             # directory not writable
+    try:
+        if os.geteuid() == 0:                  # root ignores mode bits
+            return
+        assert not d.put(durable_name("kv", 0, 1), [_blk(1)])
+        assert d.stats.rejections == 1
+        assert d.breaker.failures == 1
+    finally:
+        os.chmod(str(tmp_path), 0o700)

@@ -1,0 +1,108 @@
+"""Subprocess driver for the kill-point crash harness (DESIGN.md §16).
+
+Not a test file — ``test_recovery.py`` launches this script as a child
+process, arms one ``REPRO_KILL_POINT`` site, and asserts the child died by
+SIGKILL mid-flight; a second child with the same durable directory then
+restores and finishes the work. Every line this driver prints is a flushed
+JSON event (``submitted`` / ``finish`` / ``recovered`` / ``metrics``), so
+whatever reached stdout before the kill is exactly what the dead process
+had delivered to its client.
+
+Usage: ``python recovery_driver.py {serve,resume,reference} [durable_dir]``
+
+The workload is fixed and deterministic: one long low-priority request
+that gets preempted (parked) by three high-priority arrivals on a batch=1
+engine — so the serve phase exercises the journal (submits, park, admits,
+finishes), the checkpoint (a parked snapshot with ``flush_to_disk``-ed
+chain keys), and the disk tier (spill puts at every parked checkpoint),
+giving all four kill points a site that actually fires.
+"""
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.serving import Request, ServingEngine
+
+EPS_KEY = jax.random.PRNGKey(9)
+ENGINE_KW = dict(batch=1, window_max=4, max_len=64, block_size=4,
+                 adaptive=False, preempt_floor=1.0)
+METRIC_KEYS = ("requests_finished", "prefill_calls", "preemptions",
+               "recovered_requests", "recovered_parked",
+               "checkpoints_written", "disk_spills", "disk_hits",
+               "disk_promotes", "journal_appends", "resume_recomputes")
+
+
+def make_requests(cfg):
+    rng = np.random.default_rng(5)
+    low = Request(uid=0, prompt=rng.integers(0, cfg.vocab, size=24),
+                  new_tokens=10, priority=5)
+    high = [Request(uid=1 + i,
+                    prompt=rng.integers(0, cfg.vocab, size=6),
+                    new_tokens=6, priority=0)
+            for i in range(3)]
+    return [low] + high
+
+
+def emit(event: dict):
+    print(json.dumps(event), flush=True)
+
+
+def drain(eng, emitted: set):
+    for r in eng.done:
+        if r.uid not in emitted and r.result is not None:
+            emitted.add(r.uid)
+            emit({"event": "finish", "uid": int(r.uid),
+                  "tokens": np.asarray(r.result).tolist()})
+
+
+def run_to_done(eng, emitted: set):
+    while (eng.queue or eng._staged_total()
+           or any(s is not None for s in eng.slots)):
+        if not eng.step():
+            break
+        drain(eng, emitted)
+    drain(eng, emitted)
+
+
+def emit_metrics(eng):
+    m = eng.export_metrics()
+    emit({"event": "metrics",
+          **{k: int(m.get(k, 0)) for k in METRIC_KEYS}})
+
+
+def main():
+    phase = sys.argv[1]
+    durable_dir = sys.argv[2] if len(sys.argv) > 2 else None
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    kw = dict(ENGINE_KW, eps_key=EPS_KEY)
+    if phase in ("serve", "resume"):
+        assert durable_dir, "serve/resume need a durable dir"
+        kw.update(durable_dir=durable_dir, journal_fsync_every=1)
+    eng = ServingEngine(cfg, params, **kw)
+    emitted: set = set()
+
+    if phase == "resume":
+        n = eng.restore()
+        emit({"event": "recovered", "n": int(n)})
+    else:
+        reqs = make_requests(cfg)
+        eng.submit(reqs[0])
+        emit({"event": "submitted", "uid": 0})
+        eng.step()              # low-pri admitted: high-pri arrivals preempt
+        drain(eng, emitted)
+        for r in reqs[1:]:
+            eng.submit(r)
+            emit({"event": "submitted", "uid": int(r.uid)})
+
+    run_to_done(eng, emitted)
+    eng.close()
+    emit_metrics(eng)
+
+
+if __name__ == "__main__":
+    main()

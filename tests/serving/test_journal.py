@@ -1,0 +1,166 @@
+"""Write-ahead request journal units (DESIGN.md §16): crc framing, batched
+fsync discipline, torn-tail repair on replay, the ``journal_truncate``
+fault seam, and the ``pending()`` lifecycle fold."""
+import os
+import struct
+import zlib
+
+from repro.serving import FaultPlan, RequestJournal
+
+
+def _path(tmp_path):
+    return str(tmp_path / "journal.wal")
+
+
+def test_append_replay_roundtrip(tmp_path):
+    p = _path(tmp_path)
+    j = RequestJournal(p)
+    j.append("submit", uid=1, prompt=[1, 2, 3], new_tokens=4,
+             priority=0, deadline=None, noise_seed=None, rank=0)
+    j.append("admit", uid=1)
+    j.append("finish", uid=1)
+    j.close()
+    recs = RequestJournal.replay(p)
+    assert [r["type"] for r in recs] == ["submit", "admit", "finish"]
+    assert recs[0]["prompt"] == [1, 2, 3]
+    assert recs[0]["rank"] == 0
+
+
+def test_replay_missing_file_is_empty():
+    assert RequestJournal.replay("/nonexistent/journal.wal") == []
+
+
+def test_fsync_batching_counts(tmp_path):
+    j = RequestJournal(_path(tmp_path), fsync_every=3)
+    for i in range(7):
+        j.append("submit", uid=i, prompt=[i], new_tokens=1,
+                 priority=0, deadline=None, noise_seed=None, rank=i)
+    # 7 appends at fsync_every=3: syncs after records 3 and 6, one pending
+    assert j.syncs == 2
+    st = j.stats_export()
+    assert st["journal_appends"] == 7 and st["journal_unsynced"] == 1
+    j.sync()
+    assert j.stats_export()["journal_unsynced"] == 0
+    j.close()
+
+
+def test_torn_tail_truncated_and_repaired(tmp_path):
+    p = _path(tmp_path)
+    j = RequestJournal(p)
+    for i in range(3):
+        j.append("submit", uid=i, prompt=[i], new_tokens=1,
+                 priority=0, deadline=None, noise_seed=None, rank=i)
+    j.close()
+    good_size = os.path.getsize(p)
+    # crash mid-append: half a frame header plus garbage past the tail
+    with open(p, "ab") as f:
+        f.write(struct.pack("<II", 1 << 20, 0xDEAD)[:6])
+    recs = RequestJournal.replay(p)
+    assert len(recs) == 3                    # torn frame never surfaces
+    assert os.path.getsize(p) == good_size   # file truncated to last good
+    # truncation is idempotent and the journal reopens cleanly for append
+    assert len(RequestJournal.replay(p)) == 3
+    j2 = RequestJournal(p)
+    j2.append("finish", uid=0)
+    j2.close()
+    assert [r["type"] for r in RequestJournal.replay(p)][-1] == "finish"
+
+
+def test_crc_corruption_stops_replay_at_boundary(tmp_path):
+    p = _path(tmp_path)
+    j = RequestJournal(p)
+    for i in range(4):
+        j.append("submit", uid=i, prompt=[i], new_tokens=1,
+                 priority=0, deadline=None, noise_seed=None, rank=i)
+    j.close()
+    recs = RequestJournal.replay(p)
+    assert len(recs) == 4
+    # flip one payload byte of the THIRD record: replay keeps only 2
+    with open(p, "rb") as f:
+        buf = f.read()
+    off = 0
+    for _ in range(2):
+        (plen,) = struct.unpack_from("<I", buf, off)
+        off += 8 + plen
+    bad = bytearray(buf)
+    bad[off + 8] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(bad)
+    recs = RequestJournal.replay(p)
+    assert [r["uid"] for r in recs] == [0, 1]
+
+
+def test_journal_truncate_seam_drops_last_record(tmp_path):
+    p = _path(tmp_path)
+    j = RequestJournal(p)
+    for i in range(3):
+        j.append("submit", uid=i, prompt=[i], new_tokens=1,
+                 priority=0, deadline=None, noise_seed=None, rank=i)
+    j.close()
+    plan = FaultPlan.parse("journal_truncate=@0")
+    recs = RequestJournal.replay(p, faults=plan)
+    assert [r["uid"] for r in recs] == [0, 1]
+    assert plan.fired["journal_truncate"] == 1
+    # the tear persisted: a faultless replay sees the truncated file
+    assert [r["uid"] for r in RequestJournal.replay(p)] == [0, 1]
+
+
+def test_frame_encoding_is_crc_checked(tmp_path):
+    p = _path(tmp_path)
+    j = RequestJournal(p)
+    j.append("submit", uid=9, prompt=[7], new_tokens=1,
+             priority=0, deadline=None, noise_seed=None, rank=0)
+    j.close()
+    with open(p, "rb") as f:
+        buf = f.read()
+    plen, crc = struct.unpack_from("<II", buf)
+    payload = buf[8:8 + plen]
+    assert zlib.crc32(payload) == crc
+    assert b'"type":"submit"' in payload
+
+
+def test_pending_folds_lifecycle():
+    recs = [
+        {"type": "submit", "uid": 1, "noise_seed": None, "retries": 0},
+        {"type": "submit", "uid": 2, "noise_seed": None},
+        {"type": "submit", "uid": 3, "noise_seed": None},
+        {"type": "admit", "uid": 1},
+        {"type": "finish", "uid": 1, "tokens": [4, 2]},   # terminal
+        {"type": "admit", "uid": 2},
+        {"type": "park", "uid": 2},              # pending + parked
+        {"type": "retry", "uid": 3, "noise_seed": 77, "retries": 1},
+        {"type": "admit", "uid": 99},            # alien uid: skipped
+    ]
+    pending, parked, delivered = RequestJournal.pending(recs)
+    assert set(pending) == {2, 3}
+    assert pending[2]["parked"] and pending[2]["admitted"]
+    assert set(parked) == {2}
+    # retry folded identity: re-admission must use the retry noise stream
+    assert pending[3]["noise_seed"] == 77 and pending[3]["retries"] == 1
+    assert not pending[3]["admitted"]
+    # terminal outcome folded for re-delivery: tokens travel in the record
+    assert set(delivered) == {1}
+    assert delivered[1]["terminal"] == "finish"
+    assert delivered[1]["tokens"] == [4, 2]
+
+
+def test_pending_admit_clears_parked():
+    recs = [
+        {"type": "submit", "uid": 5},
+        {"type": "park", "uid": 5},
+        {"type": "admit", "uid": 5},             # resumed before the crash
+    ]
+    pending, parked, _ = RequestJournal.pending(recs)
+    assert pending[5]["admitted"] and not pending[5]["parked"]
+    assert parked == {}
+
+
+def test_pending_terminal_clears_parked():
+    recs = [
+        {"type": "submit", "uid": 6},
+        {"type": "park", "uid": 6},
+        {"type": "cancel", "uid": 6},
+    ]
+    pending, parked, delivered = RequestJournal.pending(recs)
+    assert pending == {} and parked == {}
+    assert delivered[6]["terminal"] == "cancel"
