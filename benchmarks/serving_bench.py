@@ -401,8 +401,8 @@ def fused_writeback(cfg, params=None, seed: int = 23):
     against measured per-dispatch latency on real hardware."""
     import jax.numpy as jnp
 
+    from repro.analysis import Contract, check_engine_round, check_program
     from repro.kernels.paged_attention.ref import write_window_paged
-    from repro.launch.hlo_analysis import count_jaxpr_primitives
 
     if params is None:
         params = TransformerLM.init(jax.random.PRNGKey(seed), cfg)
@@ -413,22 +413,20 @@ def fused_writeback(cfg, params=None, seed: int = 23):
                             block_size=4, eps_key=jax.random.PRNGKey(3),
                             adaptive=False, prefix_cache=False,
                             paged_attention=(mode == "paged"))
-        fn = eng._round_loop_fn(4, eng.rounds_per_sync)
-        args = eng._round_args()
-        jaxpr = fn.trace(*args).jaxpr
-        c = count_jaxpr_primitives(jaxpr, ("scatter", "pallas_call"),
-                                   min_rank=0)
-        pool_scatters = count_jaxpr_primitives(
-            jaxpr, ("scatter",), min_rank=3)["scatter"]
-        row[f"{mode}_pool_scatter_eqns"] = pool_scatters
-        row[f"{mode}_pallas_calls"] = c["pallas_call"]
+        rep = check_engine_round(eng)
+        assert rep.ok, rep
+        row[f"{mode}_pool_scatter_eqns"] = rep.metrics["pool_scatters"]
+        row[f"{mode}_pallas_calls"] = rep.metrics["pallas_calls"]
         row[f"{mode}_dispatches_per_loop"] = 1    # one compiled program
-    # what one eliminated pre-kernel scatter looks like, per K/V leaf
-    ref = jax.jit(write_window_paged).trace(
-        jnp.zeros((9, 4, 2, 8)), jnp.zeros((2, 4, 2, 8)),
-        jnp.zeros((2, 2), jnp.int32), jnp.zeros((2,), jnp.int32)).jaxpr
-    row["reference_scatter_eqns_per_leaf"] = count_jaxpr_primitives(
-        ref, ("scatter",), min_rank=3)["scatter"]
+    # what one eliminated pre-kernel scatter looks like, per K/V leaf: a
+    # rule-less contract — this program is SUPPOSED to carry the scatter,
+    # we only want the census numbers
+    ref = check_program(
+        write_window_paged,
+        (jnp.zeros((9, 4, 2, 8)), jnp.zeros((2, 4, 2, 8)),
+         jnp.zeros((2, 2), jnp.int32), jnp.zeros((2,), jnp.int32)),
+        Contract("REFERENCE_WRITEBACK", []), label="write_window_paged")
+    row["reference_scatter_eqns_per_leaf"] = ref.metrics["pool_scatters"]
     assert row["paged_pool_scatter_eqns"] == 0, row
     assert row["dense_pool_scatter_eqns"] == 0, row
     assert row["paged_pallas_calls"] >= 1, row
@@ -760,7 +758,7 @@ def host_tier(cfg, params, families: int = 4, blocks_per_prefix: int = 4,
     both modes, and re-checks the round-loop HLO gate (zero pool-ranked
     scatter eqns) on the TIERED engine — the tier must stay off the verify
     hot path."""
-    from repro.launch.hlo_analysis import count_jaxpr_primitives
+    from repro.analysis import check_engine_round
 
     bs = 4
     rng = np.random.default_rng(seed)
@@ -810,12 +808,11 @@ def host_tier(cfg, params, families: int = 4, blocks_per_prefix: int = 4,
                 "host_staged_blocks": m["host_staged_blocks"],
                 "h2d_overlap_frac": round(m["h2d_overlap_frac"], 3),
                 "host_bytes_resident": m["host_bytes_resident"]})
-            # hot-path gate: the tier is host-side only — the compiled
-            # round loop keeps zero pool-ranked scatters (§11 invariant)
-            fn = eng._round_loop_fn(4, eng.rounds_per_sync)
-            args = eng._round_args()
-            row["pool_scatter_eqns"] = count_jaxpr_primitives(
-                fn.trace(*args).jaxpr, ("scatter",), min_rank=3)["scatter"]
+            # hot-path gate: the tier is host-side only — the §17 round
+            # contract (incl. zero pool-ranked scatters) still holds
+            rep = check_engine_round(eng)
+            assert rep.ok, rep
+            row["pool_scatter_eqns"] = rep.metrics["pool_scatters"]
         rows.append(row)
     for uid, toks in results["no-tier"].items():
         assert (results["tiered"][uid] == toks).all(), \
@@ -855,7 +852,7 @@ def recovery(cfg, params, seed: int = 53, assert_bar: bool = True):
     import shutil
     import tempfile
 
-    from repro.launch.hlo_analysis import count_jaxpr_primitives
+    from repro.analysis import check_engine_round
 
     kw = dict(batch=1, window_max=4, max_len=64, block_size=4,
               eps_key=jax.random.PRNGKey(11), adaptive=False,
@@ -929,11 +926,10 @@ def recovery(cfg, params, seed: int = 53, assert_bar: bool = True):
                    "journal_appends": m["journal_appends"]}
             if mode == "warm":
                 # hot-path gate on the RESTORED engine: durability stays
-                # host-side, the compiled round loop is scatter-free (§11)
-                fn = e2._round_loop_fn(4, e2.rounds_per_sync)
-                row["pool_scatter_eqns"] = count_jaxpr_primitives(
-                    fn.trace(*e2._round_args()).jaxpr, ("scatter",),
-                    min_rank=3)["scatter"]
+                # host-side, the §17 round contract still holds
+                rep = check_engine_round(e2)
+                assert rep.ok, rep
+                row["pool_scatter_eqns"] = rep.metrics["pool_scatters"]
             rows.append(row)
         finally:
             shutil.rmtree(ddir, ignore_errors=True)

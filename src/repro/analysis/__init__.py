@@ -1,0 +1,45 @@
+"""Static-analysis layer: declarative jaxpr/HLO contracts + host-sync
+linter (DESIGN.md §17).
+
+Public surface::
+
+    from repro import analysis
+    report = analysis.check_program(fn, args, analysis.ROUND_CONTRACT)
+    assert report.ok, report
+    report.metrics["pool_scatters"]     # the numbers gates assert on
+
+    analysis.maybe_check("round", fn, args)   # engine seam, env-gated
+
+    @analysis.hot_path                   # mark for the AST linter
+    def verify_round(...): ...
+"""
+from repro.analysis.contracts import (CONTRACTS, MIGRATION_COPY_CONTRACT,
+                                      PREFILL_CONTRACT, ROUND_CONTRACT,
+                                      STAGED_ROUND_CONTRACT, Contract,
+                                      ContractViolationError, Report,
+                                      check_engine_round, check_program,
+                                      contracts_enabled, maybe_check, require,
+                                      select_contract)
+from repro.analysis.hlo import (EqnSite, count_jaxpr_primitives,
+                                find_collectives, find_dtype_leaks,
+                                find_jaxpr_primitives, parse_collective_bytes,
+                                parse_shape_bytes)
+from repro.analysis.hotpath import hot_path, is_hot_path
+from repro.analysis.rules import (DonationAliasCovers, MaxLiveBytes,
+                                  NoCollectives, NoF64Leaks, NoHostCallbacks,
+                                  NoPoolRankedScatters, Program,
+                                  RecompileHazard, Rule, Violation, census)
+
+__all__ = [
+    "CONTRACTS", "Contract", "ContractViolationError", "Report",
+    "ROUND_CONTRACT", "STAGED_ROUND_CONTRACT", "PREFILL_CONTRACT",
+    "MIGRATION_COPY_CONTRACT", "check_engine_round", "check_program",
+    "contracts_enabled", "maybe_check", "require", "select_contract",
+    "EqnSite", "count_jaxpr_primitives", "find_collectives",
+    "find_dtype_leaks", "find_jaxpr_primitives", "parse_collective_bytes",
+    "parse_shape_bytes",
+    "hot_path", "is_hot_path",
+    "DonationAliasCovers", "MaxLiveBytes", "NoCollectives", "NoF64Leaks",
+    "NoHostCallbacks", "NoPoolRankedScatters", "Program", "RecompileHazard",
+    "Rule", "Violation", "census",
+]

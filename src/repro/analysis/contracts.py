@@ -1,0 +1,263 @@
+"""Named contracts + the check entrypoints (DESIGN.md §17).
+
+A :class:`Contract` is an ordered bundle of rules with a name; the four
+shipped contracts cover the engine's compiled programs:
+
+* ``ROUND_CONTRACT`` — the legacy 9-arg verify-round loop.
+* ``STAGED_ROUND_CONTRACT`` — the §15 19-arg staged round (in-loop slot
+  adoption); same invariants, separate name so violations and the
+  recompile registry attribute to the right program.
+* ``PREFILL_CONTRACT`` — chunked prompt admission. Collectives are
+  allowed (GSPMD may move activations on the admission path) and so are
+  pool-ranked scatters (prefill's whole job is writing pool rows), but
+  host callbacks and f64 leaks are not, and donation must still hold.
+* ``MIGRATION_COPY_CONTRACT`` — block migration copy. The copy *is* a
+  pool write, so no scatter rule; cross-tier copies stay shard-local,
+  callback-free, and donate the pool (arg 0).
+
+``check_program(fn, args, contract)`` runs one program through one
+contract and returns a :class:`Report`. ``maybe_check(kind, fn, args)``
+is the engine seam: no-op unless ``REPRO_CHECK_CONTRACTS=1`` (set by
+tests/conftest.py and the mesh/chaos/recovery CI jobs), checked once per
+(kind, fn) per process, raising :class:`ContractViolationError` with the
+full structured report on failure.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from repro.analysis.rules import (DonationAliasCovers, NoCollectives,
+                                  NoF64Leaks, NoHostCallbacks,
+                                  NoPoolRankedScatters, Program,
+                                  RecompileHazard, Rule, Violation, census)
+
+
+@dataclass
+class Report:
+    """Outcome of checking one program against one contract."""
+    contract: str
+    label: str
+    violations: list = field(default_factory=list)
+    metrics: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def __str__(self):
+        head = (f"contract {self.contract} on `{self.label}`: "
+                f"{'OK' if self.ok else f'{len(self.violations)} violation(s)'}")
+        lines = [head] + [f"  - {v}" for v in self.violations]
+        if self.metrics:
+            lines.append("  metrics: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(self.metrics.items())))
+        return "\n".join(lines)
+
+
+class ContractViolationError(AssertionError):
+    """Raised by ``maybe_check``/``Report.require`` on a failed contract.
+
+    Subclasses AssertionError so pre-existing ``assert``-era harnesses
+    (pytest, the bench runner) treat it as the same class of failure.
+    """
+
+    def __init__(self, report: Report):
+        self.report = report
+        super().__init__(str(report))
+
+
+class Contract:
+    """A named, ordered rule bundle."""
+
+    def __init__(self, name: str, rules: list[Rule]):
+        self.name = name
+        self.rules = list(rules)
+
+    def extend(self, *extra: Rule) -> "Contract":
+        """A derived contract with ``extra`` rules appended (e.g. a
+        workload-specific ``MaxLiveBytes`` budget)."""
+        return Contract(self.name, self.rules + list(extra))
+
+    def rule_names(self) -> list[str]:
+        return [r.name for r in self.rules]
+
+
+def _hot_rules(pool_argnums):
+    return [
+        NoCollectives(),
+        NoPoolRankedScatters(min_rank=3),
+        NoHostCallbacks(),
+        NoF64Leaks(),
+        DonationAliasCovers(pool_argnums),
+        RecompileHazard(max_shapes=8),
+    ]
+
+
+ROUND_CONTRACT = Contract("ROUND_CONTRACT", _hot_rules(pool_argnums=(1,)))
+STAGED_ROUND_CONTRACT = Contract("STAGED_ROUND_CONTRACT",
+                                 _hot_rules(pool_argnums=(1,)))
+PREFILL_CONTRACT = Contract("PREFILL_CONTRACT", [
+    NoHostCallbacks(),
+    NoF64Leaks(),
+    DonationAliasCovers(pool_argnums=(1,)),
+    RecompileHazard(max_shapes=16),    # one variant per pow2 chunk size
+])
+MIGRATION_COPY_CONTRACT = Contract("MIGRATION_COPY_CONTRACT", [
+    NoHostCallbacks(),
+    NoF64Leaks(),
+    DonationAliasCovers(pool_argnums=(0,)),
+    RecompileHazard(max_shapes=8),
+])
+
+CONTRACTS = {c.name: c for c in (ROUND_CONTRACT, STAGED_ROUND_CONTRACT,
+                                 PREFILL_CONTRACT, MIGRATION_COPY_CONTRACT)}
+
+
+def _strip_rules(contract: Contract, names) -> Contract:
+    names = set(names)
+    return Contract(contract.name,
+                    [r for r in contract.rules if r.name not in names])
+
+
+# Rules that do not apply to tensor-parallel round programs: the model
+# axis is left to GSPMD (ServingTopology.auto_axes), whose lowering
+# all-reduces partial products every layer BY DESIGN, and whose compiled
+# program does not preserve the manual pool-donation aliasing. The
+# zero-collective / donation invariants are a property of the *data*
+# axis only (PR 3), which the non-TP mesh tests pin.
+_TP_EXEMPT_RULES = ("NoCollectives", "DonationAliasCovers")
+
+
+def select_contract(kind: str, *, donate: bool = True,
+                    tensor_parallel: bool = False,
+                    pool_scatter_shapes=None) -> Contract:
+    """The contract actually enforced for an engine program variant.
+
+    ``kind`` names a registered contract ("round" / "staged_round" /
+    "prefill" / "migration_copy"). ``donate=False`` drops
+    DonationAliasCovers (undonated pools establish no aliasing);
+    ``tensor_parallel=True`` additionally drops the data-axis-only rules
+    in :data:`_TP_EXEMPT_RULES` — model-axis collectives are the TP
+    contraction itself, not a hot-path regression.
+    ``pool_scatter_shapes`` (the engine's exact KV-pool leaf shapes,
+    global and per-shard) narrows NoPoolRankedScatters from the rank
+    proxy to real pool writes, so MoE dispatch buffers and recurrent
+    state rows — high-rank scatters other archs run per round by
+    design — pass while a dense pool writeback is still caught.
+    """
+    contract = CONTRACTS[_KIND_TO_CONTRACT[kind]]
+    strip = set()
+    if not donate:
+        strip.add("DonationAliasCovers")
+    if tensor_parallel:
+        strip.update(_TP_EXEMPT_RULES)
+    if strip:
+        contract = _strip_rules(contract, strip)
+    if pool_scatter_shapes is not None:
+        contract = Contract(contract.name, [
+            NoPoolRankedScatters(min_rank=r.min_rank,
+                                 pool_shapes=pool_scatter_shapes)
+            if r.name == "NoPoolRankedScatters" else r
+            for r in contract.rules])
+    return contract
+
+
+def check_program(fn, args, contract: Contract, label: str = None,
+                  *, jaxpr=None, hlo_text=None) -> Report:
+    """Check one program against ``contract``; returns a :class:`Report`
+    with structured violations and the census metrics (pool_scatters,
+    pallas_calls, host_callbacks, collectives). ``fn`` may be any
+    callable (jit-wrapped automatically) — or pass ``jaxpr``/``hlo_text``
+    directly for pre-traced fixtures."""
+    program = Program(fn, args, jaxpr=jaxpr, hlo_text=hlo_text,
+                      label=label or "")
+    report = Report(contract=contract.name, label=program.label)
+    for rule in contract.rules:
+        report.violations.extend(rule.check(program))
+    try:
+        report.metrics.update(census(program))
+    except ValueError:
+        pass                              # HLO-text-only fixture: no jaxpr
+    if program._hlo is not None:
+        from repro.analysis.hlo import parse_collective_bytes
+        report.metrics["collectives"] = {
+            k: v["count"] for k, v in
+            parse_collective_bytes(program.hlo_text).items()}
+    return report
+
+
+def require(report: Report) -> Report:
+    """Raise :class:`ContractViolationError` unless ``report.ok``."""
+    if not report.ok:
+        raise ContractViolationError(report)
+    return report
+
+
+def contracts_enabled() -> bool:
+    return os.environ.get("REPRO_CHECK_CONTRACTS", "0") == "1"
+
+
+# (kind, id(fn)) pairs already checked this process: contracts are a
+# per-program property, so one check per compiled variant is enough.
+_CHECKED: set = set()
+
+
+def maybe_check(kind: str, fn, args, *, label: str = None,
+                donate: bool = True, tensor_parallel: bool = False,
+                pool_scatter_shapes=None) -> None:
+    """Engine seam: contract-check ``fn`` once per process when
+    ``REPRO_CHECK_CONTRACTS=1``. ``kind`` names a registered contract
+    ("round" / "staged_round" / "prefill" / "migration_copy").
+
+    ``donate=False`` (engines built without donation, e.g. the memory
+    A/B benchmark) drops the DonationAliasCovers rule — undonated pools
+    legitimately establish no aliasing; ``tensor_parallel`` /
+    ``pool_scatter_shapes`` are the :func:`select_contract`
+    refinements for model-parallel engines and pool-shape-targeted
+    scatter checking. Raises
+    :class:`ContractViolationError` on violation so a broken program
+    fails loudly at first trace, not as a perf mystery later.
+    """
+    if not contracts_enabled():
+        return
+    key = (kind, id(fn))
+    if key in _CHECKED:
+        return
+    _CHECKED.add(key)
+    contract = select_contract(kind, donate=donate,
+                               tensor_parallel=tensor_parallel,
+                               pool_scatter_shapes=pool_scatter_shapes)
+    require(check_program(fn, args, contract, label=label or kind))
+
+
+def check_engine_round(eng, *, extra_rules=()) -> Report:
+    """Contract-check an engine's CURRENT round program (the exact fn +
+    args its next ``step()`` dispatches) and return the Report — the one
+    gate block tests and benches share. ``Report.metrics`` carries the
+    numbers the old inline gates computed by hand (per-op collective
+    counts, pool_scatters, pallas_calls) plus ``n_args`` (9 legacy /
+    19 staged §15 ABI). Duck-typed on the engine so the analysis layer
+    never imports serving."""
+    fn = eng._round_loop_fn(eng.controller.window, eng.rounds_per_sync)
+    args = eng._round_args()
+    staged = getattr(eng, "staging_slots", 0) > 0
+    kind = "staged_round" if staged else "round"
+    exemptions = getattr(eng, "_contract_exemptions", None)
+    exemptions = exemptions() if callable(exemptions) else {}
+    contract = select_contract(kind, donate=getattr(eng, "donate", True),
+                               **exemptions)
+    if extra_rules:
+        contract = contract.extend(*extra_rules)
+    report = check_program(fn, args, contract,
+                           label=f"{kind}@{hex(id(eng))}")
+    report.metrics["n_args"] = len(args)
+    return report
+
+
+_KIND_TO_CONTRACT = {
+    "round": "ROUND_CONTRACT",
+    "staged_round": "STAGED_ROUND_CONTRACT",
+    "prefill": "PREFILL_CONTRACT",
+    "migration_copy": "MIGRATION_COPY_CONTRACT",
+}

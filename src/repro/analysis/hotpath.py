@@ -1,0 +1,26 @@
+"""The ``@hot_path`` marker (DESIGN.md §17).
+
+A zero-cost decorator naming the functions that run inside (or are traced
+into) a compiled serving hot path — the verify-round loop and everything
+it inlines. The marker carries no runtime behaviour; it exists so the
+AST linter (:mod:`repro.analysis.lint`) knows where device->host syncs
+(``np.asarray`` / ``.item()`` / ``float()`` / ``bool()`` on traced
+values) are forbidden, without the linter having to solve whole-program
+reachability: decorate the roots, and the linter closes over same-module
+callees and functions nested under ``_round_loop_fn`` /
+``_build_staged_round`` by itself.
+
+Kept import-light on purpose (no jax): core modules decorate their round
+functions without pulling the analysis engine into their import graph.
+"""
+from __future__ import annotations
+
+
+def hot_path(fn):
+    """Mark ``fn`` as serving-hot-path code for the static linter."""
+    fn.__repro_hot_path__ = True
+    return fn
+
+
+def is_hot_path(fn) -> bool:
+    return bool(getattr(fn, "__repro_hot_path__", False))

@@ -1,0 +1,336 @@
+"""Declarative invariant rules over traced jaxprs and post-SPMD HLO
+(DESIGN.md §17).
+
+Each rule is a small object with a ``name`` and a ``check(program) ->
+list[Violation]`` method; :class:`~repro.analysis.contracts.Contract`
+bundles rules and :func:`~repro.analysis.contracts.check_program` runs
+them against one compiled program, returning a structured ``Report``
+instead of a bare assert. A :class:`Program` lazily exposes the three
+views rules read — the traced jaxpr, the compiled post-SPMD HLO text,
+and XLA's memory analysis — so a jaxpr-only contract never pays a
+compile and an HLO rule compiles exactly once.
+
+The rule catalog encodes the invariants predictive sampling's speedup
+lives or dies by (PRs 2-9 asserted them ad hoc; this is the one place
+they are written down):
+
+* ``NoCollectives`` — the verify-round hot path is shard-local by
+  construction; any collective (sync OR async-``start`` lowering) means
+  a placement bug that scales round latency with the mesh.
+* ``NoPoolRankedScatters`` — every physical-pool write happens inside a
+  pallas_call as an input/output-aliased epilogue (DESIGN.md §11); a
+  pool-ranked scatter eqn is the dense round-trip sneaking back.
+* ``DonationAliasCovers`` — the donated pool must actually alias in
+  place (XLA established >= pool-size input/output aliasing), or every
+  round holds two live copies of the cache.
+* ``NoHostCallbacks`` — io_callback / pure_callback / debug prints in a
+  round program serialize the device stream on the host.
+* ``NoF64Leaks`` — a stray f64 (x64 leak) doubles hot-path bandwidth
+  and breaks the bf16/f32 exactness story.
+* ``MaxLiveBytes`` — bound on live bytes (args + outputs + temps -
+  aliasing) of the compiled program.
+* ``RecompileHazard`` — the same program traced at more than N distinct
+  static shapes per process is a recompile storm (the W-grid and
+  prefill-chunk pow2 bounds exist precisely to prevent this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.analysis.hlo import (count_jaxpr_primitives, find_collectives,
+                                find_dtype_leaks, find_jaxpr_primitives)
+
+HOST_CALLBACK_PRIMITIVES = ("io_callback", "pure_callback",
+                            "debug_callback", "callback")
+
+
+@dataclass
+class Violation:
+    """One structured contract violation: which rule, where (eqn path or
+    HLO line), and the numeric evidence (rank / bytes / counts)."""
+    rule: str
+    summary: str
+    site: str = ""                 # eqn path or "HLO line N"
+    evidence: dict = field(default_factory=dict)
+
+    def __str__(self):
+        loc = f" [{self.site}]" if self.site else ""
+        ev = (" " + ", ".join(f"{k}={v}" for k, v in self.evidence.items())
+              if self.evidence else "")
+        return f"{self.rule}: {self.summary}{loc}{ev}"
+
+
+class Program:
+    """Lazy views of one traced/compiled program for rules to read.
+
+    Built from a jit-wrapped callable plus example args (the normal
+    path), or directly from a jaxpr and/or HLO text (unit fixtures, and
+    the synthetic async-HLO regression tests). ``label`` keys the
+    per-process trace registry :class:`RecompileHazard` reads.
+    """
+
+    def __init__(self, fn=None, args=None, *, jaxpr=None, hlo_text=None,
+                 label: str = ""):
+        if fn is not None and not hasattr(fn, "trace"):
+            import jax
+            fn = jax.jit(fn)
+        self.fn = fn
+        self.args = args
+        self.label = label or (getattr(fn, "__name__", "") or "<program>")
+        self._jaxpr = jaxpr
+        self._hlo = hlo_text
+        self._compiled = False
+        self._mem = None
+
+    # -- views ---------------------------------------------------------
+    @property
+    def jaxpr(self):
+        if self._jaxpr is None:
+            if self.fn is None:
+                raise ValueError(
+                    f"{self.label}: rule needs a jaxpr but the Program was "
+                    "built from HLO text only")
+            self._jaxpr = self.fn.trace(*self.args).jaxpr
+        return self._jaxpr
+
+    def _compile(self):
+        if not self._compiled:
+            if self.fn is None:
+                raise ValueError(
+                    f"{self.label}: rule needs compiled HLO but the Program "
+                    "was built from a jaxpr only")
+            compiled = self.fn.lower(*self.args).compile()
+            if self._hlo is None:
+                self._hlo = compiled.as_text()
+            try:
+                self._mem = compiled.memory_analysis()
+            except Exception:          # backend without memory analysis
+                self._mem = None
+            self._compiled = True
+
+    @property
+    def hlo_text(self) -> str:
+        if self._hlo is None:
+            self._compile()
+        return self._hlo
+
+    @property
+    def memory(self):
+        """XLA memory analysis of the compiled program (or None)."""
+        if not self._compiled and self._mem is None and self._hlo is None:
+            self._compile()
+        elif self.fn is not None and not self._compiled:
+            self._compile()
+        return self._mem
+
+    def arg_bytes(self, argnums) -> int:
+        """PER-DEVICE byte size of the (flattened) positional args
+        ``argnums`` — e.g. the physical pool pytree a donation must
+        cover. Per-device because XLA's ``memory_analysis`` (what
+        DonationAliasCovers compares against) reports one device's
+        program: a data-sharded pool contributes one shard's bytes, a
+        replicated arg its full size."""
+        import jax
+
+        total = 0
+        for i in argnums:
+            for leaf in jax.tree_util.tree_leaves(self.args[i]):
+                shards = getattr(leaf, "addressable_shards", None)
+                if shards:
+                    nbytes = shards[0].data.nbytes
+                else:
+                    nbytes = getattr(leaf, "nbytes", None)
+                    if nbytes is None:
+                        import numpy as np
+                        nbytes = np.asarray(leaf).nbytes
+                total += int(nbytes)
+        return total
+
+
+class Rule:
+    """Base: subclasses set ``name`` and implement ``check``."""
+    name = "rule"
+
+    def check(self, program: Program) -> list[Violation]:
+        raise NotImplementedError
+
+
+class NoCollectives(Rule):
+    """Zero collective ops in the compiled (post-SPMD) HLO — counting
+    the async ``-start`` lowered forms too (the PR 10 regression fix:
+    async-lowered HLO used to slip past the gate)."""
+    name = "NoCollectives"
+
+    def check(self, program):
+        return [Violation(
+            self.name, f"collective `{rec['op']}` on the hot path",
+            site=f"HLO line {rec['line_no']}: {rec['line'][:120]}",
+            evidence={"bytes": rec["bytes"], "op": rec["op"]})
+            for rec in find_collectives(program.hlo_text)]
+
+
+class NoPoolRankedScatters(Rule):
+    """Zero scatter eqns of rank >= ``min_rank`` in the jaxpr
+    (recursive). Rank 3 is pool-shaped: the standalone window writeback
+    the fused pallas epilogue eliminated (DESIGN.md §11); rank <= 2
+    row-bookkeeping updates (adoption stats, descriptor outputs) pass.
+
+    ``pool_shapes`` (optional) narrows the rule from a rank proxy to the
+    real invariant — only scatters whose OUTPUT SHAPE matches one of the
+    given KV-pool leaf shapes count as pool writes. The engine passes
+    its exact pool leaf shapes (global and per-data-shard), so the
+    legitimate high-rank scatters other archs run per round — MoE
+    expert-dispatch buffers, ssm/rwkv per-slot recurrent-state rows —
+    pass, while a dense writeback into the pool is still caught.
+    ``pool_shapes=None`` keeps the plain rank filter (fixtures, and
+    callers with no pool pytree in hand).
+    """
+    name = "NoPoolRankedScatters"
+
+    def __init__(self, min_rank: int = 3, pool_shapes=None):
+        self.min_rank = min_rank
+        self.pool_shapes = (None if pool_shapes is None else
+                            frozenset(tuple(s) for s in pool_shapes))
+
+    def check(self, program):
+        return [Violation(
+            self.name,
+            f"pool-ranked `{s.primitive}` (rank {s.rank} >= "
+            f"{self.min_rank}) outside a pallas epilogue",
+            site=s.path or "<top>",
+            evidence={"rank": s.rank, "shape": list(s.shape),
+                      "eqn": s.eqn})
+            for s in find_jaxpr_primitives(
+                program.jaxpr, ("scatter", "scatter-add"), self.min_rank)
+            if self.pool_shapes is None or s.shape in self.pool_shapes]
+
+
+class DonationAliasCovers(Rule):
+    """The compiled program's input/output aliasing must cover at least
+    the byte size of the args in ``pool_argnums`` (the donated physical
+    pool): donation that XLA silently declined means two live pool
+    copies per round. Skipped (no violation) when the backend exposes no
+    memory analysis."""
+    name = "DonationAliasCovers"
+
+    def __init__(self, pool_argnums=(1,)):
+        self.pool_argnums = tuple(pool_argnums)
+
+    def check(self, program):
+        mem = program.memory
+        if mem is None or program.args is None:
+            return []
+        pool_bytes = program.arg_bytes(self.pool_argnums)
+        alias = int(getattr(mem, "alias_size_in_bytes", 0))
+        if alias >= pool_bytes:
+            return []
+        return [Violation(
+            self.name,
+            f"aliased {alias} bytes < {pool_bytes}-byte pool "
+            f"(args {list(self.pool_argnums)}): donation not established",
+            evidence={"alias_bytes": alias, "pool_bytes": pool_bytes,
+                      "pool_argnums": list(self.pool_argnums)})]
+
+
+class NoHostCallbacks(Rule):
+    """Zero host callback eqns (io_callback / pure_callback /
+    debug_callback, incl. jax.debug.print) anywhere in the jaxpr."""
+    name = "NoHostCallbacks"
+
+    def check(self, program):
+        return [Violation(
+            self.name, f"host callback `{s.primitive}` on the hot path",
+            site=s.path or "<top>", evidence={"eqn": s.eqn})
+            for s in find_jaxpr_primitives(
+                program.jaxpr, HOST_CALLBACK_PRIMITIVES)]
+
+
+class NoF64Leaks(Rule):
+    """Zero float64/complex128-producing eqns in the jaxpr."""
+    name = "NoF64Leaks"
+
+    def check(self, program):
+        return [Violation(
+            self.name, f"`{s.primitive}` produces a 64-bit float output",
+            site=s.path or "<top>",
+            evidence={"rank": s.rank, "eqn": s.eqn})
+            for s in find_dtype_leaks(program.jaxpr)]
+
+
+class MaxLiveBytes(Rule):
+    """Live bytes of the compiled program (arguments + outputs + temps -
+    established aliasing) must not exceed ``budget`` bytes. Workload-
+    parameterized, so the named contracts don't carry it by default —
+    extend a contract with it where a budget is known
+    (``ROUND_CONTRACT.extend(MaxLiveBytes(b))``)."""
+    name = "MaxLiveBytes"
+
+    def __init__(self, budget: int):
+        self.budget = int(budget)
+
+    def check(self, program):
+        mem = program.memory
+        if mem is None:
+            return []
+        live = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        if live <= self.budget:
+            return []
+        return [Violation(
+            self.name, f"live {live} bytes > budget {self.budget}",
+            evidence={"live_bytes": live, "budget": self.budget})]
+
+
+class RecompileHazard(Rule):
+    """The same program label traced at more than ``max_shapes`` distinct
+    static arg-shape signatures in this process. The engine's W grid and
+    pow2 prefill chunks exist to bound compiled variants; a caller that
+    re-traces per request (ragged shapes reaching jit) trips this."""
+    name = "RecompileHazard"
+
+    # label -> set of shape signatures, process-global by design
+    _registry: dict = {}
+
+    def __init__(self, max_shapes: int = 8):
+        self.max_shapes = int(max_shapes)
+
+    @staticmethod
+    def signature(args) -> tuple:
+        import jax
+
+        def one(leaf):
+            shape = getattr(leaf, "shape", ())
+            dtype = str(getattr(leaf, "dtype", type(leaf).__name__))
+            return (tuple(shape), dtype)
+        return tuple(one(leaf) for leaf in jax.tree_util.tree_leaves(args))
+
+    def check(self, program):
+        if program.args is None:
+            return []
+        seen = self._registry.setdefault(program.label, set())
+        seen.add(self.signature(program.args))
+        if len(seen) <= self.max_shapes:
+            return []
+        return [Violation(
+            self.name,
+            f"`{program.label}` traced at {len(seen)} distinct static "
+            f"shapes (> {self.max_shapes}) this process",
+            evidence={"distinct_shapes": len(seen),
+                      "max_shapes": self.max_shapes})]
+
+
+def census(program: Program) -> dict:
+    """The summary numbers every gate used to compute by hand, attached
+    to each Report: pool-ranked scatters, pallas calls, host callbacks,
+    per-op collective counts (async forms folded in)."""
+    jx = program.jaxpr
+    counts = count_jaxpr_primitives(
+        jx, ("pallas_call",) + HOST_CALLBACK_PRIMITIVES)
+    scatters = count_jaxpr_primitives(
+        jx, ("scatter", "scatter-add"), min_rank=3)
+    return {
+        "pool_scatters": sum(scatters.values()),
+        "pallas_calls": counts["pallas_call"],
+        "host_callbacks": sum(counts[p] for p in HOST_CALLBACK_PRIMITIVES),
+    }

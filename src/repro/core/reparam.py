@@ -29,12 +29,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hotpath import hot_path
+
 
 def gumbel(key, shape, dtype=jnp.float32):
     """Standard Gumbel(0, 1) noise."""
     return jax.random.gumbel(key, shape, dtype=dtype)
 
 
+@hot_path
 def reparam_argmax(logits, eps):
     """Deterministic sample ``g(mu, eps) = argmax_c(mu_c + eps_c)``.
 

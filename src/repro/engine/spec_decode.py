@@ -32,6 +32,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hotpath import hot_path
 from repro.core.reparam import reparam_argmax
 from repro.models.transformer import PagedView, TransformerLM
 
@@ -154,6 +155,7 @@ class PredictiveSampler:
 # serving engine, which feeds it block-table cache views and variable W)
 # ---------------------------------------------------------------------------
 
+@hot_path
 def verify_round(params, cfg, eps_fn, state: GenState, target_len,
                  use_forecast_heads: bool = False,
                  use_verify_kernel: bool = False,

@@ -46,7 +46,7 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 DECODE_WINDOW = 8
 
-from repro.launch.hlo_analysis import parse_collective_bytes
+from repro.analysis import parse_collective_bytes
 
 
 def abstract_params(cfg):

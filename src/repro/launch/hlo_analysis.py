@@ -1,90 +1,14 @@
-"""Post-SPMD HLO analysis helpers (no jax side effects on import)."""
-from __future__ import annotations
+"""Back-compat shim: the HLO/jaxpr parsing helpers moved to
+``repro.analysis.hlo`` (DESIGN.md §17), where they serve as the
+measurement backend of the contract engine — and where
+``parse_collective_bytes`` gained the async (``-start``) collective
+forms the old sync-only parser missed. Import from ``repro.analysis``
+in new code; this module re-exports the old names unchanged for
+external callers."""
+from repro.analysis.hlo import (count_jaxpr_primitives, find_collectives,
+                                find_jaxpr_primitives, parse_collective_bytes,
+                                parse_shape_bytes)
 
-import re
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def parse_collective_bytes(hlo_text: str):
-    """Sum result-shape bytes of every collective op in (post-SPMD) HLO."""
-    totals = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        for coll in _COLLECTIVES:
-            marker = f" {coll}("
-            if marker not in stripped:
-                continue
-            # result type(s) appear between '=' and the op name
-            lhs = stripped.split(marker)[0]
-            if "=" not in lhs:
-                continue
-            type_part = lhs.split("=", 1)[1]
-            nbytes = 0
-            for dt, dims in _SHAPE_RE.findall(type_part):
-                if dt not in _DTYPE_BYTES:
-                    continue
-                n = 1
-                for d in dims.split(","):
-                    if d:
-                        n *= int(d)
-                nbytes += n * _DTYPE_BYTES[dt]
-            totals[coll]["bytes"] += nbytes
-            totals[coll]["count"] += 1
-            break
-    return totals
-
-
-
-
-def count_jaxpr_primitives(closed_jaxpr, names, min_rank: int = 0):
-    """Count primitive occurrences (by name) in a ClosedJaxpr, recursing
-    into sub-jaxprs (scan/while/pjit/pallas bodies). ``min_rank`` filters to
-    equations whose first output has at least that many dims — e.g.
-    ``count_jaxpr_primitives(jaxpr, ("scatter",), min_rank=3)`` counts
-    pool-shaped scatters (the standalone window-writeback the fused kernel
-    epilogue eliminates) while ignoring small per-row bookkeeping updates.
-
-    The fused-round acceptance gate (DESIGN.md §11): a verify round's jaxpr
-    must contain ZERO pool-ranked scatter eqns — every physical-pool write
-    happens inside a pallas_call as an aliased epilogue."""
-    counts = {n: 0 for n in names}
-
-    def visit(jaxpr):
-        for eqn in jaxpr.eqns:
-            prim = eqn.primitive.name
-            if prim in counts:
-                outs = eqn.outvars
-                rank = max((len(getattr(v.aval, "shape", ()))
-                            for v in outs), default=0)
-                if rank >= min_rank:
-                    counts[prim] += 1
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    visit(sub)
-    _visit_closed(closed_jaxpr, visit)
-    return counts
-
-
-def _sub_jaxprs(value):
-    """Yield any jaxprs nested inside an eqn param value."""
-    import jax.extend.core as jex_core  # deferred: no import side effects
-
-    vals = value if isinstance(value, (list, tuple)) else [value]
-    for v in vals:
-        if isinstance(v, jex_core.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, jex_core.Jaxpr):
-            yield v
-
-
-def _visit_closed(closed_jaxpr, visit):
-    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
-    visit(jaxpr)
+__all__ = ["count_jaxpr_primitives", "find_collectives",
+           "find_jaxpr_primitives", "parse_collective_bytes",
+           "parse_shape_bytes"]

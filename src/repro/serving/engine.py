@@ -104,6 +104,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import maybe_check
 from repro.engine.spec_decode import GenState, make_eps_fn, verify_round
 from repro.kernels import resolve_interpret
 from repro.models.transformer import PagedView, TransformerLM
@@ -777,6 +778,50 @@ class ServingEngine:
         # uploads (10..17) are rebuilt per dispatch but tiny — not donated
         donate = tuple(range(1, 10)) if self.donate else ()
         return jax.jit(wrapped, donate_argnums=donate)
+
+    def _contract_check(self, kind: str, fn, args) -> None:
+        """§17 contract seam: under ``REPRO_CHECK_CONTRACTS=1`` every
+        compiled program is checked against its named contract once at
+        first dispatch (zero collectives / pool-ranked scatters / host
+        callbacks / f64, donation aliasing, recompile hazard). The label
+        is per-engine so the recompile registry never mixes instances;
+        ``donate=False`` engines skip the aliasing rule."""
+        maybe_check(kind, fn, args, label=f"{kind}@{hex(id(self))}",
+                    donate=self.donate, **self._contract_exemptions())
+
+    def _contract_exemptions(self) -> dict:
+        """Arch/topology refinements of the §17 contracts for THIS engine
+        (consumed by ``maybe_check``/``check_engine_round``):
+
+        * ``tensor_parallel`` — a model axis left to GSPMD all-reduces
+          partial products every layer by design and does not preserve
+          the manual pool-donation aliasing, so the data-axis-only rules
+          (NoCollectives, DonationAliasCovers) don't apply.
+        * ``pool_scatter_shapes`` — the exact KV-pool leaf shapes
+          (global, plus per-data-shard on the block axis), narrowing
+          NoPoolRankedScatters from the rank-3 proxy to real pool
+          writes: MoE expert-dispatch buffers and recurrent per-slot
+          state rows are high-rank scatters the round runs by design,
+          while any scatter shaped like the pool itself is the dense
+          writeback regression the fused epilogue eliminated.
+        """
+        shapes = set()
+        d = self.topo.data_size
+
+        def pool(stacked, leaf):
+            s = tuple(leaf.shape)
+            shapes.add(s)
+            ax = 1 if stacked else 0     # block axis (data-sharded)
+            if d > 1 and s[ax] % d == 0:
+                per_shard = list(s)
+                per_shard[ax] //= d
+                shapes.add(tuple(per_shard))
+            return leaf
+
+        TransformerLM._map_paged(self.cfg, (self.paged,), pool,
+                                 lambda st, leaf: leaf)
+        return {"tensor_parallel": bool(self.topo.auto_axes),
+                "pool_scatter_shapes": frozenset(shapes)}
 
     def _round_args(self) -> tuple:
         """Positional args of the jitted round loop, in ABI order — the one
@@ -1479,9 +1524,11 @@ class ServingEngine:
         row = jnp.asarray([b], jnp.int32)
         for C in prefill_chunks(n - 1 - start, self.prefill_chunk):
             chunk = jnp.asarray(toks[None, start:start + C], jnp.int32)
-            self.paged = self._prefill_fn(C)(
-                self.params, self.paged, table_row, row, chunk,
-                jnp.asarray([start], jnp.int32))
+            pf = self._prefill_fn(C)
+            pf_args = (self.params, self.paged, table_row, row, chunk,
+                       jnp.asarray([start], jnp.int32))
+            self._contract_check("prefill", pf, pf_args)
+            self.paged = pf(*pf_args)
             start += C
             req.prefill_calls += 1
             self.metrics.prefill_calls += 1
@@ -1551,9 +1598,12 @@ class ServingEngine:
             dst_ids[:n_owned] = (np.asarray(new_owned, np.int32)
                                  + self._table_offset(b_dst))
             self.metrics.blocks_migrated += n_owned
-        self.paged = self._copy_blocks_fn()(
-            self.paged, jnp.asarray(src_ids), jnp.asarray(dst_ids),
-            jnp.asarray(b_src, jnp.int32), jnp.asarray(b_dst, jnp.int32))
+        copy_fn = self._copy_blocks_fn()
+        copy_args = (self.paged, jnp.asarray(src_ids), jnp.asarray(dst_ids),
+                     jnp.asarray(b_src, jnp.int32),
+                     jnp.asarray(b_dst, jnp.int32))
+        self._contract_check("migration_copy", copy_fn, copy_args)
+        self.paged = copy_fn(*copy_args)
         if s != t:
             self.pool.finish_migration(s, self.owned[b_src])
             if self._kv_share:
@@ -2110,9 +2160,11 @@ class ServingEngine:
         for end in seg_ends:
             for C in prefill_chunks(end - start, self.prefill_chunk):
                 chunk = jnp.asarray(prompt[None, start:start + C], jnp.int32)
-                self.paged = self._prefill_fn(C)(
-                    self.params, self.paged, table_row, row, chunk,
-                    jnp.asarray([start], jnp.int32))
+                pf = self._prefill_fn(C)
+                pf_args = (self.params, self.paged, table_row, row, chunk,
+                           jnp.asarray([start], jnp.int32))
+                self._contract_check("prefill", pf, pf_args)
+                self.paged = pf(*pf_args)
                 start += C
                 req.prefill_calls += 1
                 self.metrics.prefill_calls += 1
@@ -2366,9 +2418,14 @@ class ServingEngine:
         if not any(s is not None for s in self.slots):
             return bool(self.queue) or self._staged_total() > 0
         adopt = otok_dev = None
+        round_fn = self._round_loop_fn(W, k)
+        round_args = self._round_args()
+        self._contract_check(
+            "round" if self.staging_slots == 0 else "staged_round",
+            round_fn, round_args)
         if self.staging_slots == 0:
             (self.paged, self.tokens, self.n, self.cand, stats_dev) = \
-                self._round_loop_fn(W, k)(*self._round_args())
+                round_fn(*round_args)
         else:
             # staged ABI: row state comes BACK as outputs (adoption mutates
             # tables/seq/target/poison/plen in-loop) and becomes the new
@@ -2377,7 +2434,7 @@ class ServingEngine:
             (self.paged, self._tables_dev, self.tokens, self.n, self.cand,
              self._seq_dev, self._target_dev, self._poison_dev,
              self._plen_dev, stats_dev, adopt_dev, otok_dev) = \
-                self._round_loop_fn(W, k)(*self._round_args())
+                round_fn(*round_args)
             adopt = np.asarray(adopt_dev)
             self.metrics.staging_occupancy_hist.append(
                 staged_now / (self.topo.data_size * self.staging_slots))

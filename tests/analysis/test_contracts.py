@@ -1,0 +1,237 @@
+"""The four named contracts against the REAL engine programs
+(DESIGN.md §17): round / staged-round / prefill / migration-copy, on a
+single device inline and on a data=2 mesh in a subprocess — plus the
+env-gated ``maybe_check`` engine seam."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (CONTRACTS, MIGRATION_COPY_CONTRACT,
+                            PREFILL_CONTRACT, check_engine_round,
+                            check_program, contracts_enabled, maybe_check)
+from repro.analysis import contracts as contracts_mod
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.serving import Request, ServingEngine
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    base = dict(batch=2, window_max=4, max_len=32, block_size=4,
+                eps_key=jax.random.PRNGKey(3), adaptive=False)
+    base.update(kw)
+    return ServingEngine(cfg, params, **base)
+
+
+def test_contract_registry_names():
+    assert set(CONTRACTS) == {"ROUND_CONTRACT", "STAGED_ROUND_CONTRACT",
+                              "PREFILL_CONTRACT", "MIGRATION_COPY_CONTRACT"}
+    for c in CONTRACTS.values():
+        assert "NoHostCallbacks" in c.rule_names()
+        assert "NoF64Leaks" in c.rule_names()
+    # hot-path-only rules stay off the admission/migration programs
+    assert "NoCollectives" not in CONTRACTS["PREFILL_CONTRACT"].rule_names()
+    assert "NoPoolRankedScatters" not in \
+        CONTRACTS["MIGRATION_COPY_CONTRACT"].rule_names()
+
+
+def test_round_contract_passes_on_real_round(cfg_params):
+    cfg, params = cfg_params
+    rep = check_engine_round(_engine(cfg, params))
+    assert rep.ok, rep
+    assert rep.contract == "ROUND_CONTRACT"
+    assert rep.metrics["n_args"] == 9
+    assert rep.metrics["pallas_calls"] >= 1
+    assert rep.metrics["pool_scatters"] == 0
+    assert all(c == 0 for c in rep.metrics["collectives"].values())
+
+
+def test_staged_round_contract_passes_on_real_staged_round(cfg_params):
+    cfg, params = cfg_params
+    eng = _engine(cfg, params, staging_slots=2, adaptive_rounds=False,
+                  rounds_per_sync=4)
+    rep = check_engine_round(eng)
+    assert rep.ok, rep
+    assert rep.contract == "STAGED_ROUND_CONTRACT"
+    assert rep.metrics["n_args"] == 19       # the §15 ABI
+    assert rep.metrics["pool_scatters"] == 0
+
+
+def test_prefill_contract_passes_on_real_prefill(cfg_params):
+    cfg, params = cfg_params
+    eng = _engine(cfg, params)
+    C = 4
+    fn = eng._prefill_fn(C)
+    args = (eng.params, eng.paged,
+            jnp.asarray(eng.tables[0:1] + eng._table_offset(0)),
+            jnp.asarray([0], jnp.int32), jnp.zeros((1, C), jnp.int32),
+            jnp.asarray([0], jnp.int32))
+    rep = check_program(fn, args, PREFILL_CONTRACT, label="prefill-ut")
+    assert rep.ok, rep
+    assert rep.metrics["host_callbacks"] == 0
+
+
+def test_migration_copy_contract_passes_on_real_copy(cfg_params):
+    cfg, params = cfg_params
+    eng = _engine(cfg, params)
+    fn = eng._copy_blocks_fn()
+    args = (eng.paged, jnp.zeros(eng.nb, jnp.int32),
+            jnp.zeros(eng.nb, jnp.int32), jnp.asarray(0, jnp.int32),
+            jnp.asarray(1, jnp.int32))
+    rep = check_program(fn, args, MIGRATION_COPY_CONTRACT, label="copy-ut")
+    assert rep.ok, rep
+
+
+def test_undonated_engine_skips_donation_rule(cfg_params):
+    cfg, params = cfg_params
+    rep = check_engine_round(_engine(cfg, params, donate=False))
+    assert rep.ok, rep                  # no false DonationAliasCovers hit
+
+
+def test_maybe_check_env_gate_and_dedup(cfg_params, monkeypatch):
+    cfg, params = cfg_params
+    eng = _engine(cfg, params)
+    fn = eng._round_loop_fn(eng.controller.window, eng.rounds_per_sync)
+    args = eng._round_args()
+    monkeypatch.setenv("REPRO_CHECK_CONTRACTS", "0")
+    assert not contracts_enabled()
+    before = len(contracts_mod._CHECKED)
+    maybe_check("round", fn, args)                     # gated off: no-op
+    assert len(contracts_mod._CHECKED) == before
+    monkeypatch.setenv("REPRO_CHECK_CONTRACTS", "1")
+    maybe_check("round", fn, args, label="seam-ut")    # checks + records
+    assert len(contracts_mod._CHECKED) == before + 1
+    maybe_check("round", fn, args, label="seam-ut")    # dedup: no growth
+    assert len(contracts_mod._CHECKED) == before + 1
+
+
+def test_engine_serves_with_contracts_on(cfg_params, monkeypatch):
+    """End-to-end seam: with REPRO_CHECK_CONTRACTS=1 a real engine admits
+    and serves traffic — every program it compiles passes its contract at
+    first dispatch (a violation would raise ContractViolationError)."""
+    monkeypatch.setenv("REPRO_CHECK_CONTRACTS", "1")
+    cfg, params = cfg_params
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(7)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 5),
+                           new_tokens=4))
+    done = {r.uid: r.result for r in eng.run()}
+    assert len(done) == 2 and all(v is not None for v in done.values())
+
+
+MESH_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.analysis import (MIGRATION_COPY_CONTRACT, PREFILL_CONTRACT,
+                                check_engine_round, check_program)
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import TransformerLM
+    from repro.serving import Request, ServingEngine, ServingTopology
+
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    topo = ServingTopology(make_host_mesh(2, 1))
+    kw = dict(batch=4, window_max=4, max_len=32, block_size=4,
+              eps_key=jax.random.PRNGKey(3), adaptive=False, topology=topo)
+    rec = {}
+
+    for staged in (0, 2):
+        eng = ServingEngine(cfg, params, staging_slots=staged,
+                            **(dict(kw, adaptive_rounds=False)
+                               if staged else kw))
+        rng = np.random.default_rng(5)
+        for i in range(4):
+            eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 5),
+                               new_tokens=6))
+        eng.step()
+        rep = check_engine_round(eng)
+        key = "staged_round" if staged else "round"
+        rec[key] = {"ok": rep.ok, "violations": [str(v) for v in
+                                                 rep.violations]}
+        if not staged:
+            C = 4
+            fn = eng._prefill_fn(C)
+            args = (eng.params, eng.paged,
+                    jnp.asarray(eng.tables[0:1] + eng._table_offset(0)),
+                    jnp.asarray([0], jnp.int32),
+                    jnp.zeros((1, C), jnp.int32),
+                    jnp.asarray([0], jnp.int32))
+            rp = check_program(fn, args, PREFILL_CONTRACT,
+                               label="prefill-mesh")
+            rec["prefill"] = {"ok": rp.ok,
+                              "violations": [str(v) for v in rp.violations]}
+            cf = eng._copy_blocks_fn()
+            cargs = (eng.paged, jnp.zeros(eng.nb, jnp.int32),
+                     jnp.zeros(eng.nb, jnp.int32),
+                     jnp.asarray(0, jnp.int32), jnp.asarray(2, jnp.int32))
+            rc = check_program(cf, cargs, MIGRATION_COPY_CONTRACT,
+                               label="copy-mesh")
+            rec["migration_copy"] = {
+                "ok": rc.ok, "violations": [str(v) for v in rc.violations]}
+    print(json.dumps(rec))
+""")
+
+
+def test_all_contracts_pass_on_data2_mesh():
+    """Acceptance: all four named contracts hold on the real programs of a
+    data=2 mesh engine (subprocess: 8 forced host devices)."""
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu", REPRO_CHECK_CONTRACTS="1")
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, cwd=_ROOT)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    for kind in ("round", "staged_round", "prefill", "migration_copy"):
+        assert rec[kind]["ok"], (kind, rec[kind]["violations"])
+
+
+def test_select_contract_relaxations():
+    """The engine-variant refinements: TP drops the data-axis-only rules,
+    donate=False drops aliasing only, pool-shape targeting reconfigures
+    (not drops) the scatter rule."""
+    from repro.analysis import select_contract
+    assert (select_contract("round").rule_names()
+            == CONTRACTS["ROUND_CONTRACT"].rule_names())
+    tp = select_contract("round", tensor_parallel=True)
+    assert "NoCollectives" not in tp.rule_names()
+    assert "DonationAliasCovers" not in tp.rule_names()
+    assert "NoPoolRankedScatters" in tp.rule_names()
+    nod = select_contract("staged_round", donate=False)
+    assert "DonationAliasCovers" not in nod.rule_names()
+    assert "NoCollectives" in nod.rule_names()
+    rec = select_contract("round", pool_scatter_shapes={(2, 1, 256)})
+    rule = [r for r in rec.rules if r.name == "NoPoolRankedScatters"][0]
+    assert (2, 1, 256) in rule.pool_shapes and rule.min_rank == 3
+
+
+def test_round_contract_passes_on_recurrent_arch():
+    """A recurrent engine's round scatters its per-slot state rows (rank
+    3/5, riding next to the pool) — pool-shape targeting spares exactly
+    those, so the contract passes while the raw census still sees the
+    state scatters (proving the rule filters by shape, not rank)."""
+    cfg = get_config("rwkv6-7b", reduced=True)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg)
+    eng = _engine(cfg, params)
+    ex = eng._contract_exemptions()
+    assert ex["pool_scatter_shapes"] == frozenset()   # no KV pool at all
+    rep = check_engine_round(eng)
+    assert rep.ok, rep
+    assert rep.metrics["pool_scatters"] >= 1      # raw census: state rows

@@ -1,0 +1,174 @@
+"""Units for the AST host-sync / determinism linter (DESIGN.md §17):
+hot-function discovery (decorator, round-loop-builder nesting, transitive
+same-module calls), the three rules, inline suppressions, and the CLI
+exit code."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.lint import Finding, lint_file, lint_paths, main
+
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_host_sync_flagged_in_hot_path_decorated_fn(tmp_path):
+    p = _write(tmp_path, "mod.py", """
+        import numpy as np
+        from repro.analysis import hot_path
+
+        @hot_path
+        def round_fn(x):
+            return float(np.asarray(x).sum())
+
+        def cold_fn(x):
+            return float(np.asarray(x).sum())   # NOT hot: no finding
+    """)
+    findings = lint_file(p)
+    assert _rules(findings) == ["host-sync"]
+    assert all(f.line <= 8 for f in findings), findings
+    assert any("np.asarray" in f.message for f in findings)
+    assert any("float()" in f.message for f in findings)
+
+
+def test_host_sync_flagged_under_round_loop_builder(tmp_path):
+    p = _write(tmp_path, "eng.py", """
+        def _round_loop_fn(self, W, k):
+            def loop(args):
+                n = args[0].item()
+                return n
+            return loop
+    """)
+    findings = lint_file(p)
+    assert _rules(findings) == ["host-sync"]
+    assert ".item()" in findings[0].message
+
+
+def test_host_sync_follows_same_module_calls(tmp_path):
+    p = _write(tmp_path, "mod.py", """
+        import numpy as np
+        from repro.analysis import hot_path
+
+        def helper(x):
+            return bool(x)            # reached FROM a hot fn
+
+        @hot_path
+        def round_fn(x):
+            return helper(x)
+    """)
+    findings = lint_file(p)
+    assert _rules(findings) == ["host-sync"]
+    assert "helper" in findings[0].message
+
+
+def test_suppression_on_line_and_def(tmp_path):
+    p = _write(tmp_path, "mod.py", """
+        import numpy as np
+        from repro.analysis import hot_path
+
+        @hot_path
+        def a(x):
+            return x.item()           # repro: allow(host-sync)
+
+        @hot_path
+        def b(x):                     # repro: allow(host-sync)
+            return x.item()
+    """)
+    assert lint_file(p) == []
+
+
+def test_nondet_in_deterministic_module(tmp_path):
+    p = _write(tmp_path, "serving/journal.py", """
+        import random
+        import time
+
+        def stamp():
+            return time.time(), random.random()
+
+        def seeded(key):
+            import jax
+            return jax.random.uniform(key)    # seeded stream: fine
+    """)
+    findings = lint_file(p, root=tmp_path)
+    assert _rules(findings) == ["nondet"]
+    assert len(findings) == 2
+    p2 = _write(tmp_path, "launch/bench.py", """
+        import time
+
+        def wall():
+            return time.time()        # NOT a deterministic module: fine
+    """)
+    assert lint_file(p2, root=tmp_path) == []
+
+
+def test_bare_except_flagged_everywhere(tmp_path):
+    p = _write(tmp_path, "anywhere.py", """
+        def f():
+            try:
+                g()
+            except:
+                pass
+
+        def g():
+            try:
+                f()
+            except ValueError:
+                pass                  # typed: fine
+    """)
+    findings = lint_file(p)
+    assert _rules(findings) == ["bare-except"]
+    assert len(findings) == 1
+    assert "RequestError" in findings[0].message
+
+
+def test_finding_str_is_clickable():
+    f = Finding("src/repro/x.py", 12, "host-sync", "msg")
+    assert str(f) == "src/repro/x.py:12: [host-sync] msg"
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = _write(tmp_path, "clean/ok.py", "x = 1\n")
+    assert main([str(clean.parent)]) == 0
+    dirty = _write(tmp_path, "dirty/bad.py", """
+        try:
+            pass
+        except:
+            pass
+    """)
+    assert main([str(dirty.parent)]) == 1
+    out = capsys.readouterr().out
+    assert "bare-except" in out and "1 finding(s)" in out
+
+
+def test_repo_linter_runs_clean_via_module_cli():
+    """The CI gate: `python -m repro.analysis.lint` over src/repro exits 0
+    (pre-existing findings fixed or suppressed inline)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint"],
+        capture_output=True, text=True,
+        cwd=str(Path(__file__).resolve().parents[2]),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 finding(s)" in out.stdout
+
+
+def test_lint_paths_recurses_directories(tmp_path):
+    _write(tmp_path, "pkg/a.py", "x = 1\n")
+    _write(tmp_path, "pkg/sub/b.py", """
+        try:
+            pass
+        except:
+            pass
+    """)
+    findings = lint_paths([str(tmp_path / "pkg")])
+    assert len(findings) == 1 and findings[0].rule == "bare-except"
+    assert findings[0].path.endswith("b.py")

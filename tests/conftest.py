@@ -1,0 +1,7 @@
+"""Contracts are ON by default in tests (DESIGN.md §17): every serving
+program an engine compiles during the suite is checked against its named
+contract at first dispatch. Explicitly exported env (e.g. a job that
+sets ``REPRO_CHECK_CONTRACTS=0`` to measure compile time) wins."""
+import os
+
+os.environ.setdefault("REPRO_CHECK_CONTRACTS", "1")

@@ -39,7 +39,6 @@ MAIN_SCRIPT = textwrap.dedent("""
     import jax, numpy as np
     from repro.configs import get_config
     from repro.engine import PredictiveSampler
-    from repro.launch.hlo_analysis import parse_collective_bytes
     from repro.launch.mesh import make_host_mesh
     from repro.models.transformer import TransformerLM
     from repro.serving import Request, ServingEngine, ServingTopology
@@ -107,22 +106,17 @@ MAIN_SCRIPT = textwrap.dedent("""
     rec["routing_spread"] = (occupied and occupied[0] < bl
                              and any(b >= bl for b in occupied))
 
-    # HLO of the mesh verify round loop: zero collectives on the hot path
-    # (each shard's while_loop stops on its own rows) and zero pool-ranked
-    # scatter eqns in the jaxpr (no standalone window-writeback before the
-    # pallas_call — the fused-epilogue acceptance gate)
-    from repro.launch.hlo_analysis import count_jaxpr_primitives
-    W = eng.controller.window
-    fn = eng._round_loop_fn(W, eng.rounds_per_sync)
-    args = eng._round_args()
-    txt = fn.lower(*args).compile().as_text()
-    rec["collectives"] = {k: v["count"]
-                         for k, v in parse_collective_bytes(txt).items()}
-    jaxpr = fn.trace(*args).jaxpr
-    rec["pool_scatters"] = count_jaxpr_primitives(
-        jaxpr, ("scatter",), min_rank=3)["scatter"]
-    rec["pallas_calls"] = count_jaxpr_primitives(
-        jaxpr, ("pallas_call",))["pallas_call"]
+    # §17 contract gate on the mesh verify round loop: zero collectives on
+    # the hot path (each shard's while_loop stops on its own rows), zero
+    # pool-ranked scatter eqns (no standalone window-writeback before the
+    # pallas_call — the fused-epilogue gate), donation aliasing established
+    from repro.analysis import check_engine_round
+    rep = check_engine_round(eng)
+    rec["contract_ok"] = rep.ok
+    rec["violations"] = [str(v) for v in rep.violations]
+    rec["collectives"] = rep.metrics["collectives"]
+    rec["pool_scatters"] = rep.metrics["pool_scatters"]
+    rec["pallas_calls"] = rep.metrics["pallas_calls"]
     print(json.dumps(rec))
 """)
 
@@ -258,22 +252,19 @@ SCHED_SCRIPT = textwrap.dedent("""
         "migrations": row["migrations_on"],
         "tokens_equal": row["bit_exact"]}
 
-    # scheduler layer must add NOTHING to the round HLO: zero collectives,
-    # zero pool-ranked scatters (the existing CI gates stay green) — checked
-    # on a data=2 engine that just performed forced migration+preemptions
-    from repro.launch.hlo_analysis import (count_jaxpr_primitives,
-                                           parse_collective_bytes)
+    # scheduler layer must add NOTHING to the round program: the §17 round
+    # contract (zero collectives / pool-ranked scatters, no host callbacks,
+    # donation aliased) must hold on a data=2 engine that just performed
+    # forced migration+preemptions
+    from repro.analysis import check_engine_round
     topo = ServingTopology(make_host_mesh(2, 1))
     eng_h = ServingEngine(cfg, params, topology=topo, **kw)
     traffic(eng_h, True)
-    W = eng_h.controller.window
-    fn = eng_h._round_loop_fn(W, eng_h.rounds_per_sync)
-    args = eng_h._round_args()
-    txt = fn.lower(*args).compile().as_text()
-    rec["collectives"] = {k: v["count"]
-                          for k, v in parse_collective_bytes(txt).items()}
-    rec["pool_scatters"] = count_jaxpr_primitives(
-        fn.trace(*args).jaxpr, ("scatter",), min_rank=3)["scatter"]
+    rep = check_engine_round(eng_h)
+    rec["contract_ok"] = rep.ok
+    rec["violations"] = [str(v) for v in rep.violations]
+    rec["collectives"] = rep.metrics["collectives"]
+    rec["pool_scatters"] = rep.metrics["pool_scatters"]
     print(json.dumps(rec))
 """)
 
@@ -295,6 +286,7 @@ def test_mesh_scheduling_migration_preemption_rebalance():
     assert not rec["rebalance"]["admitted_off"], rec
     assert rec["rebalance"]["migrations"] >= 1, rec
     assert rec["rebalance"]["tokens_equal"], rec
+    assert rec["contract_ok"], rec["violations"]
     assert all(c == 0 for c in rec["collectives"].values()), rec
     assert rec["pool_scatters"] == 0, rec
 
@@ -302,10 +294,9 @@ def test_mesh_scheduling_migration_preemption_rebalance():
 FAULT_SCRIPT = textwrap.dedent("""
     import json
     import jax, numpy as np
+    from repro.analysis import check_engine_round
     from repro.configs import get_config
     from repro.engine import PredictiveSampler
-    from repro.launch.hlo_analysis import (count_jaxpr_primitives,
-                                           parse_collective_bytes)
     from repro.launch.mesh import make_host_mesh
     from repro.serving import (FaultPlan, Request, ServingEngine,
                                ServingTopology)
@@ -363,15 +354,13 @@ FAULT_SCRIPT = textwrap.dedent("""
     rec["poisoned_solo_equal"] = bool(
         (np.asarray(t[0, :len(p) + got[2].new_tokens])
          == got[2].result).all())
-    # quarantine keeps the round HLO gates: zero collectives, zero
+    # quarantine keeps the §17 round contract: zero collectives, zero
     # pool-ranked scatters on the (now 9-arg, poison-carrying) round fn
-    fn = eng._round_loop_fn(eng.controller.window, eng.rounds_per_sync)
-    args = eng._round_args()
-    txt = fn.lower(*args).compile().as_text()
-    rec["collectives"] = {k: v["count"]
-                          for k, v in parse_collective_bytes(txt).items()}
-    rec["pool_scatters"] = count_jaxpr_primitives(
-        fn.trace(*args).jaxpr, ("scatter",), min_rank=3)["scatter"]
+    rep = check_engine_round(eng)
+    rec["contract_ok"] = rep.ok
+    rec["violations"] = [str(v) for v in rep.violations]
+    rec["collectives"] = rep.metrics["collectives"]
+    rec["pool_scatters"] = rep.metrics["pool_scatters"]
     print(json.dumps(rec))
 """)
 
@@ -392,6 +381,7 @@ def test_mesh_engine_scripted_faults_keep_healthy_rows_exact():
     assert rec["retries"] >= 2, rec
     assert rec["faults_injected"] >= 2, rec
     assert rec["checksum_failures"] >= 1, rec
+    assert rec["contract_ok"], rec["violations"]
     assert all(c == 0 for c in rec["collectives"].values()), rec
     assert rec["pool_scatters"] == 0, rec
 
@@ -399,9 +389,8 @@ def test_mesh_engine_scripted_faults_keep_healthy_rows_exact():
 STAGED_SCRIPT = textwrap.dedent("""
     import json
     import jax, numpy as np
+    from repro.analysis import check_engine_round
     from repro.configs import get_config
-    from repro.launch.hlo_analysis import (count_jaxpr_primitives,
-                                           parse_collective_bytes)
     from repro.launch.mesh import make_host_mesh
     from repro.models.transformer import TransformerLM
     from repro.serving import Request, ServingEngine, ServingTopology
@@ -433,11 +422,11 @@ STAGED_SCRIPT = textwrap.dedent("""
            "adoptions": eng.metrics.in_loop_adoptions,
            "staged": eng.metrics.staged_sequences}
 
-    # HLO gates on the STAGED round program (the 19-arg §15 ABI: plen +
-    # eight descriptor arrays + the q_more starvation flag): the in-loop
-    # adoption scan is rank<=2 row bookkeeping per shard, so the hot path
-    # must STILL lower with zero cross-shard collectives and zero
-    # pool-ranked scatter eqns — staged entries present in the args
+    # §17 STAGED_ROUND_CONTRACT on the staged round program (the 19-arg
+    # §15 ABI: plen + eight descriptor arrays + the q_more starvation
+    # flag): the in-loop adoption scan is rank<=2 row bookkeeping per
+    # shard, so the hot path must STILL hold zero cross-shard collectives
+    # and zero pool-ranked scatter eqns — staged entries present in args
     eng2 = ServingEngine(cfg, params, topology=topo, staging_slots=2,
                          adaptive_rounds=False, **kw)
     rng = np.random.default_rng(5)
@@ -447,17 +436,13 @@ STAGED_SCRIPT = textwrap.dedent("""
                             new_tokens=20))
     eng2.step()
     rec["staged_now"] = eng2._staged_total()
-    fn = eng2._round_loop_fn(eng2.controller.window, eng2.rounds_per_sync)
-    args = eng2._round_args()
-    rec["n_args"] = len(args)
-    txt = fn.lower(*args).compile().as_text()
-    rec["collectives"] = {k: v["count"]
-                          for k, v in parse_collective_bytes(txt).items()}
-    jaxpr = fn.trace(*args).jaxpr
-    rec["pool_scatters"] = count_jaxpr_primitives(
-        jaxpr, ("scatter",), min_rank=3)["scatter"]
-    rec["pallas_calls"] = count_jaxpr_primitives(
-        jaxpr, ("pallas_call",))["pallas_call"]
+    rep = check_engine_round(eng2)
+    rec["contract_ok"] = rep.ok
+    rec["violations"] = [str(v) for v in rep.violations]
+    rec["n_args"] = rep.metrics["n_args"]
+    rec["collectives"] = rep.metrics["collectives"]
+    rec["pool_scatters"] = rep.metrics["pool_scatters"]
+    rec["pallas_calls"] = rep.metrics["pallas_calls"]
     print(json.dumps(rec))
 """)
 
@@ -474,6 +459,7 @@ def test_mesh_staged_engine_bit_exact_and_hot_path_gates():
     assert rec["adoptions"] >= 1 and rec["staged"] >= 1, rec
     assert rec["staged_now"] >= 1, rec
     assert rec["n_args"] == 19, rec
+    assert rec["contract_ok"], rec["violations"]
     assert all(c == 0 for c in rec["collectives"].values()), rec
     assert rec["pool_scatters"] == 0, rec
     assert rec["pallas_calls"] >= 1, rec
@@ -534,6 +520,7 @@ def test_mesh_engine_bit_exact_no_collectives_routed():
                             "4x4": True, "4x1": True}, rec
     assert rec["loop_amortized"] == {"2": True, "4": True}, rec
     assert rec["routing_spread"], rec
+    assert rec["contract_ok"], rec["violations"]
     assert all(c == 0 for c in rec["collectives"].values()), rec
     assert rec["pool_scatters"] == 0, rec
     assert rec["pallas_calls"] >= 1, rec

@@ -43,7 +43,7 @@ def test_token_batches_stream():
 
 
 def test_hlo_collective_parser():
-    from repro.launch.hlo_analysis import parse_collective_bytes
+    from repro.analysis import parse_collective_bytes
     hlo = """
   %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
   %ag.1 = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-gather(%a, %b), dims={0}
